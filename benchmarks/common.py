@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: timing, CSV/markdown emission."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+QUICK = os.environ.get("REPRO_BENCH_FULL", "") == ""
+
+
+def timeit(fn: Callable[[], Any], repeats: int = 1, warmup: int = 0) -> float:
+    """Median wall seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+@dataclasses.dataclass
+class Row:
+    table: str
+    name: str
+    seconds: float
+    derived: Dict[str, Any]
+
+    def csv(self) -> str:
+        extras = json.dumps(self.derived, sort_keys=True)
+        return f"{self.table},{self.name},{self.seconds*1e6:.1f},{extras}"
+
+
+class Report:
+    def __init__(self):
+        self.rows: List[Row] = []
+
+    def add(self, table: str, name: str, seconds: float, **derived):
+        row = Row(table, name, seconds, derived)
+        self.rows.append(row)
+        print(row.csv(), flush=True)
+        return row
+
+    def table_markdown(self, table: str) -> str:
+        rows = [r for r in self.rows if r.table == table]
+        if not rows:
+            return ""
+        keys = sorted({k for r in rows for k in r.derived})
+        hdr = "| name | seconds | " + " | ".join(keys) + " |"
+        sep = "|" + "---|" * (len(keys) + 2)
+        body = []
+        for r in rows:
+            cells = [str(r.derived.get(k, "")) for k in keys]
+            body.append(f"| {r.name} | {r.seconds:.3f} | " + " | ".join(cells) + " |")
+        return "\n".join([hdr, sep] + body)

@@ -1,0 +1,52 @@
+"""Benchmark orchestrator: one section per paper table.
+
+``PYTHONPATH=src python -m benchmarks.run [--tables table1,table3]``
+Quick mode by default; set REPRO_BENCH_FULL=1 for paper-scale sizes.
+Roofline (TPU-target) analysis is separate: run repro.launch.dryrun with
+--out, then benchmarks.roofline on the results.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks.common import QUICK, Report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tables", default="table1,table2,table3,table4,table10")
+    args = ap.parse_args(argv)
+    tables = args.tables.split(",")
+    report = Report()
+    t0 = time.time()
+    print(f"# benchmarks (quick={QUICK})  — csv: table,name,us,derived",
+          flush=True)
+
+    if "table1" in tables:
+        from benchmarks import table1_small
+        table1_small.run(report)
+    if "table2" in tables:
+        from benchmarks import table2_multiclass
+        table2_multiclass.run(report)
+    if "table3" in tables:
+        from benchmarks import table3_cells
+        table3_cells.run(report)
+    if "table4" in tables:
+        from benchmarks import table4_distributed
+        table4_distributed.run(report)
+    if "table10" in tables:
+        from benchmarks import table10_configs
+        table10_configs.run(report)
+
+    print(f"\n# done in {time.time() - t0:.0f}s")
+    for t in ("table1", "table2", "table3", "table4", "table10"):
+        md = report.table_markdown(t)
+        if md:
+            print(f"\n## {t}\n{md}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

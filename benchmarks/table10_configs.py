@@ -1,0 +1,44 @@
+"""Paper Tables 10-13 / App. C: liquidSVM configuration sweeps.
+
+grid_choice (10x10 / 15x15 / 20x20), adaptivity_control (0/1/2), and the
+voronoi cell options — relative training time (vs the default config) and
+error, mirroring the paper's config-benchmark appendix.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import QUICK, Report, timeit
+from repro.data.synthetic import covtype_like, train_test_split
+from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+
+SWEEPS = [
+    ("default", {}),
+    ("grid_choice=1", {"grid_choice": 1}),
+    ("grid_choice=2", {"grid_choice": 2}),
+    ("adaptivity=1", {"adaptivity_control": 1}),
+    ("adaptivity=2", {"adaptivity_control": 2}),
+    ("voronoi=5(overlap)", {"cell_method": "overlap", "cell_size": 500}),
+    ("voronoi=6(recursive)", {"cell_method": "recursive", "cell_size": 500}),
+    ("voronoi=6,k=250", {"cell_method": "recursive", "cell_size": 250}),
+]
+
+
+def run(report: Report) -> None:
+    n = 1500 if QUICK else 6000
+    folds = 3 if QUICK else 5
+    x, yc = covtype_like(n=int(n * 1.25), d=10, seed=0, label_noise=0.1)
+    y = np.where(yc == 0, -1.0, 1.0)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.2, 0)
+
+    t_ref = None
+    for name, kw in SWEEPS:
+        cfg = SVMTrainerConfig(n_folds=folds, max_iters=150, **kw)
+        m = LiquidSVM(cfg)
+        m.fit(xtr, ytr)
+        t = timeit(lambda: m.fit(xtr, ytr), repeats=1)
+        if t_ref is None:
+            t_ref = t
+        report.add("table10", name, t,
+                   rel_time=round(t / t_ref, 2),
+                   err_pct=round(100 * m.error(xte, yte), 2))

@@ -1,0 +1,73 @@
+"""liquidSVM as a first-class downstream head over LM embeddings.
+
+    PYTHONPATH=src python examples/lm_svm_head.py
+
+This is the composition the assignment asks about: the paper's technique
+(cells + CV'd local SVMs) applied to the assigned LM architectures.  The
+backbone (any ``--arch``) embeds sequences; Voronoi cells are built in
+EMBEDDING space; each cell gets a fully CV'd multiclass SVM.  Local SVMs
+with a learned metric — Bottou-Vapnik local learning on top of an LM.
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.models import model as model_mod
+from repro.models.layers import init_params
+from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+
+
+def embed_sequences(cfg, params, inputs) -> np.ndarray:
+    """Mean-pooled final-layer hidden states as sequence embeddings."""
+    b, t = inputs.shape[0], inputs.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    h, _, _ = model_mod.backbone(cfg, params, inputs, positions)
+    return np.asarray(jnp.mean(h.astype(jnp.float32), axis=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b", choices=list(ARCH_IDS))
+    ap.add_argument("--n-per-class", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=32)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    cfg = spec.smoke
+    params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(0))
+
+    # three synthetic "domains": HMM pipelines with different seeds emit
+    # distinguishable token statistics — the LM embeds them apart.
+    xs, ys = [], []
+    for cls in range(3):
+        pipe = TokenPipeline(TokenPipelineConfig(
+            vocab=cfg.vocab, seq_len=args.seq, global_batch=args.n_per_class,
+            seed=100 + cls, n_states=4,
+            input_kind=cfg.input_kind, d_frontend=cfg.d_frontend))
+        batch = pipe.batch(0)
+        emb = embed_sequences(cfg, params, batch["inputs"])
+        xs.append(emb)
+        ys.append(np.full(args.n_per_class, cls))
+    x = np.concatenate(xs).astype(np.float32)
+    y = np.concatenate(ys)
+    perm = np.random.default_rng(0).permutation(len(x))
+    x, y = x[perm], y[perm]
+    n_te = len(x) // 4
+    xte, yte, xtr, ytr = x[:n_te], y[:n_te], x[n_te:], y[n_te:]
+
+    # cells in embedding space + per-cell CV'd OvA SVM
+    svm = LiquidSVM(SVMTrainerConfig(scenario="ova", cell_method="voronoi",
+                                     cell_size=200, n_folds=3, max_iters=400))
+    svm.fit(xtr, ytr)
+    err = svm.error(xte, yte)
+    print(f"arch={args.arch}  embed dim={x.shape[1]}  "
+          f"cells={svm.plan.n_cells}  test error={100 * err:.2f}%")
+    assert err < 0.34, "should beat 3-class chance (66%) by a wide margin"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Distributed cell training on a (simulated) multi-device mesh.
+
+    PYTHONPATH=src python examples/svm_cells_distributed.py
+
+The paper's Table-4 Spark layer on the TPU stack: coarse Voronoi cells ->
+fine cells -> bin-packed slots -> shard_map over the mesh.  This script
+forces 8 host devices (it owns its process) so the sharding is real.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import time
+
+import jax
+import numpy as np
+
+from repro.data.synthetic import covtype_like, train_test_split
+from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+
+
+def main():
+    print(f"devices: {len(jax.devices())}")
+    x, yc = covtype_like(n=6000, d=8, seed=0, label_noise=0.08)
+    y = np.where(yc == 0, -1, 1)
+    xtr, ytr, xte, yte = train_test_split(x, y, 0.2, 0)
+
+    cfg = SVMTrainerConfig(cell_method="coarse_fine", cell_size=300,
+                           n_folds=3, max_iters=300)
+
+    t0 = time.time()
+    local = LiquidSVM(cfg).fit(xtr, ytr)
+    t_local = time.time() - t0
+    e_local = local.error(xte, yte)
+
+    mesh = jax.make_mesh((8,), ("data",))
+    t0 = time.time()
+    dist = LiquidSVM(cfg, mesh=mesh, mesh_axes=("data",)).fit(xtr, ytr)
+    t_dist = time.time() - t0
+    e_dist = dist.error(xte, yte)
+
+    print(f"cells: {dist.plan.n_cells} fine "
+          f"({dist.plan.coarse_of.max() + 1} coarse groups)")
+    print(f"single device : {t_local:6.1f}s  err {100 * e_local:.2f}%")
+    print(f"8-device mesh : {t_dist:6.1f}s  err {100 * e_dist:.2f}%")
+    print("errors match:", abs(e_local - e_dist) < 0.02,
+          "(the Spark shuffle, statically scheduled)")
+
+
+if __name__ == "__main__":
+    main()

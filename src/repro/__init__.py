@@ -1,0 +1,17 @@
+"""repro: liquidSVM (Steinwart & Thomann, 2017) as a multi-pod JAX framework.
+
+Layers:
+  repro.core         solvers + CV + selection (the paper's contribution)
+  repro.cells        working-set decomposition (random/Voronoi/recursive/overlap)
+  repro.tasks        OvA/AvA/NP/quantile task creation
+  repro.data         synthetic data + scaling + LM token pipeline
+  repro.distributed  mesh-aware cell sharding, compression, planner
+  repro.kernels      Pallas TPU kernels (kernel_matrix, cd_solver, svm_predict,
+                     flash_attention) with jnp oracles
+  repro.models       assigned LM architectures (GQA/MoE/RWKV6/Mamba/hybrid)
+  repro.train        optimizers, checkpointing, fault tolerance, loops
+  repro.serve        KV cache + prefill/decode
+  repro.configs      one config per assigned architecture
+  repro.launch       mesh, multi-pod dry-run, train/serve drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.cells.builder import CellPlan, build_cells
+
+__all__ = ["CellPlan", "build_cells"]

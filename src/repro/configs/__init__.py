@@ -1,0 +1,60 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher.
+
+Each entry maps the assignment's architecture id to its config module
+(CONFIG full-size, SMOKE reduced, SHAPES runnable cells).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.common import ShapeSpec
+from repro.models.model import ModelConfig
+
+_MODULES: Dict[str, str] = {
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "gemma3-4b": "repro.configs.gemma3_4b",
+    "command-r-plus-104b": "repro.configs.command_r_plus_104b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "llama4-maverick-400b-a17b": "repro.configs.llama4_maverick_400b_a17b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+}
+
+ARCH_IDS: Tuple[str, ...] = tuple(_MODULES)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    config: ModelConfig
+    smoke: ModelConfig
+    shapes: Tuple[ShapeSpec, ...]
+
+    def shape(self, name: str) -> ShapeSpec:
+        for s in self.shapes:
+            if s.name == name:
+                return s
+        raise KeyError(f"{self.arch_id} does not run shape {name!r} "
+                       f"(available: {[s.name for s in self.shapes]})")
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_MODULES)}")
+    mod = importlib.import_module(_MODULES[arch_id])
+    return ArchSpec(arch_id=arch_id, config=mod.CONFIG, smoke=mod.SMOKE,
+                    shapes=mod.SHAPES)
+
+
+def all_cells() -> Tuple[Tuple[str, str], ...]:
+    """Every runnable (arch, shape) pair — the dry-run/roofline matrix."""
+    cells = []
+    for aid in ARCH_IDS:
+        for s in get_arch(aid).shapes:
+            cells.append((aid, s.name))
+    return tuple(cells)

@@ -1,0 +1,11 @@
+# liquidSVM's primary contribution: solvers + integrated hyper-parameter
+# selection + working-set management, re-expressed as batched JAX programs.
+from repro.core import grids, kernel_fns, select, svm
+from repro.core.cv import CVConfig, cv_cell, make_fold_masks
+from repro.core.svm import TrainedSVM, test_error, train_select
+
+__all__ = [
+    "grids", "kernel_fns", "select", "svm",
+    "CVConfig", "cv_cell", "make_fold_masks",
+    "TrainedSVM", "test_error", "train_select",
+]

@@ -1,0 +1,265 @@
+"""k-fold cross-validation driver (liquidSVM §2 "Hyper-Parameter Selection").
+
+Execution shape (the whole point of the TPU port):
+
+    for gamma in gammas:                   # lax.scan — Gram re-use
+        K = kernel(X, X, gamma)            # ONE Gram per gamma, shared by
+                                           #   all folds, all TASKS, and the
+                                           #   full lambda/tau/w grid
+        for fold in folds:                 # vmap — "multi-threading"
+            solve ALL columns (task x lambda x tau/w) as one batched box-QP
+            validation predictions = K @ C             (one GEMM)
+        streaming selection: keep the per-(task, sub) best model so far
+
+Columns are task-major:  col = t * (n_lam * n_sub) + l * n_sub + s, where
+"sub" is the quantile/expectile tau or the hinge class-weight index.
+Folds are boolean masks (no gathers — static shapes); padding and
+task-exclusion are realized as zero-width boxes, which removes a sample
+from the dual EXACTLY.
+
+liquidSVM's "warm start across the grid" appears twice:
+  * across lambda/tau/w/task: solved simultaneously as GEMM columns
+    (strictly stronger than sequential warm starts);
+  * across gamma: the previous gamma's solution seeds the next scan step.
+
+Selection is fused into the gamma scan (train phase and select phase in one
+pass), so peak memory is O(n x columns), never O(n x whole grid x gammas).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kernel_fns
+from repro.core.grids import GridSpec
+from repro.core.solvers import base as qp
+from repro.core.solvers import expectile as exp_solver
+from repro.core.solvers import hinge as hinge_solver
+from repro.core.solvers import least_squares as ls_solver
+from repro.core.solvers import quantile as q_solver
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CVConfig:
+    solver: str = "hinge"           # hinge | ls | quantile | expectile
+    kernel: str = "gauss_rbf"
+    n_folds: int = 5
+    fold_scheme: str = "random"     # random | stratified | blocks
+    tol: float = 1e-3
+    max_iters: int = 1000
+    val_loss: str = "auto"          # auto: 0-1 for hinge, mse for ls, pinball, ...
+    shared_lipschitz: bool = True   # one L per gamma (False: per-fold masked
+                                    # Gram + power iteration — the baseline)
+    gram_dtype: str = "f32"         # f32 | bf16 (hinge/quantile solve reads
+                                    # a 2-byte Gram, accumulates f32 — §Perf)
+    taus: Tuple[float, ...] = (0.5,)       # quantile/expectile levels (sub axis)
+    weights: Tuple[float, ...] = (1.0,)    # hinge +1-class weight grid (sub axis)
+
+    @property
+    def n_sub(self) -> int:
+        if self.solver in ("quantile", "expectile"):
+            return len(self.taus)
+        return len(self.weights)
+
+
+class CVSelected(NamedTuple):
+    """Streaming-selection output, per (task, sub)."""
+    coefs: Array        # (n_folds, n, n_tasks, n_sub) fold models at the argmin
+    gamma: Array        # (n_tasks, n_sub)
+    lam: Array          # (n_tasks, n_sub)
+    tau: Array          # (n_tasks, n_sub)
+    weight: Array       # (n_tasks, n_sub)
+    val_loss: Array     # (n_tasks, n_sub) best mean validation loss
+    val_grid: Array     # (n_gamma, n_tasks, n_lam, n_sub) full CV surface
+
+
+def make_fold_masks(
+    key: Array, mask: Array, n_folds: int, scheme: str = "random", y: Array | None = None
+) -> Array:
+    """(n_folds, n) boolean: True = sample is in the *validation* part."""
+    n = mask.shape[0]
+    if scheme == "blocks":
+        idx = jnp.cumsum(mask.astype(jnp.int32)) - 1
+        n_valid = jnp.maximum(jnp.sum(mask.astype(jnp.int32)), 1)
+        fold_of = (idx * n_folds) // n_valid
+    else:
+        u = jax.random.uniform(key, (n,))
+        if scheme == "stratified" and y is not None:
+            u = u + 10.0 * (y > 0)
+        u = jnp.where(mask > 0, u, jnp.inf)
+        order = jnp.argsort(u)
+        rank = jnp.argsort(order)
+        fold_of = rank % n_folds
+    fold_of = jnp.where(mask > 0, fold_of, -1)
+    return jax.nn.one_hot(fold_of, n_folds, axis=0, dtype=jnp.bool_)
+
+
+def grid_columns(grid: GridSpec, cfg: CVConfig, n_tasks: int):
+    """Task-major flattened columns.  Returns dict of (P,) arrays + ids."""
+    lam = grid.lambdas.astype(jnp.float32)
+    n_lam = lam.shape[0]
+    if cfg.solver in ("quantile", "expectile"):
+        sub = jnp.asarray(cfg.taus, jnp.float32)
+    else:
+        sub = jnp.asarray(cfg.weights, jnp.float32)
+    n_sub = sub.shape[0]
+    lam_c = jnp.tile(jnp.repeat(lam, n_sub), n_tasks)              # (P,)
+    sub_c = jnp.tile(sub, n_lam * n_tasks)                         # (P,)
+    task_c = jnp.repeat(jnp.arange(n_tasks, dtype=jnp.int32), n_lam * n_sub)
+    return lam_c, sub_c, task_c, n_lam, n_sub
+
+
+def _val_losses(f_val: Array, y_cols: Array, val_mask_cols: Array, cfg: CVConfig,
+                sub_c: Array) -> Array:
+    """Masked mean validation loss per column.  All args (n, P)-shaped."""
+    denom = jnp.maximum(jnp.sum(val_mask_cols, axis=0), 1.0)
+    if cfg.solver == "hinge":
+        if cfg.val_loss in ("auto", "zero_one"):
+            losses = ((f_val * y_cols) <= 0.0).astype(jnp.float32)
+        else:
+            losses = jnp.maximum(0.0, 1.0 - y_cols * f_val)
+    elif cfg.solver == "ls":
+        losses = (y_cols - f_val) ** 2
+    elif cfg.solver == "quantile":
+        losses = q_solver.pinball_loss(y_cols, f_val, sub_c[None, :])
+    elif cfg.solver == "expectile":
+        losses = exp_solver.expectile_loss(y_cols, f_val, sub_c[None, :])
+    else:
+        raise ValueError(cfg.solver)
+    return jnp.sum(losses * val_mask_cols, axis=0) / denom
+
+
+def _solve_columns(k_full, y_cols, train_cols, lam_c, sub_c, n_eff_cols, cfg, c0, l_est):
+    """train_cols (n, P): 1 = sample is in this column's training set."""
+    if cfg.solver == "hinge":
+        cost = 1.0 / (2.0 * lam_c[None, :] * jnp.maximum(n_eff_cols[None, :], 1.0))
+        w = jnp.where(y_cols > 0, sub_c[None, :], 1.0)  # class weight on +1
+        edge = y_cols * cost * w * train_cols
+        lo, hi = jnp.minimum(0.0, edge), jnp.maximum(0.0, edge)
+        res = qp.box_qp(k_full, y_cols * train_cols, lo, hi, c0=c0,
+                        tol=cfg.tol, max_iters=cfg.max_iters, l_est=l_est)
+        return res.c
+    if cfg.solver == "quantile":
+        cost = 1.0 / (2.0 * lam_c[None, :] * jnp.maximum(n_eff_cols[None, :], 1.0))
+        lo = cost * (sub_c[None, :] - 1.0) * train_cols
+        hi = cost * sub_c[None, :] * train_cols
+        res = qp.box_qp(k_full, y_cols * train_cols, lo, hi, c0=c0,
+                        tol=cfg.tol, max_iters=cfg.max_iters, l_est=l_est)
+        return res.c
+    if cfg.solver == "ls":
+        # all columns must share the fold train mask (task_mask == 1); the
+        # eigh is done once and the lambda path is a diagonal rescale.
+        tm = train_cols[:, 0]
+        km = k_full * tm[:, None] * tm[None, :]
+        s, u = jnp.linalg.eigh(km)
+        s = jnp.maximum(s, 0.0)
+        uty = u.T @ (y_cols * train_cols[:, :1])        # (n, P)
+        denom = s[:, None] + lam_c[None, :] * jnp.maximum(n_eff_cols[None, :], 1.0)
+        return u @ (uty / denom)
+    if cfg.solver == "expectile":
+        tm = train_cols[:, 0]
+        n_eff = n_eff_cols[0]
+        return exp_solver.solve_expectile(
+            k_full, y_cols[:, 0], sub_c, lam_c, n_eff, train_mask=tm)
+    raise ValueError(cfg.solver)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "n_lam", "n_sub"))
+def cv_cell(
+    x: Array,              # (n, d) padded cell
+    y_tasks: Array,        # (n_tasks, n) labels/targets (0 where excluded)
+    task_mask: Array,      # (n_tasks, n) 1 = sample participates in task
+    mask: Array,           # (n,) 1 = real sample
+    gammas: Array,         # (n_gamma,)
+    lam_c: Array, sub_c: Array, task_c: Array,   # (P,) task-major columns
+    fold_key: Array,
+    cfg: CVConfig,
+    n_lam: int,
+    n_sub: int,
+) -> CVSelected:
+    """Fused train+select CV over one working set, all tasks at once."""
+    n = x.shape[0]
+    n_tasks = y_tasks.shape[0]
+    p = lam_c.shape[0]
+
+    y_strat = y_tasks[0] if cfg.solver == "hinge" else None
+    val_folds = make_fold_masks(fold_key, mask, cfg.n_folds, cfg.fold_scheme, y_strat)
+    train_folds = (~val_folds) & (mask > 0)[None, :]          # (k, n)
+
+    y_cols = y_tasks[task_c].T                                 # (n, P)
+    colmask = task_mask[task_c].T * mask[:, None]              # (n, P)
+
+    def per_gamma(carry, gamma):
+        best_val, best_cfs, best_g, best_l, c0_all = carry
+        k_full = kernel_fns.get_kernel(cfg.kernel)(x, x, gamma)  # ONE Gram
+        if cfg.gram_dtype == "bf16" and cfg.solver in ("hinge", "quantile"):
+            k_full = k_full.astype(jnp.bfloat16)   # 2-byte solver reads
+
+        # ONE Lipschitz estimate per gamma, shared by every fold: for a PSD
+        # Gram, lambda_max(M K M) <= lambda_max(K) for any 0/1 mask M, so
+        # the shared step 1/L is valid for all masked subproblems.  This
+        # removes n_folds (n, n) masked-Gram materializations + per-fold
+        # power iterations (§Perf hillclimb: SVM cell trainer).
+        needs_l = cfg.solver in ("hinge", "quantile")
+        l_shared = (qp.power_iteration_l(k_full)
+                    if (needs_l and cfg.shared_lipschitz) else None)
+
+        def per_fold(tr_mask, va_mask, c0_f):
+            tr_cols = tr_mask.astype(jnp.float32)[:, None] * colmask   # (n, P)
+            va_cols = va_mask.astype(jnp.float32)[:, None] * colmask
+            n_eff_cols = jnp.sum(tr_cols, axis=0)                      # (P,)
+            if needs_l and not cfg.shared_lipschitz:  # baseline path
+                mt = tr_mask.astype(jnp.float32)
+                l_est = qp.power_iteration_l(k_full * mt[:, None] * mt[None, :])
+            else:
+                l_est = l_shared
+            coefs = _solve_columns(k_full, y_cols, tr_cols, lam_c, sub_c,
+                                   n_eff_cols, cfg, c0_f, l_est)
+            f_val = k_full @ coefs
+            vl = _val_losses(f_val, y_cols, va_cols, cfg, sub_c)
+            return vl, coefs
+
+        vl, coefs = jax.vmap(per_fold)(train_folds, val_folds, c0_all)
+        vl_mean = jnp.mean(vl, axis=0)                                  # (P,)
+
+        # streaming selection: best lambda for this gamma, per (task, sub)
+        vl_tls = vl_mean.reshape(n_tasks, n_lam, n_sub)
+        lam_star = jnp.argmin(vl_tls, axis=1)                           # (T, S)
+        val_star = jnp.min(vl_tls, axis=1)                              # (T, S)
+        t_idx = jnp.arange(n_tasks)[:, None]
+        s_idx = jnp.arange(n_sub)[None, :]
+        flat_cols = (t_idx * n_lam + lam_star) * n_sub + s_idx          # (T, S)
+        cand_cfs = coefs[:, :, flat_cols]                               # (k, n, T, S)
+        improved = val_star < best_val                                   # (T, S)
+        best_val = jnp.where(improved, val_star, best_val)
+        best_cfs = jnp.where(improved[None, None], cand_cfs, best_cfs)
+        best_g = jnp.where(improved, gamma, best_g)
+        best_l = jnp.where(improved, lam_c[flat_cols.reshape(-1)].reshape(n_tasks, n_sub), best_l)
+        carry = (best_val, best_cfs, best_g, best_l, coefs)             # warm start
+        return carry, vl_tls
+
+    init = (
+        jnp.full((n_tasks, n_sub), jnp.inf, jnp.float32),
+        jnp.zeros((cfg.n_folds, n, n_tasks, n_sub), jnp.float32),
+        jnp.zeros((n_tasks, n_sub), jnp.float32),
+        jnp.zeros((n_tasks, n_sub), jnp.float32),
+        jnp.zeros((cfg.n_folds, n, p), jnp.float32),
+    )
+    (best_val, best_cfs, best_g, best_l, _), vl_all = jax.lax.scan(per_gamma, init, gammas)
+
+    sub_grid = sub_c[:n_sub]
+    if cfg.solver in ("quantile", "expectile"):
+        tau = jnp.broadcast_to(sub_grid[None, :], (n_tasks, n_sub))
+        weight = jnp.ones((n_tasks, n_sub), jnp.float32)
+    else:
+        tau = jnp.full((n_tasks, n_sub), 0.5, jnp.float32)
+        weight = jnp.broadcast_to(sub_grid[None, :], (n_tasks, n_sub))
+
+    return CVSelected(coefs=best_cfs, gamma=best_g, lam=best_l, tau=tau,
+                      weight=weight, val_loss=best_val, val_grid=vl_all)

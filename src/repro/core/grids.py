@@ -1,0 +1,110 @@
+"""Hyper-parameter grids (liquidSVM §2 "Hyper-Parameter Selection", App. B/C).
+
+Two families:
+
+* ``libsvm_grid`` — the fixed 10x11 grid from libsvm's tools/grid.py, used
+  by the paper's benchmark tables.  libsvm's gamma is a precision; we
+  convert to liquidSVM's length-scale convention.
+* ``liquid_grid`` — liquidSVM's default geometric 10x10 grid "where the
+  endpoints are scaled to accommodate the number of samples in every fold,
+  the cell size, and the dimension".  grid_choice=0/1/2 -> 10x10 / 15x15 /
+  20x20 (paper App. C).
+
+Grids are returned as (gammas, lambdas) 1-D arrays; the CV driver takes
+their Cartesian product, with gamma as the *outer* loop so each Gram matrix
+is re-used across the full lambda path (paper: "the required kernel
+matrices may be re-used").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kernel_fns
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class GridSpec:
+    gammas: Array  # length-scale convention
+    lambdas: Array  # regularization in  lambda ||f||^2 + (1/n) sum L
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (len(self.gammas), len(self.lambdas))
+
+
+def libsvm_grid(n: int) -> GridSpec:
+    """The paper's 10x11 'libsvm grid'.
+
+    gamma_libsvm in 2^{3,1,-1,...,-15}; cost in 2^{-5,-3,...,15}.
+    cost C relates to lambda by C = 1/(2 lambda n).
+    """
+    g = 2.0 ** np.arange(3, -17, -2, dtype=np.float64)  # 10 values
+    cost = 2.0 ** np.arange(-5, 17, 2, dtype=np.float64)  # 11 values
+    lam = 1.0 / (2.0 * cost * n)
+    return GridSpec(
+        gammas=kernel_fns.libsvm_gamma_to_scale(jnp.asarray(g, jnp.float32)),
+        lambdas=jnp.asarray(np.sort(lam)[::-1].copy(), jnp.float32),  # descending
+    )
+
+
+def liquid_grid(
+    n: int,
+    dim: int,
+    median_dist: float | Array = 1.0,
+    grid_choice: int = 0,
+    cell_size: int | None = None,
+) -> GridSpec:
+    """liquidSVM's adaptive geometric grid.
+
+    Endpoint heuristics (documented adaptation; the C++ package's exact
+    constants are not published in the paper):
+
+    * gamma_max ~ 5 x median pairwise distance (kernel nearly constant
+      beyond that — smoothest candidate).
+    * gamma_min ~ median distance x (k / n_fold)^(1/d): the typical
+      nearest-neighbor spacing once a fold of the (cell-sized) working set
+      is considered — wigglier candidates are statistically useless.
+    * lambda_max = 1.0 (essentially the constant model), lambda_min =
+      1/(4 n_fold^2): beyond interpolation strength.  Geometric in between.
+    """
+    sizes = {0: (10, 10), 1: (15, 15), 2: (20, 20)}
+    if grid_choice not in sizes:
+        raise ValueError(f"grid_choice must be 0/1/2, got {grid_choice}")
+    n_gamma, n_lambda = sizes[grid_choice]
+    n_fold = max(int(n * 0.8), 2)  # 5-fold default: training part of a fold
+    k = cell_size if cell_size is not None else n_fold
+    k = min(k, n_fold)
+
+    med = jnp.asarray(median_dist, jnp.float32)
+    gamma_max = 5.0 * med
+    gamma_min = med * jnp.power(jnp.asarray(max(k, 2), jnp.float32) / n_fold, 1.0 / dim) / jnp.power(
+        jnp.asarray(n_fold, jnp.float32), 1.0 / max(dim, 1)
+    )
+    gamma_min = jnp.minimum(gamma_min, gamma_max / 8.0)
+    r = jnp.linspace(0.0, 1.0, n_gamma)
+    gammas = gamma_max * jnp.power(gamma_min / gamma_max, r)
+
+    lam_max = 1.0
+    lam_min = 1.0 / (4.0 * float(n_fold) ** 2)
+    s = np.linspace(0.0, 1.0, n_lambda)
+    lambdas = lam_max * np.power(lam_min / lam_max, s)
+    return GridSpec(gammas=gammas.astype(jnp.float32), lambdas=jnp.asarray(lambdas, jnp.float32))
+
+
+def adaptive_subgrid(full: GridSpec, level: int) -> GridSpec:
+    """adaptivity_control (paper App. C): coarse pass over a subset.
+
+    level=1 keeps every 2nd gamma/lambda; level=2 every 3rd.  The CV driver
+    runs the coarse grid first, then a refinement window around the argmin
+    (see repro.core.cv.adaptive_cv).
+    """
+    if level <= 0:
+        return full
+    step = level + 1
+    return GridSpec(gammas=full.gammas[::step], lambdas=full.lambdas[::step])

@@ -1,0 +1,36 @@
+"""Selection-phase helpers (liquidSVM §2).
+
+The heavy lifting (streaming argmin over the grid) is fused into
+``repro.core.cv.cv_cell``; here live the model-combination policies and
+NP-mode (Neyman-Pearson) selection, which picks per-task weights under a
+false-alarm constraint instead of plain argmin.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def combine_fold_models(fold_coefs: Array, how: str = "average") -> Array:
+    """(n_folds, n, ...) -> (n, ...): the paper's 'how the k models are
+    combined during the test phase'.  Coefficients are linear in the
+    decision function, so averaging coefs == averaging functions."""
+    if how == "average":
+        return jnp.mean(fold_coefs, axis=0)
+    raise ValueError(how)
+
+
+def np_select_weight(false_alarm: Array, detection: Array, alpha: float) -> Array:
+    """Neyman-Pearson selection over the weight axis.
+
+    false_alarm/detection: (n_weights,) validation rates per weight-column.
+    Picks the weight with the best detection among those with
+    false_alarm <= alpha; falls back to the smallest false alarm.
+    """
+    ok = false_alarm <= alpha
+    det_masked = jnp.where(ok, detection, -jnp.inf)
+    best_ok = jnp.argmax(det_masked)
+    fallback = jnp.argmin(false_alarm)
+    return jnp.where(jnp.any(ok), best_ok, fallback)

@@ -1,0 +1,67 @@
+"""Least-squares solver (kernel ridge regression) — liquidSVM's LS path.
+
+Primal: min_f lambda ||f||^2 + (1/n) sum (y_i - f(x_i))^2.  Stationarity
+gives (K + lambda n I) c = y on the training coordinates.
+
+Beyond-paper optimization (recorded in EXPERIMENTS.md): instead of one
+Cholesky per lambda we eigendecompose the (masked) Gram matrix ONCE per
+(fold, gamma) and sweep the whole lambda path as a diagonal rescale:
+
+    K = U diag(s) U^T   =>   c(lambda) = U diag(1/(s + lambda n)) U^T y
+
+O(n^3) once + O(n^2) per lambda — the logical endpoint of the paper's
+"kernel matrices may be re-used" for the smooth-loss solver.
+
+Masking: with M = diag(train_mask), eigh(M K M) solves the fold subproblem
+exactly — padded coordinates see (0 + lambda n) c = 0 => c = 0.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _masked(k_mat: Array, train_mask: Array | None) -> Array:
+    if train_mask is None:
+        return k_mat
+    m = train_mask.astype(k_mat.dtype)
+    return k_mat * m[:, None] * m[None, :]
+
+
+def solve_krr_eigh(
+    k_mat: Array,
+    y: Array,
+    lambdas: Array,       # (P,)
+    n_eff: Array,
+    train_mask: Array | None = None,
+) -> Array:
+    """All-lambda KRR path via one eigh.  Returns c (n, P)."""
+    km = _masked(k_mat.astype(jnp.float32), train_mask)
+    y = y.astype(jnp.float32)
+    if train_mask is not None:
+        y = y * train_mask.astype(jnp.float32)
+    s, u = jnp.linalg.eigh(km)
+    s = jnp.maximum(s, 0.0)  # PSD clip against f32 round-off
+    uty = u.T @ y  # (n,)
+    denom = s[:, None] + lambdas[None, :].astype(jnp.float32) * jnp.maximum(n_eff, 1.0)  # (n, P)
+    return u @ (uty[:, None] / denom)
+
+
+def solve_krr_chol(
+    k_mat: Array,
+    y: Array,
+    lam: Array,
+    n_eff: Array,
+    train_mask: Array | None = None,
+) -> Array:
+    """Single-lambda Cholesky path (used by IRLS and small problems)."""
+    km = _masked(k_mat.astype(jnp.float32), train_mask)
+    y = y.astype(jnp.float32)
+    if train_mask is not None:
+        y = y * train_mask.astype(jnp.float32)
+    n = km.shape[0]
+    a = km + (lam * jnp.maximum(n_eff, 1.0)) * jnp.eye(n, dtype=jnp.float32)
+    cf = jax.scipy.linalg.cho_factor(a)
+    return jax.scipy.linalg.cho_solve(cf, y)

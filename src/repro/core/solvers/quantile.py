@@ -1,0 +1,60 @@
+"""Pinball-loss solver for quantile regression (liquidSVM §2).
+
+Primal:  min_f lambda ||f||^2 + (1/n) sum L_tau(y_i - f(x_i)),
+L_tau(r) = tau r_+ + (1-tau) r_-.   Dual in coefficient space:
+
+    min_c 0.5 c^T K c - c^T y,    c_i in [C (tau - 1), C tau]
+
+— the same box QP as hinge with an asymmetric, label-independent box.
+Multiple quantiles tau and the lambda grid are both just columns.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.solvers import base
+
+Array = jax.Array
+
+
+def quantile_boxes(
+    taus: Array,        # (P,) quantile level per column
+    lambdas: Array,     # (P,) regularization per column
+    n_eff: Array,
+    train_mask: Array | None = None,
+    n: int | None = None,
+) -> tuple[Array, Array]:
+    cost = 1.0 / (2.0 * lambdas.astype(jnp.float32) * jnp.maximum(n_eff, 1.0))  # (P,)
+    lo_row = cost * (taus.astype(jnp.float32) - 1.0)  # (P,)
+    hi_row = cost * taus.astype(jnp.float32)
+    if train_mask is not None:
+        m = train_mask.astype(jnp.float32)[:, None]
+    else:
+        assert n is not None
+        m = jnp.ones((n, 1), jnp.float32)
+    return m * lo_row[None, :], m * hi_row[None, :]
+
+
+def solve_quantile(
+    k_mat: Array,
+    y: Array,
+    taus: Array,
+    lambdas: Array,
+    n_eff: Array,
+    train_mask: Array | None = None,
+    c0: Array | None = None,
+    tol: float = 1e-3,
+    max_iters: int = 3000,
+    l_est: Array | None = None,
+) -> base.BoxQPResult:
+    lo, hi = quantile_boxes(taus, lambdas, n_eff, train_mask, n=k_mat.shape[0])
+    y_col = y.astype(jnp.float32)
+    if train_mask is not None:
+        y_col = y_col * train_mask.astype(jnp.float32)
+    return base.box_qp(k_mat, y_col, lo, hi, c0=c0, tol=tol, max_iters=max_iters, l_est=l_est)
+
+
+def pinball_loss(y: Array, f: Array, tau: Array) -> Array:
+    r = y - f
+    return jnp.where(r >= 0, tau * r, (tau - 1.0) * r)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import banana_mc, covtype_like, gaussian_blobs, regression_1d
+from repro.data.scaling import Scaler
+
+__all__ = ["banana_mc", "covtype_like", "gaussian_blobs", "regression_1d", "Scaler"]

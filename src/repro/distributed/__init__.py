@@ -1,0 +1,4 @@
+from repro.distributed.planner import pack_cells
+from repro.distributed.cell_trainer import train_cells, predict_cells
+
+__all__ = ["pack_cells", "train_cells", "predict_cells"]

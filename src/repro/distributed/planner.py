@@ -1,0 +1,54 @@
+"""Trace-time load balancing: replaces the paper's Spark shuffle.
+
+liquidSVM's Spark layer dynamically shuffles coarse cells to workers.  On a
+TPU mesh all shapes are static, so balance is decided HERE, before
+compilation: cells are padded to a uniform size and greedily bin-packed
+(longest-processing-time first) into per-device slots so each device gets
+the same number of cells and a near-equal amount of real (unpadded) work.
+This is also the straggler story for the SVM phase: there is no dynamic
+work to straggle on — every device executes the same static program.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cells.builder import CellPlan
+
+
+@dataclasses.dataclass
+class PackedCells:
+    order: np.ndarray          # (n_slots,) cell id per slot, -1 = empty slot
+    slot_of_cell: np.ndarray   # (n_cells,)
+    n_devices: int
+    slots_per_device: int
+
+    @property
+    def n_slots(self) -> int:
+        return self.order.shape[0]
+
+
+def pack_cells(plan: CellPlan, n_devices: int) -> PackedCells:
+    """LPT bin packing of cells onto devices; returns a slot ordering whose
+    leading axis can be sharded over the device mesh."""
+    sizes = plan.mask.sum(1)
+    n_cells = plan.n_cells
+    slots_per_device = int(np.ceil(n_cells / n_devices))
+    loads = np.zeros(n_devices)
+    counts = np.zeros(n_devices, np.int32)
+    assign = np.full((n_devices, slots_per_device), -1, np.int64)
+    for cid in np.argsort(-sizes):  # biggest first
+        # among devices with a free slot, pick the least loaded
+        free = np.where(counts < slots_per_device)[0]
+        dev = free[np.argmin(loads[free])]
+        assign[dev, counts[dev]] = cid
+        loads[dev] += sizes[cid]
+        counts[dev] += 1
+    order = assign.reshape(-1)
+    slot_of = np.full(n_cells, -1, np.int64)
+    for s, cid in enumerate(order):
+        if cid >= 0:
+            slot_of[cid] = s
+    return PackedCells(order=order, slot_of_cell=slot_of,
+                       n_devices=n_devices, slots_per_device=slots_per_device)

@@ -1,0 +1,3 @@
+from repro.kernels.cd_solver.ops import cd_epochs
+
+__all__ = ["cd_epochs"]

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: in-VMEM Gauss-Seidel coordinate-descent epoch.
+
+The faithful port of liquidSVM's "carefully implemented" sequential solver
+(Steinwart–Hush–Scovel 1D working sets).  TPU adaptation:
+
+* the Gram matrix streams through VMEM one (n x B) column-block at a time;
+  the sequential TPU grid over blocks IS the Gauss–Seidel order;
+* the dual state (c, g, lo, hi) lives in VMEM for the whole epoch via
+  input/output aliasing (index_map pins them to one block);
+* each 1-D step is batched over the P hyper-parameter-grid columns: the
+  rank-1 gradient maintenance g += K[:, i] (x) delta is a (n x P) VPU op, so
+  the machine is busy even though coordinates are sequential.
+
+Used as a high-accuracy polishing pass after the batched FISTA solver
+(repro.core.solvers.base) — FISTA owns the MXU-shaped bulk work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_COORDS = 128  # coordinates per grid step (column-block width)
+
+
+def _cd_kernel(k_blk_ref, diag_ref, lo_ref, hi_ref, c_in_ref, g_in_ref,
+               c_ref, g_ref, *, block: int):
+    """Grid step j sweeps coordinates [j*block, (j+1)*block)."""
+    del c_in_ref, g_in_ref  # aliased into c_ref / g_ref
+    j = pl.program_id(0)
+    k_blk = k_blk_ref[...]            # (n, block) f32
+    base = j * block
+
+    def body(t, _):
+        i = base + t
+        d = jnp.maximum(diag_ref[0, i], 1e-12)
+        ci = pl.load(c_ref, (pl.dslice(i, 1), slice(None)))      # (1, P)
+        gi = pl.load(g_ref, (pl.dslice(i, 1), slice(None)))
+        li = pl.load(lo_ref, (pl.dslice(i, 1), slice(None)))
+        hi = pl.load(hi_ref, (pl.dslice(i, 1), slice(None)))
+        target = jnp.clip(ci - gi / d, li, hi)
+        delta = target - ci                                       # (1, P)
+        pl.store(c_ref, (pl.dslice(i, 1), slice(None)), target)
+        k_col = jax.lax.dynamic_slice(k_blk, (0, t), (k_blk.shape[0], 1))  # (n, 1)
+        g_ref[...] += k_col * delta
+        return 0
+
+    jax.lax.fori_loop(0, block, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def cd_epoch_pallas(k_mat: Array, c: Array, g: Array, lo: Array, hi: Array,
+                    interpret: bool = True) -> tuple[Array, Array]:
+    """One epoch.  k_mat (n, n) with n % BLOCK_COORDS == 0; c/g/lo/hi (n, P)."""
+    n, p = c.shape
+    assert n % BLOCK_COORDS == 0, n
+    diag = jnp.diag(k_mat).astype(jnp.float32)[None, :]  # (1, n)
+    full = lambda i: (0, 0)
+    c_out, g_out = pl.pallas_call(
+        functools.partial(_cd_kernel, block=BLOCK_COORDS),
+        grid=(n // BLOCK_COORDS,),
+        in_specs=[
+            pl.BlockSpec((n, BLOCK_COORDS), lambda j: (0, j)),   # Gram column block
+            pl.BlockSpec((1, n), full),                          # diag
+            pl.BlockSpec((n, p), full),                          # lo
+            pl.BlockSpec((n, p), full),                          # hi
+            pl.BlockSpec((n, p), full),                          # c (aliased out 0)
+            pl.BlockSpec((n, p), full),                          # g (aliased out 1)
+        ],
+        out_specs=[pl.BlockSpec((n, p), full), pl.BlockSpec((n, p), full)],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+        ],
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(k_mat.astype(jnp.float32), diag, lo.astype(jnp.float32),
+      hi.astype(jnp.float32), c.astype(jnp.float32), g.astype(jnp.float32))
+    return c_out, g_out

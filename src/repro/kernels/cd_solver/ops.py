@@ -1,0 +1,55 @@
+"""jit'd wrapper: pads to the coordinate block, runs E epochs, dispatches
+Pallas on TPU / interpret validation elsewhere, with the jnp oracle as the
+default CPU production path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cd_solver import ref
+from repro.kernels.cd_solver.cd_solver import BLOCK_COORDS, cd_epoch_pallas
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("epochs", "force_pallas", "interpret"))
+def cd_epochs(k_mat: Array, y: Array, lo: Array, hi: Array, c0: Array,
+              epochs: int = 1, force_pallas: bool = False,
+              interpret: bool = True) -> Array:
+    """Run `epochs` Gauss-Seidel sweeps on min 0.5 c'Kc - c'y, lo<=c<=hi.
+
+    k_mat (n, n); y (n,) or (n, P); lo/hi/c0 (n, P).  Returns c (n, P).
+    Padding coordinates must have lo == hi == 0 (they then never move and
+    contribute nothing to g).
+    """
+    n = k_mat.shape[0]
+    if y.ndim == 1:
+        y = y[:, None]
+    p = c0.shape[1]
+    y = jnp.broadcast_to(y.astype(jnp.float32), (n, p))
+
+    use_pallas = force_pallas or jax.default_backend() == "tpu"
+    if not use_pallas:
+        c, _ = ref.solve_cd_ref(k_mat, y, lo, hi, c0, epochs)
+        return c
+
+    pad = (-n) % BLOCK_COORDS
+    if pad:
+        k_mat = jnp.pad(k_mat, ((0, pad), (0, pad)))
+        # padded diag 0 -> guarded by max(d, eps); box [0,0] pins c at 0
+        y = jnp.pad(y, ((0, pad), (0, 0)))
+        lo = jnp.pad(lo, ((0, pad), (0, 0)))
+        hi = jnp.pad(hi, ((0, pad), (0, 0)))
+        c0 = jnp.pad(c0, ((0, pad), (0, 0)))
+    g0 = k_mat @ c0 - y
+    use_interpret = interpret and jax.default_backend() != "tpu"
+
+    def body(_, state):
+        return cd_epoch_pallas(k_mat, state[0], state[1], lo, hi,
+                               interpret=use_interpret)
+
+    c, _ = jax.lax.fori_loop(0, epochs, body, (c0, g0))
+    return c[:n]

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle: exact (batched-column) Gauss-Seidel coordinate descent.
+
+One epoch sweeps coordinates 0..n-1 in order.  For each coordinate i the
+update (vectorized over the P grid columns) is
+
+    delta = clip(c_i - g_i / K_ii, lo_i, hi_i) - c_i
+    c_i  += delta
+    g    += K[:, i] (x) delta            (rank-1 gradient maintenance)
+
+which is the classic liquidSVM/libsvm-style 1-D working-set step; the
+Pallas kernel must reproduce this sequence bit-for-bit (same order).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def cd_epoch_ref(k_mat: Array, c: Array, g: Array, lo: Array, hi: Array) -> tuple[Array, Array]:
+    """k_mat (n, n); c, g, lo, hi (n, P).  Returns updated (c, g)."""
+    n = k_mat.shape[0]
+    diag = jnp.diag(k_mat)
+
+    def body(i, state):
+        c, g = state
+        d = jnp.maximum(diag[i], 1e-12)
+        ci = c[i]                      # (P,)
+        target = jnp.clip(ci - g[i] / d, lo[i], hi[i])
+        delta = target - ci
+        c = c.at[i].add(delta)
+        g = g + k_mat[:, i][:, None] * delta[None, :]
+        return c, g
+
+    return jax.lax.fori_loop(0, n, body, (c, g))
+
+
+def solve_cd_ref(k_mat: Array, y: Array, lo: Array, hi: Array, c0: Array,
+                 epochs: int) -> tuple[Array, Array]:
+    g0 = k_mat @ c0 - y
+    def body(_, state):
+        return cd_epoch_ref(k_mat, state[0], state[1], lo, hi)
+    return jax.lax.fori_loop(0, epochs, body, (c0, g0))

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: fused decode attention over an (optionally int8) KV
+cache — the serving hot loop behind the §Perf kv-int8 hillclimb.
+
+One new token attends to a full ring-buffer cache.  TPU adaptation:
+the cache streams HBM->VMEM one (C, D) tile at a time **in its stored
+dtype** (int8 tiles move 2x fewer bytes than bf16 — this kernel is what
+makes the roofline's fused-dequant byte accounting real); dequantization
+(x * scale) happens in VMEM registers right before the MXU matmuls.
+Online softmax (running max/sum scratch) across the sequential S grid
+axis, exactly like flash decoding; the cross-device merge for a
+sequence-sharded cache is XLA's all-reduce outside this kernel.
+
+Grid: (B * Hk, S / BLOCK_S); per program: q tile (G, D) resident in VMEM,
+kv tiles (BLOCK_S, D) streamed, accumulator (G, D) f32 in scratch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+BLOCK_S = 256
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale: float, s_total: int,
+                   block_s: int, window: int, quantized: bool):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    pos = pos_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # (G, D)
+    k = k_ref[0].astype(jnp.float32)                    # (C, D)
+    v = v_ref[0].astype(jnp.float32)
+    if quantized:
+        k = k * ks_ref[0].astype(jnp.float32)           # (C, 1) scales
+        v = v * vs_ref[0].astype(jnp.float32)
+
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+    idx = j * block_s + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    valid = (idx < s_total) & ((idx <= pos) | (pos >= s_total))
+    if window > 0:
+        age = jnp.remainder(pos - idx, s_total)
+        valid &= age < window
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+    p = jnp.exp(logits - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window", "s_real",
+                                              "interpret"))
+def decode_attention_pallas(q: Array, k_cache: Array, v_cache: Array,
+                            k_scale: Array, v_scale: Array, cache_pos: Array,
+                            scale: float, window: int = 0,
+                            s_real: Optional[int] = None,
+                            interpret: bool = True) -> Array:
+    """q (BH, G, D); caches (BH, S, D) (+ scales (BH, S, 1)); S % 256 == 0.
+
+    BH = B * Hk (one kv head per grid row); G = query heads per kv head.
+    """
+    bh, g, d = q.shape
+    s = k_cache.shape[1]
+    s_real = s if s_real is None else s_real
+    quantized = k_cache.dtype == jnp.int8
+    pos = jnp.asarray(cache_pos, jnp.int32).reshape(1)
+    grid = (bh, s // BLOCK_S)
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, s_total=s_real,
+                          block_s=BLOCK_S, window=window, quantized=quantized),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),                 # pos
+            pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),       # q
+            pl.BlockSpec((1, BLOCK_S, d), lambda b, j: (b, j, 0)),  # k tile
+            pl.BlockSpec((1, BLOCK_S, d), lambda b, j: (b, j, 0)),  # v tile
+            pl.BlockSpec((1, BLOCK_S, 1), lambda b, j: (b, j, 0)),  # k scale
+            pl.BlockSpec((1, BLOCK_S, 1), lambda b, j: (b, j, 0)),  # v scale
+        ],
+        out_specs=pl.BlockSpec((1, g, d), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos, q, k_cache, v_cache, k_scale, v_scale)

@@ -1,0 +1,50 @@
+"""jit'd wrapper: layout/padding + backend dispatch for fused decode."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import ref
+from repro.kernels.decode_attention.decode_attention import (
+    BLOCK_S, decode_attention_pallas)
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "window",
+                                              "force_pallas", "interpret"))
+def decode_attention_fused(q: Array, k_cache: Array, v_cache: Array,
+                           cache_pos: Array, scale: float,
+                           k_scale: Optional[Array] = None,
+                           v_scale: Optional[Array] = None,
+                           window: int = 0, force_pallas: bool = False,
+                           interpret: bool = True) -> Array:
+    """q (B, Hk, G, D); caches (B, S, Hk, D) [+ scales (B, S, Hk, 1)].
+
+    Streams the cache in its stored dtype (int8 halves HBM traffic),
+    dequantizes in VMEM.  Returns (B, Hk, G, D).
+    """
+    if not (force_pallas or jax.default_backend() == "tpu"):
+        return ref.decode_attention_ref(q, k_cache, v_cache, cache_pos,
+                                        scale, k_scale, v_scale, window)
+    b, hk, g, d = q.shape
+    s = k_cache.shape[1]
+    pad_s = (-s) % BLOCK_S
+    quantized = k_cache.dtype == jnp.int8
+    if k_scale is None:
+        k_scale = jnp.ones((b, s, hk, 1), jnp.float32)
+        v_scale = jnp.ones((b, s, hk, 1), jnp.float32)
+
+    def to_bh(x):  # (B, S, Hk, X) -> (B*Hk, S+pad, X)
+        x = jnp.pad(x, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        return x.transpose(0, 2, 1, 3).reshape(b * hk, s + pad_s, x.shape[-1])
+
+    qf = q.reshape(b * hk, g, d)
+    out = decode_attention_pallas(
+        qf, to_bh(k_cache), to_bh(v_cache), to_bh(k_scale), to_bh(v_scale),
+        cache_pos, scale=scale, window=window, s_real=s,
+        interpret=interpret and jax.default_backend() != "tpu")
+    return out.reshape(b, hk, g, d)

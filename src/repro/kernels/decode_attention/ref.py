@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for fused decode attention (optionally int8 KV)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: Array, k_cache: Array, v_cache: Array,
+                         cache_pos: Array, scale: float,
+                         k_scale: Optional[Array] = None,
+                         v_scale: Optional[Array] = None,
+                         window: int = 0) -> Array:
+    """q (B, Hk, G, D); caches (B, S, Hk, D) [+ (B, S, Hk, 1) scales].
+    Returns (B, Hk, G, D).  Ring-buffer validity from cache_pos."""
+    b, hk, g, d = q.shape
+    s = k_cache.shape[1]
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    if k_scale is not None:
+        kf = kf * k_scale
+        vf = vf * v_scale
+    logits = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32), kf) * scale
+    idx = jnp.arange(s)
+    valid = (idx <= cache_pos) | (cache_pos >= s)
+    if window > 0:
+        age = jnp.mod(cache_pos - idx, s)
+        valid &= age < window
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhgs,bshd->bhgd", p, vf).astype(q.dtype)

@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: flash attention (causal / sliding-window / bidir).
+
+Online-softmax tiling: grid (B*H, T/bq, S/bk) with the kv axis innermost
+and sequential; running max m, normalizer l, and the output accumulator
+live in VMEM scratch across the kv sweep.  Fully-masked tiles (kv block
+entirely in the causal future, or entirely outside the sliding window) are
+skipped with pl.when so the causal/window cost is the true masked FLOPs.
+
+The kernel handles one q-head per grid row; GQA mapping (repeat kv heads)
+is done by ops.py.  D is padded to the 128 lane width by ops.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+NEG_INF = -1e30
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  mask_kind: str, window: int, scale: float,
+                  t_total: int, s_total: int, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # global row/col coordinates in REAL (unpadded) terms; q rows are offset
+    # so the final real q row attends to the final real kv row (decode
+    # alignment).  t_total/s_total are the real lengths; the grid may cover
+    # right-padded blocks whose rows are sliced off by ops.py.
+    row0 = qi * block_q + (s_total - t_total)
+    col0 = kj * block_k
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)        # (bq, d)
+        k = k_ref[0].astype(jnp.float32)        # (bk, d)
+        v = v_ref[0].astype(jnp.float32)        # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        rows = row0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        cols = col0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = cols < s_total                    # padded kv columns never visible
+        if mask_kind in ("causal", "window"):
+            mask &= rows >= cols
+            if mask_kind == "window":
+                mask &= (rows - cols) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                      # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                   # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)          # (bq, 1)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if mask_kind in ("causal", "window"):
+        # skip tiles entirely above the diagonal (and, for windows,
+        # entirely left of the band)
+        visible = (col0 <= row0 + block_q - 1) & (col0 < s_total)
+        if mask_kind == "window":
+            visible &= (col0 + block_k - 1) >= (row0 - window + 1)
+        pl.when(visible)(compute)
+    else:
+        pl.when(col0 < s_total)(compute)
+
+    @pl.when(kj == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mask_kind", "window", "scale", "t_real", "s_real", "interpret"))
+def flash_attention_pallas(q: Array, k: Array, v: Array, mask_kind: str = "causal",
+                           window: int = 0, scale: float | None = None,
+                           t_real: int | None = None, s_real: int | None = None,
+                           interpret: bool = True) -> Array:
+    """q (BH, T, D), k/v (BH, S, D); T % BLOCK_Q == S % BLOCK_K == 0.
+
+    t_real/s_real are the unpadded lengths used for mask coordinates.
+    """
+    bh, t, d = q.shape
+    s_len = k.shape[1]
+    t_real = t if t_real is None else t_real
+    s_real = s_len if s_real is None else s_real
+    scale = float(d ** -0.5) if scale is None else scale
+    grid = (bh, t // BLOCK_Q, s_len // BLOCK_K)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, mask_kind=mask_kind, window=window, scale=scale,
+            t_total=t_real, s_total=s_real, block_q=BLOCK_Q, block_k=BLOCK_K),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, BLOCK_K, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, BLOCK_K, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, t, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""jit'd wrapper: GQA head mapping, padding, backend dispatch."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import (
+    BLOCK_K, BLOCK_Q, flash_attention_pallas)
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("mask_kind", "window", "force_pallas", "interpret"))
+def flash_attention(q: Array, k: Array, v: Array, mask_kind: str = "causal",
+                    window: int = 0, force_pallas: bool = False,
+                    interpret: bool = True) -> Array:
+    """q (B, T, H, D); k, v (B, S, Hk, D); returns (B, T, H, D)."""
+    if not (force_pallas or jax.default_backend() == "tpu"):
+        return ref.flash_attention_ref(q, k, v, mask_kind, window)
+
+    b, t, h, d = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scale = float(d ** -0.5)
+
+    pad_t, pad_s, pad_d = (-t) % BLOCK_Q, (-s) % BLOCK_K, (-d) % 128
+    qp = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, pad_d)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, pad_d)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, pad_d)))
+    # right-padding everywhere; the kernel masks in REAL coordinates
+    # (t_real/s_real) so padded kv columns are never attended and padded q
+    # rows are sliced off below.
+    qp = qp.transpose(0, 2, 1, 3).reshape(b * h, t + pad_t, d + pad_d)
+    kp = kp.transpose(0, 2, 1, 3).reshape(b * h, s + pad_s, d + pad_d)
+    vp = vp.transpose(0, 2, 1, 3).reshape(b * h, s + pad_s, d + pad_d)
+    use_interpret = interpret and jax.default_backend() != "tpu"
+    out = flash_attention_pallas(qp, kp, vp, mask_kind=mask_kind, window=window,
+                                 scale=scale, t_real=t, s_real=s,
+                                 interpret=use_interpret)
+    out = out.reshape(b, h, t + pad_t, d + pad_d)[:, :, :t, :d]
+    return out.transpose(0, 2, 1, 3)

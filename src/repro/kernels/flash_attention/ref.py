@@ -1,0 +1,44 @@
+"""Pure-jnp oracle: masked softmax attention with GQA.
+
+q (B, T, H, D); k, v (B, S, Hk, D) with H % Hk == 0.
+mask kinds: "causal" (row >= col, offset so the last q row attends to the
+last kv row), "window" (causal AND row - col < window), "bidir".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attention_mask(t: int, s: int, kind: str, window: int = 0) -> Array:
+    rows = jnp.arange(t)[:, None] + (s - t)  # align last q row to last kv row
+    cols = jnp.arange(s)[None, :]
+    if kind == "bidir":
+        return jnp.ones((t, s), bool)
+    causal = rows >= cols
+    if kind == "causal":
+        return causal
+    if kind == "window":
+        return causal & (rows - cols < window)
+    raise ValueError(kind)
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array, mask_kind: str = "causal",
+                        window: int = 0, scale: float | None = None) -> Array:
+    b, t, h, d = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = (d ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(b, t, hk, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bthgd,bshd->bhgts", qf, kf) * scale
+    m = attention_mask(t, s, mask_kind, window)
+    logits = jnp.where(m[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", p, vf)
+    return out.reshape(b, t, h, d).astype(q.dtype)

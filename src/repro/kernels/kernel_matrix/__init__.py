@@ -1,0 +1,3 @@
+from repro.kernels.kernel_matrix.ops import kernel_matrix
+
+__all__ = ["kernel_matrix"]

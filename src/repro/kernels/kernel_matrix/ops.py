@@ -1,0 +1,42 @@
+"""jit'd wrapper: pads to tile boundaries, dispatches Pallas-on-TPU vs
+jnp-oracle elsewhere (this container is CPU; the kernel is validated in
+interpret mode by tests and enabled on real TPU backends).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kernel_matrix import ref
+from repro.kernels.kernel_matrix.kernel_matrix import BLOCK_M, BLOCK_N, gram_pallas
+
+Array = jax.Array
+
+
+def _pad_to(a: Array, mult: int, axis: int) -> Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "force_pallas", "interpret"))
+def kernel_matrix(x: Array, z: Array, gamma: Array, kind: str = "gauss_rbf",
+                  force_pallas: bool = False, interpret: bool = True) -> Array:
+    """K[i, j] = k_gamma(x_i, z_j); (n, d) x (m, d) -> (n, m) f32."""
+    n, m = x.shape[0], z.shape[0]
+    if not (force_pallas or _on_tpu()):
+        return ref.kernel_matrix_ref(x, z, gamma, kind)
+    xp = _pad_to(_pad_to(x, BLOCK_N, 0), 128, 1)
+    zp = _pad_to(_pad_to(z, BLOCK_M, 0), 128, 1)
+    use_interpret = interpret and not _on_tpu()
+    k = gram_pallas(xp, zp, gamma, kind=kind, interpret=use_interpret)
+    return k[:n, :m]

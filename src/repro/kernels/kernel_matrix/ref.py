@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the Gram-matrix kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def kernel_matrix_ref(x: Array, z: Array, gamma: Array, kind: str = "gauss_rbf") -> Array:
+    x = x.astype(jnp.float32)
+    z = z.astype(jnp.float32)
+    d2 = jnp.maximum(
+        jnp.sum(x * x, -1)[:, None] + jnp.sum(z * z, -1)[None, :] - 2.0 * (x @ z.T), 0.0
+    )
+    g = jnp.asarray(gamma, jnp.float32)
+    if kind == "gauss_rbf":
+        return jnp.exp(-d2 / jnp.maximum(g * g, 1e-12))
+    if kind == "laplacian":
+        return jnp.exp(-jnp.sqrt(d2 + 1e-12) / jnp.maximum(g, 1e-12))
+    raise ValueError(kind)

@@ -1,0 +1,3 @@
+from repro.kernels.svm_predict.ops import svm_predict
+
+__all__ = ["svm_predict"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle: f = K(x_test, sv) @ coefs (Gram materialized)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kernel_matrix.ref import kernel_matrix_ref
+
+Array = jax.Array
+
+
+def svm_predict_ref(x_test: Array, sv: Array, coefs: Array, gamma: Array,
+                    kind: str = "gauss_rbf") -> Array:
+    k = kernel_matrix_ref(x_test, sv, gamma, kind)
+    if coefs.ndim == 1:
+        coefs = coefs[:, None]
+    return k @ coefs.astype(jnp.float32)

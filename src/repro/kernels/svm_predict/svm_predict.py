@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: fused SVM test-phase evaluation.
+
+liquidSVM parallelizes "evaluating the SVM models on the test data" (CPU
+threads + CUDA).  TPU adaptation: never materialize K(test, SV) in HBM —
+each (bt x bs) Gram tile is produced in VMEM (MXU cross term + VPU exp)
+and immediately contracted against the coefficient block (MXU again),
+accumulating f = K @ C tile-by-tile.  Arithmetic intensity rises from
+O(1) (Gram write + later GEMV read) to O(bs) per Gram element.
+
+Grid (n_test/bt, n_sv/bs): the sv axis is the sequential inner dimension;
+the output tile is revisited and accumulated across it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+BLOCK_T = 128   # test rows per tile
+BLOCK_S = 128   # support vectors per tile
+
+
+def _predict_kernel(x_ref, sv_ref, c_ref, gamma_ref, o_ref, *, kind: str):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)     # (bt, d)
+    sv = sv_ref[...].astype(jnp.float32)   # (bs, d)
+    gamma = gamma_ref[0, 0]
+    cross = jax.lax.dot_general(x, sv, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(jnp.sum(x * x, -1)[:, None] + jnp.sum(sv * sv, -1)[None, :]
+                     - 2.0 * cross, 0.0)
+    if kind == "gauss_rbf":
+        k_tile = jnp.exp(-d2 / jnp.maximum(gamma * gamma, 1e-12))
+    elif kind == "laplacian":
+        k_tile = jnp.exp(-jnp.sqrt(d2 + 1e-12) / jnp.maximum(gamma, 1e-12))
+    else:
+        raise ValueError(kind)
+    partial = jnp.dot(k_tile, c_ref[...].astype(jnp.float32),
+                      preferred_element_type=jnp.float32)  # (bt, P)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "interpret"))
+def svm_predict_pallas(x_test: Array, sv: Array, coefs: Array, gamma: Array,
+                       kind: str = "gauss_rbf", interpret: bool = True) -> Array:
+    """x_test (nt, d), sv (ns, d), coefs (ns, P); nt % 128 == ns % 128 == 0."""
+    nt, d = x_test.shape
+    ns, p = sv.shape[0], coefs.shape[1]
+    gamma_arr = jnp.reshape(jnp.asarray(gamma, jnp.float32), (1, 1))
+    return pl.pallas_call(
+        functools.partial(_predict_kernel, kind=kind),
+        grid=(nt // BLOCK_T, ns // BLOCK_S),
+        in_specs=[
+            pl.BlockSpec((BLOCK_T, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_S, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_S, p), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_T, p), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, p), jnp.float32),
+        interpret=interpret,
+    )(x_test, sv, coefs, gamma_arr)

@@ -1,0 +1,205 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — exactly what
+``jax.jit(...).lower(**input_specs(...))`` needs.  This module also owns
+the per-(arch, shape, mesh) config adaptation: batch/sequence sharding
+axes, activation sharding, grad-accum factor, optimizer dtype policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, get_arch
+from repro.configs.common import ShapeSpec
+from repro.launch import mesh as mesh_mod
+from repro.models import layers, model as model_mod
+from repro.models.model import ModelConfig
+from repro.train.optimizer import OptConfig
+
+# per-arch optimizer dtype policy (DESIGN.md §5)
+OPT_POLICY: Dict[str, str] = {
+    "command-r-plus-104b": "bf16_mom",
+    "internvl2-76b": "bf16_mom",
+    "jamba-v0.1-52b": "bf16_mom",
+    "qwen3-moe-235b-a22b": "pure_bf16",
+    "llama4-maverick-400b-a17b": "pure_bf16",
+}
+
+# microbatch accumulation for train_4k (activation-memory control)
+GRAD_ACCUM: Dict[str, int] = {
+    "command-r-plus-104b": 4,
+    "internvl2-76b": 4,
+    "qwen3-moe-235b-a22b": 4,
+    "llama4-maverick-400b-a17b": 4,
+    "jamba-v0.1-52b": 2,
+}
+
+
+def adapt_config(arch: ArchSpec, shape: ShapeSpec, mesh: Mesh) -> ModelConfig:
+    """Mesh/shape-aware copy of the full config."""
+    cfg = arch.config
+    baxes = mesh_mod.batch_axes(mesh)
+    n_b = mesh_mod.n_batch_shards(mesh)
+    kw: Dict[str, Any] = {}
+    if shape.kind == "train":
+        kw["batch_axes"] = baxes
+        kw["shard_activations"] = True
+        kw["remat"] = True
+    elif shape.kind in ("prefill", "encode"):
+        kw["batch_axes"] = baxes if shape.global_batch % n_b == 0 else ()
+        kw["shard_activations"] = shape.global_batch % n_b == 0
+        kw["remat"] = False
+    else:  # decode
+        kw["remat"] = False
+        kw["shard_activations"] = False
+        if shape.global_batch % n_b == 0:
+            kw["batch_axes"] = baxes
+            kw["seq_axes"] = ("model",)
+        else:  # long_500k batch 1: flash-decoding over the whole mesh
+            kw["batch_axes"] = ()
+            kw["seq_axes"] = tuple(mesh.axis_names)
+    return dataclasses.replace(cfg, **kw)
+
+
+def opt_config(arch_id: str, total_steps: int = 10000) -> OptConfig:
+    return OptConfig(policy=OPT_POLICY.get(arch_id, "fp32"),
+                     total_steps=total_steps)
+
+
+def grad_accum(arch_id: str, shape: ShapeSpec) -> int:
+    if shape.kind != "train":
+        return 1
+    return GRAD_ACCUM.get(arch_id, 1)
+
+
+# --------------------------------------------------------------------------
+# ShapeDtypeStruct builders
+# --------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def param_structs(cfg: ModelConfig, mesh: Mesh):
+    return layers.shape_tree(model_mod.build_template(cfg), mesh)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh):
+    return layers.sharding_tree(model_mod.build_template(cfg), mesh)
+
+
+def opt_structs(cfg: ModelConfig, ocfg: OptConfig, mesh: Mesh):
+    """OptState ShapeDtypeStructs congruent with the params tree."""
+    from repro.train.optimizer import _POLICIES, OptState
+    mdt, sdt = _POLICIES[ocfg.policy]
+    tmpl = model_mod.build_template(cfg)
+
+    def of(dt):
+        return jax.tree.map(
+            lambda ps: _sds(ps.shape, dt, mesh, ps.spec), tmpl,
+            is_leaf=lambda x: isinstance(x, layers.ParamSpec))
+
+    return OptState(step=_sds((), jnp.int32, mesh, P()),
+                    master=of(mdt), m=of(sdt), v=of(sdt))
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """Training batch {"inputs", "labels", "mask"}."""
+    b, t = shape.global_batch, shape.seq_len
+    bspec = cfg.batch_axes or None
+    if cfg.input_kind == "tokens":
+        inputs = _sds((b, t), jnp.int32, mesh, P(bspec, None))
+    else:
+        inputs = _sds((b, t, cfg.d_frontend), jnp.bfloat16,
+                      mesh, P(bspec, None, None))
+    return {
+        "inputs": inputs,
+        "labels": _sds((b, t), jnp.int32, mesh, P(bspec, None)),
+        "mask": _sds((b, t), jnp.float32, mesh, P(bspec, None)),
+    }
+
+
+def prefill_structs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    b, t = shape.global_batch, shape.seq_len
+    bspec = cfg.batch_axes or None
+    if cfg.input_kind == "tokens":
+        return _sds((b, t), jnp.int32, mesh, P(bspec, None))
+    return _sds((b, t, cfg.d_frontend), jnp.bfloat16, mesh,
+                P(bspec, None, None))
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    """Decode cache ShapeDtypeStructs with flash-decoding shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    tree = model_mod.cache_struct(cfg, b, s)
+    bspec = cfg.batch_axes or None
+    sspec = cfg.seq_axes or None
+
+    def one(sd: jax.ShapeDtypeStruct):
+        nd = len(sd.shape)
+        # kv caches: (..., B, S, Hk, D)
+        if nd >= 4 and sd.shape[-1] == cfg.head_dim \
+                and sd.shape[-2] == cfg.n_kv_heads and sd.shape[-3] == s:
+            lead = (None,) * (nd - 4)
+            return _sds(sd.shape, sd.dtype, mesh,
+                        P(*lead, bspec, sspec, None, None))
+        # O(1) recurrent states: shard batch if possible, else replicate
+        spec = [None] * nd
+        # batch dim position: stacked states carry it at axis 1, tail at 0
+        if bspec is not None and b > 1:
+            for cand in (0, 1):
+                if cand < nd and sd.shape[cand] == b:
+                    spec[cand] = bspec
+                    break
+        return _sds(sd.shape, sd.dtype, mesh, P(*spec))
+
+    return jax.tree.map(one, tree)
+
+
+def decode_token_structs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh):
+    b = shape.global_batch
+    bspec = cfg.batch_axes or None
+    if cfg.input_kind == "tokens":
+        return _sds((b, 1), jnp.int32, mesh, P(bspec, None))
+    return _sds((b, 1, cfg.d_frontend), jnp.bfloat16, mesh,
+                P(bspec, None, None))
+
+
+def input_specs(arch_id: str, shape_name: str, mesh: Mesh,
+                overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Everything needed to lower the cell's step function.
+
+    ``overrides``: ModelConfig field overrides (perf-variant lowering,
+    e.g. {"kv_cache_dtype": "int8"}).
+    Returns {"kind", "cfg", "args": tuple of ShapeDtypeStructs, ...}.
+    """
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    cfg = adapt_config(arch, shape, mesh)
+    accum_override = None
+    if overrides:
+        overrides = dict(overrides)
+        accum_override = overrides.pop("grad_accum", None)
+        cfg = dataclasses.replace(cfg, **overrides)
+    out: Dict[str, Any] = {"kind": shape.kind, "cfg": cfg, "shape": shape}
+    params = param_structs(cfg, mesh)
+    if shape.kind == "train":
+        ocfg = opt_config(arch_id)
+        out["opt_cfg"] = ocfg
+        out["grad_accum"] = accum_override or grad_accum(arch_id, shape)
+        out["args"] = (params, opt_structs(cfg, ocfg, mesh),
+                       batch_structs(cfg, shape, mesh))
+    elif shape.kind in ("prefill", "encode"):
+        out["args"] = (params, prefill_structs(cfg, shape, mesh))
+    else:
+        out["args"] = (params, decode_token_structs(cfg, shape, mesh),
+                       cache_structs(cfg, shape, mesh),
+                       jax.ShapeDtypeStruct((), jnp.int32))
+    return out

@@ -1,0 +1,210 @@
+"""Shared LM building blocks: param templates, norms, RoPE, MLPs.
+
+Parameters are described by a *template* (nested dict of ParamSpec) that
+carries shape, dtype, PartitionSpec, and init recipe.  The same template
+drives three consumers:
+
+  * real init          (smoke tests / the ~100M example trainer)
+  * jax.eval_shape     (multi-pod dry-run: ShapeDtypeStructs, no allocation)
+  * NamedSharding tree (jit in_shardings for params/optimizer state)
+
+Sharding vocabulary (logical axes -> mesh axes):
+  'model'  tensor-parallel axis: heads / d_ff / experts / vocab
+  'data'   FSDP axis: second param shard for >=70B archs; batch axis
+  'pod'    outermost data-parallel axis (multi-pod)
+
+All matmuls run in the config's compute dtype (bf16 by default) with f32
+accumulation via preferred_element_type; norms/softmax/rope are f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    dtype: Any
+    spec: P          # PartitionSpec over ('data', 'model') logical axes
+    init: str        # zeros | ones | normal | fan_in
+    scale: float = 1.0
+    fan: Optional[int] = None  # explicit fan-in (stacked/period templates)
+
+
+Template = Dict[str, Any]  # nested dict[str, ParamSpec | Template]
+
+
+def leaf_specs(template: Template):
+    return jax.tree.leaves(template, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(template: Template, key: Array) -> Dict[str, Any]:
+    """Materialize real parameters (smoke tests / small-model training)."""
+    leaves, treedef = jax.tree.flatten(template, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for ps, k in zip(leaves, keys):
+        if ps.init == "zeros":
+            v = jnp.zeros(ps.shape, ps.dtype)
+        elif ps.init == "ones":
+            v = jnp.ones(ps.shape, ps.dtype)
+        elif ps.init == "normal":
+            v = (ps.scale * jax.random.normal(k, ps.shape, jnp.float32)).astype(ps.dtype)
+        elif ps.init == "fan_in":
+            fan = ps.fan if ps.fan is not None else (
+                ps.shape[0] if len(ps.shape) <= 2 else int(np.prod(ps.shape[:-1])))
+            std = ps.scale / math.sqrt(max(fan, 1))
+            v = (std * jax.random.normal(k, ps.shape, jnp.float32)).astype(ps.dtype)
+        else:
+            raise ValueError(ps.init)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_tree(template: Template, mesh: Optional[Mesh] = None) -> Dict[str, Any]:
+    """ShapeDtypeStructs (with shardings if mesh given) — dry-run stand-ins."""
+    def one(ps: ParamSpec):
+        if mesh is None:
+            return jax.ShapeDtypeStruct(ps.shape, ps.dtype)
+        return jax.ShapeDtypeStruct(ps.shape, ps.dtype,
+                                    sharding=NamedSharding(mesh, ps.spec))
+    return jax.tree.map(one, template, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def sharding_tree(template: Template, mesh: Mesh) -> Dict[str, Any]:
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps.spec), template,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def spec_tree(template: Template) -> Dict[str, Any]:
+    return jax.tree.map(lambda ps: ps.spec, template,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_count(template: Template) -> int:
+    return sum(int(np.prod(ps.shape)) for ps in leaf_specs(template))
+
+
+def param_bytes(template: Template) -> int:
+    return sum(int(np.prod(ps.shape)) * jnp.dtype(ps.dtype).itemsize
+               for ps in leaf_specs(template))
+
+
+# --------------------------------------------------------------------------
+# numerics
+# --------------------------------------------------------------------------
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x: Array, w: Array, b: Optional[Array], eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(kind: str, x: Array, p: Dict[str, Array]) -> Array:
+    if kind == "rmsnorm":
+        return rms_norm(x, p["w"])
+    return layer_norm(x, p["w"], p.get("b"))
+
+
+def norm_template(kind: str, d: int, bias: bool = False) -> Template:
+    t: Template = {"w": ParamSpec((d,), jnp.float32, P(None), "ones")}
+    if kind == "layernorm" and bias:
+        t["b"] = ParamSpec((d,), jnp.float32, P(None), "zeros")
+    return t
+
+
+# --------------------------------------------------------------------------
+# RoPE (partial-rotary aware)
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, rotary_dim: int, theta: float) -> np.ndarray:
+    assert rotary_dim % 2 == 0
+    return 1.0 / (theta ** (np.arange(0, rotary_dim, 2, dtype=np.float64) / rotary_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float, rotary_frac: float = 1.0) -> Array:
+    """x (..., T, H, D); positions (..., T) int32.  Rotates the first
+    rotary_frac*D dims (even/odd interleave-free 'half-split' layout)."""
+    d = x.shape[-1]
+    rd = int(d * rotary_frac)
+    rd -= rd % 2
+    if rd == 0:
+        return x
+    freqs = jnp.asarray(rope_frequencies(d, rd, theta), jnp.float32)  # (rd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs            # (..., T, rd/2)
+    cos = jnp.cos(ang)[..., None, :]                                  # (..., T, 1, rd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., : rd // 2], xr[..., rd // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    r1 = xf1 * cos - xf2 * sin
+    r2 = xf2 * cos + xf1 * sin
+    return jnp.concatenate([r1.astype(x.dtype), r2.astype(x.dtype), xp], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# dense projections & MLPs
+# --------------------------------------------------------------------------
+
+def linear(x: Array, w: Array, dtype) -> Array:
+    return jax.lax.dot_general(
+        x.astype(dtype), w.astype(dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(dtype)
+
+
+def act_fn(name: str, x: Array) -> Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def glu_mlp_template(d: int, ff: int, dtype) -> Template:
+    """Gated MLP (SwiGLU / GeGLU).  ff sharded over model, d over data."""
+    return {
+        "wi": ParamSpec((d, ff), dtype, P("data", "model"), "fan_in"),
+        "wg": ParamSpec((d, ff), dtype, P("data", "model"), "fan_in"),
+        "wo": ParamSpec((ff, d), dtype, P("model", "data"), "fan_in"),
+    }
+
+
+def glu_mlp(p: Dict[str, Array], x: Array, act: str, dtype) -> Array:
+    h = act_fn(act, linear(x, p["wg"], dtype)) * linear(x, p["wi"], dtype)
+    return linear(h, p["wo"], dtype)
+
+
+# --------------------------------------------------------------------------
+# embedding / logits (vocab-sharded, chunked CE lives in model.py)
+# --------------------------------------------------------------------------
+
+def embed_template(vocab: int, d: int, dtype) -> Template:
+    return {"tok": ParamSpec((vocab, d), dtype, P("model", "data"), "fan_in", 1.0)}
+
+
+def embed_lookup(emb: Array, tokens: Array, dtype) -> Array:
+    return jnp.take(emb, tokens, axis=0).astype(dtype)

@@ -1,0 +1,514 @@
+"""LM assembly: one composable stack covering all 10 assigned architectures.
+
+An architecture is a ``ModelConfig`` whose ``period_pattern`` lists the
+(mixer, mlp) kind of each layer inside one repeating period:
+
+    mixer: attn | attn_local | attn_bidir | mamba | rwkv
+    mlp:   dense | moe | rwkv_cm
+
+``n_layers = n_periods * len(period) + tail`` — full periods run under one
+``lax.scan`` (params stacked over the period axis, jax.checkpoint'd body),
+the tail (< one period) is unrolled with its own params.  This keeps HLO
+size O(period), not O(n_layers), for 94-layer stacks.
+
+Losses never materialize (tokens, vocab): cross-entropy is lax.scan'd over
+token chunks (mandatory at vocab 262k).
+
+The same forward drives three entry points:
+    loss_fn     (B, T) tokens -> scalar loss           [train_4k]
+    prefill     (B, T) tokens -> last logits + cache    [prefill_32k]
+    decode_step (B, 1) token + cache -> logits + cache  [decode_32k/long_500k]
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention, layers, moe as moe_mod, rwkv6, ssm
+from repro.models.layers import ParamSpec, Template
+
+Array = jax.Array
+
+
+# --------------------------------------------------------------------------
+# config
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    period_pattern: Tuple[Tuple[str, str], ...] = (("attn", "dense"),)
+    # attention
+    window: int = 0
+    rope_theta: float = 10000.0
+    rotary_frac: float = 1.0
+    qk_norm: bool = False
+    attn_impl: str = "blocked"
+    attn_chunk: int = 1024
+    kv_cache_dtype: str = "bf16"    # bf16 (baseline) | int8 (§Perf decode)
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    moe_chunk: int = 1024
+    moe_capacity_factor: float = 1.25
+    moe_impl: str = "einsum"        # einsum (baseline) | gather (§Perf)
+    moe_pregather: bool = False     # hoist FSDP weight all-gather out of
+                                    # the chunk scan (§Perf)
+    aux_loss_weight: float = 0.01
+    # ssm
+    ssm_d_state: int = 16
+    ssm_d_conv: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    # rwkv
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 128
+    # frontend
+    input_kind: str = "tokens"      # tokens | embed (audio/vision stub)
+    d_frontend: int = 0
+    # numerics / structure
+    norm: str = "rmsnorm"
+    act: str = "silu"
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    ce_chunk: int = 2048
+    fsdp_params: bool = False
+    batch_axes: Tuple[str, ...] = ()   # mesh axes the batch is sharded over
+    seq_axes: Tuple[str, ...] = ()     # mesh axes decode caches shard seq over
+    shard_activations: bool = False    # layer-boundary h sharded over 'model'
+                                       # on d (ZeRO-activations; big-arch train)
+
+    @property
+    def period(self) -> int:
+        return len(self.period_pattern)
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // self.period
+
+    @property
+    def tail(self) -> int:
+        return self.n_layers - self.n_periods * self.period
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(self.d_model // 16, 1)
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    @property
+    def is_decoder(self) -> bool:
+        return all(m != "attn_bidir" for m, _ in self.period_pattern)
+
+    def param_count(self) -> int:
+        return layers.param_count(build_template(self))
+
+
+def _constrain(cfg: ModelConfig, x: Array) -> Array:
+    if not cfg.batch_axes:
+        return x
+    if cfg.shard_activations and x.ndim == 3:
+        # layer-boundary storage sharded over 'model' on d_model; XLA
+        # all-gathers at use sites (sequence-parallel-style storage saving)
+        spec = P(cfg.batch_axes, None, "model")
+    else:
+        spec = P(cfg.batch_axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------
+# templates
+# --------------------------------------------------------------------------
+
+def _mixer_template(cfg: ModelConfig, kind: str) -> Template:
+    if kind in ("attn", "attn_local", "attn_bidir"):
+        return attention.attention_template(
+            cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            cfg.dtype, cfg.fsdp_params, qk_norm=cfg.qk_norm)
+    if kind == "mamba":
+        return ssm.mamba_template(cfg.d_model, cfg.d_inner, cfg.ssm_d_state,
+                                  cfg.ssm_d_conv, cfg.dt_rank, cfg.dtype,
+                                  cfg.fsdp_params)
+    if kind == "rwkv":
+        return rwkv6.rwkv6_template(cfg.d_model, cfg.rwkv_heads,
+                                    cfg.rwkv_head_dim, cfg.dtype,
+                                    cfg.fsdp_params)
+    raise ValueError(kind)
+
+
+def _mlp_template(cfg: ModelConfig, kind: str) -> Template:
+    if kind == "dense":
+        t = layers.glu_mlp_template(cfg.d_model, cfg.d_ff, cfg.dtype)
+        if cfg.fsdp_params:
+            return t
+        return t
+    if kind == "moe":
+        shared_ff = cfg.d_ff if cfg.n_shared_experts else 0
+        return moe_mod.moe_template(cfg.d_model, cfg.moe_d_ff, cfg.n_experts,
+                                    cfg.dtype, cfg.fsdp_params,
+                                    n_shared=cfg.n_shared_experts,
+                                    shared_ff=shared_ff)
+    if kind == "rwkv_cm":
+        return rwkv6.channel_mix_template(cfg.d_model, cfg.d_ff, cfg.dtype,
+                                          cfg.fsdp_params)
+    raise ValueError(kind)
+
+
+def _layer_template(cfg: ModelConfig, mixer: str, mlp: str) -> Template:
+    return {
+        "norm1": layers.norm_template(cfg.norm, cfg.d_model),
+        "mixer": _mixer_template(cfg, mixer),
+        "norm2": layers.norm_template(cfg.norm, cfg.d_model),
+        "mlp": _mlp_template(cfg, mlp),
+    }
+
+
+def _stack_template(t: Template, n: int) -> Template:
+    """Prepend a period axis to every leaf; remember the true fan-in."""
+    def one(ps: ParamSpec):
+        fan = int(np.prod(ps.shape[:-1])) if len(ps.shape) >= 2 else ps.shape[0]
+        return ParamSpec((n,) + ps.shape, ps.dtype, P(None, *tuple(ps.spec)),
+                         ps.init, ps.scale, fan=fan)
+    return jax.tree.map(one, t, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def build_template(cfg: ModelConfig) -> Template:
+    dax = "data" if cfg.fsdp_params else None
+    t: Template = {}
+    if cfg.input_kind == "tokens":
+        espec = P("model", dax) if cfg.vocab % 64 == 0 else P(None, "model")
+        t["embed"] = {"tok": ParamSpec((cfg.vocab, cfg.d_model), cfg.dtype,
+                                       espec, "normal", 0.02)}
+    else:
+        t["frontend"] = {"proj": ParamSpec((cfg.d_frontend, cfg.d_model),
+                                           cfg.dtype, P(None, "model"), "fan_in")}
+    if cfg.n_periods > 0:
+        t["stack"] = {
+            f"pos{i}": _stack_template(_layer_template(cfg, m, f), cfg.n_periods)
+            for i, (m, f) in enumerate(cfg.period_pattern)
+        }
+    for j in range(cfg.tail):
+        m, f = cfg.period_pattern[j]
+        t[f"tail{j}"] = _layer_template(cfg, m, f)
+    t["final_norm"] = layers.norm_template(cfg.norm, cfg.d_model)
+    if not cfg.tie_embeddings:
+        # tiny class heads (e.g. hubert's 504 codebook classes) cannot
+        # shard a 16-way model axis — replicate them
+        vspec = P(dax, "model") if cfg.vocab % 64 == 0 else P(dax, None)
+        t["lm_head"] = {"w": ParamSpec((cfg.d_model, cfg.vocab), cfg.dtype,
+                                       vspec, "fan_in")}
+    return t
+
+
+# --------------------------------------------------------------------------
+# caches (decode state)
+# --------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, mixer: str, batch: int, seq: int,
+                 seq_spec) -> Any:
+    if mixer in ("attn", "attn_local", "attn_bidir"):
+        kv_shape = (batch, seq, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.kv_cache_dtype == "int8":
+            sc_shape = (batch, seq, cfg.n_kv_heads, 1)
+            return {"k": jax.ShapeDtypeStruct(kv_shape, jnp.int8),
+                    "v": jax.ShapeDtypeStruct(kv_shape, jnp.int8),
+                    "k_scale": jax.ShapeDtypeStruct(sc_shape, jnp.float32),
+                    "v_scale": jax.ShapeDtypeStruct(sc_shape, jnp.float32)}
+        return {"k": jax.ShapeDtypeStruct(kv_shape, cfg.dtype, sharding=None),
+                "v": jax.ShapeDtypeStruct(kv_shape, cfg.dtype, sharding=None)}
+    if mixer == "mamba":
+        return {"conv": jax.ShapeDtypeStruct(
+                    (batch, cfg.ssm_d_conv - 1, cfg.d_inner), jnp.float32),
+                "ssm": jax.ShapeDtypeStruct(
+                    (batch, cfg.d_inner, cfg.ssm_d_state), jnp.float32)}
+    if mixer == "rwkv":
+        return {"shift": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), jnp.float32),
+                "wkv": jax.ShapeDtypeStruct(
+                    (batch, cfg.rwkv_heads, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                    jnp.float32),
+                "shift_ffn": jax.ShapeDtypeStruct((batch, 1, cfg.d_model),
+                                                  jnp.float32)}
+    raise ValueError(mixer)
+
+
+def cache_struct(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree describing the decode cache."""
+    def stackit(tree, n):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+    out: Dict[str, Any] = {}
+    if cfg.n_periods > 0:
+        out["stack"] = {
+            f"pos{i}": stackit(_layer_cache(cfg, m, batch, seq, None),
+                               cfg.n_periods)
+            for i, (m, _) in enumerate(cfg.period_pattern)
+        }
+    for j in range(cfg.tail):
+        m, _ = cfg.period_pattern[j]
+        out[f"tail{j}"] = _layer_cache(cfg, m, batch, seq, None)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq: int) -> Dict[str, Any]:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_struct(cfg, batch, seq))
+
+
+def cache_pspec(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    """PartitionSpec tree for the cache: batch over batch_axes when it can
+    shard, sequence over seq_axes (flash-decoding), states over model."""
+    def one(s: jax.ShapeDtypeStruct):
+        nd = len(s.shape)
+        if nd >= 4 and s.shape[-3] > 1 and s.dtype != jnp.float32:
+            # stacked kv cache (n_periods, B, S, Hk, D) or (B, S, Hk, D)
+            lead = (None,) * (nd - 4)
+            return P(*lead, cfg.batch_axes or None,
+                     cfg.seq_axes or None, None, None)
+        return P(*([None] * nd))
+    return jax.tree.map(one, cache_struct(cfg, batch, 8))
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _apply_mixer(cfg: ModelConfig, kind: str, p, h, positions, cache, pos):
+    """Returns (out, new_cache)."""
+    if kind in ("attn", "attn_local", "attn_bidir"):
+        mask_kind = {"attn": "causal", "attn_local": "window",
+                     "attn_bidir": "bidir"}[kind]
+        out, new = attention.attention_block(
+            p, h, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, mask_kind=mask_kind, window=cfg.window,
+            rope_theta=cfg.rope_theta, rotary_frac=cfg.rotary_frac,
+            dtype=cfg.dtype, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+            cache=cache, cache_pos=pos)
+        return out, new
+    if kind == "mamba":
+        state = None if cache is None else ssm.SSMState(cache["conv"], cache["ssm"])
+        out, new = ssm.mamba_mixer(p, h, d_inner=cfg.d_inner,
+                                   d_state=cfg.ssm_d_state, d_conv=cfg.ssm_d_conv,
+                                   dt_rank=cfg.dt_rank, dtype=cfg.dtype,
+                                   chunk=cfg.ssm_chunk, state=state)
+        return out, {"conv": new.conv, "ssm": new.ssm}
+    if kind == "rwkv":
+        state = None if cache is None else cache["wkv"]
+        carry = None if cache is None else cache["shift"]
+        out, s_end, new_carry = rwkv6.rwkv6_mixer(
+            p, h, n_heads=cfg.rwkv_heads, head_dim=cfg.rwkv_head_dim,
+            dtype=cfg.dtype, chunk=cfg.rwkv_chunk, state=state,
+            shift_carry=carry)
+        return out, {"wkv": s_end, "shift": new_carry}
+    raise ValueError(kind)
+
+
+def _apply_mlp(cfg: ModelConfig, kind: str, p, h, cache):
+    """Returns (out, aux_loss, new_cache_piece)."""
+    if kind == "dense":
+        return layers.glu_mlp(p, h, cfg.act, cfg.dtype), 0.0, None
+    if kind == "moe":
+        out, aux = moe_mod.moe_mlp(p, h, top_k=cfg.top_k, n_experts=cfg.n_experts,
+                                   act=cfg.act, dtype=cfg.dtype,
+                                   capacity_factor=cfg.moe_capacity_factor,
+                                   chunk=cfg.moe_chunk, impl=cfg.moe_impl,
+                                   pregather=cfg.moe_pregather)
+        return out, aux, None
+    if kind == "rwkv_cm":
+        b = h.shape[0]
+        carry = (jnp.zeros((b, 1, cfg.d_model), jnp.float32) if cache is None
+                 else cache["shift_ffn"])
+        out, new_carry = rwkv6.channel_mix(p, h, carry, cfg.dtype)
+        return out, 0.0, new_carry
+    raise ValueError(kind)
+
+
+def _layer(cfg: ModelConfig, mixer: str, mlp: str, p, h, positions,
+           cache, pos):
+    """Pre-norm residual layer.  Returns (h, aux, new_cache)."""
+    mixed, new_cache = _apply_mixer(cfg, mixer, p["mixer"],
+                                    layers.apply_norm(cfg.norm, h, p["norm1"]),
+                                    positions, cache, pos)
+    h = _constrain(cfg, h + mixed)
+    out, aux, cm_carry = _apply_mlp(cfg, mlp, p["mlp"],
+                                    layers.apply_norm(cfg.norm, h, p["norm2"]),
+                                    cache)
+    if cm_carry is not None and new_cache is not None:
+        new_cache["shift_ffn"] = cm_carry
+    return _constrain(cfg, h + out), aux, new_cache
+
+
+def _embed_in(cfg: ModelConfig, params, x: Array) -> Array:
+    if cfg.input_kind == "tokens":
+        h = jnp.take(params["embed"]["tok"], x, axis=0).astype(cfg.dtype)
+        if cfg.tie_embeddings:
+            h = h * jnp.asarray(cfg.d_model ** 0.5, cfg.dtype)  # gemma-style
+        return h
+    return layers.linear(x.astype(cfg.dtype), params["frontend"]["proj"],
+                         cfg.dtype)
+
+
+def backbone(cfg: ModelConfig, params, x: Array, positions: Array,
+             cache: Optional[Dict] = None, pos: Optional[Array] = None,
+             collect_cache: bool = False
+             ) -> Tuple[Array, Array, Optional[Dict]]:
+    """-> (hidden (B, T, d), aux_loss, new_cache).
+
+    cache=None + collect_cache=True is the prefill path: per-layer states
+    (full-sequence kv / end states) are captured and stacked by the scan.
+    """
+    h = _constrain(cfg, _embed_in(cfg, params, x))
+    aux_total = jnp.float32(0.0)
+    decoding = cache is not None
+    collect = decoding or collect_cache
+    new_cache: Optional[Dict] = {} if collect else None
+
+    if cfg.n_periods > 0:
+        def period_body(carry, xs):
+            h, aux = carry
+            if decoding:
+                pp, cc = xs
+            else:
+                pp, cc = xs, {f"pos{i}": None for i in range(cfg.period)}
+            new_cc = {}
+            for i, (m, f) in enumerate(cfg.period_pattern):
+                h, a, nc = _layer(cfg, m, f, pp[f"pos{i}"], h, positions,
+                                  cc[f"pos{i}"], pos)
+                new_cc[f"pos{i}"] = nc
+                aux = aux + a
+            return (h, aux), (new_cc if collect else None)
+
+        body = period_body
+        if cfg.remat and not collect:
+            body = jax.checkpoint(period_body)
+        xs = (params["stack"], cache["stack"]) if decoding else params["stack"]
+        (h, aux_total), stack_cache = jax.lax.scan(body, (h, aux_total), xs)
+        if collect:
+            new_cache["stack"] = stack_cache
+
+    for j in range(cfg.tail):
+        m, f = cfg.period_pattern[j]
+        cc = cache[f"tail{j}"] if decoding else None
+        h, a, nc = _layer(cfg, m, f, params[f"tail{j}"], h, positions, cc, pos)
+        aux_total = aux_total + a
+        if collect:
+            new_cache[f"tail{j}"] = nc
+
+    h = layers.apply_norm(cfg.norm, h, params["final_norm"])
+    return h, aux_total, new_cache
+
+
+def _head_matrix(cfg: ModelConfig, params) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"]["tok"].T
+    return params["lm_head"]["w"]
+
+
+def logits_fn(cfg: ModelConfig, params, h: Array) -> Array:
+    """Unchunked logits — only for tiny smoke shapes / last-position decode."""
+    return layers.linear(h, _head_matrix(cfg, params), cfg.dtype).astype(jnp.float32)
+
+
+def chunked_ce(cfg: ModelConfig, params, h: Array, labels: Array,
+               mask: Optional[Array] = None) -> Array:
+    """Cross-entropy without materializing (T, vocab).  h (B, T, d)."""
+    b, t, d = h.shape
+    w = _head_matrix(cfg, params)
+    chunk = min(cfg.ce_chunk, t)
+    n_chunks = -(-t // chunk)
+    pad = n_chunks * chunk - t
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0))) if pad else h
+    lp = jnp.pad(labels, ((0, 0), (0, pad))) if pad else labels
+    mp = (jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None
+          else jnp.pad(jnp.ones((b, t), jnp.float32), ((0, 0), (0, pad)))
+          if pad else (mask if mask is not None else jnp.ones((b, t), jnp.float32)))
+    hc = hp.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = lp.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    mc = mp.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        loss_sum, count = carry
+        hi, li, mi = xs
+        logit = jax.lax.dot_general(
+            hi.astype(cfg.dtype), w.astype(cfg.dtype),
+            (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logit, axis=-1)                    # (B, c)
+        gold = jnp.take_along_axis(logit, li[..., None], axis=-1)[..., 0]
+        loss_sum = loss_sum + jnp.sum((lse - gold) * mi)
+        return (loss_sum + 0.0, count + jnp.sum(mi)), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc, mc))
+    return loss_sum / jnp.maximum(count, 1.0)
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, params, batch: Dict[str, Array]) -> Array:
+    """batch: {"inputs": (B,T) int or (B,T,df) float, "labels": (B,T) int,
+    optional "mask": (B,T)}."""
+    x = batch["inputs"]
+    b, t = batch["labels"].shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    h, aux, _ = backbone(cfg, params, x, positions)
+    ce = chunked_ce(cfg, params, h, batch["labels"], batch.get("mask"))
+    return ce + cfg.aux_loss_weight * aux
+
+
+def prefill(cfg: ModelConfig, params, x: Array
+            ) -> Tuple[Array, Dict[str, Any]]:
+    """Prefill pass: returns (last-position logits (B, vocab), cache).
+
+    The returned attention caches have length T (the prompt); the serve
+    layer pads them to the generation budget before decode_step."""
+    b, t = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    h, _, new_cache = backbone(cfg, params, x, positions, collect_cache=True)
+    logits = layers.linear(h[:, -1:], _head_matrix(cfg, params),
+                           cfg.dtype).astype(jnp.float32)[:, 0]
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token: Array, cache: Dict[str, Any],
+                pos: Array) -> Tuple[Array, Dict[str, Any]]:
+    """token (B, 1) (or (B, 1, df) for embed frontends); pos () int32."""
+    b = token.shape[0]
+    positions = jnp.broadcast_to(pos.astype(jnp.int32).reshape(1, 1), (b, 1))
+    h, _, new_cache = backbone(cfg, params, token, positions, cache=cache,
+                               pos=pos)
+    logits = layers.linear(h[:, -1], _head_matrix(cfg, params),
+                           cfg.dtype).astype(jnp.float32)
+    return logits, new_cache
+
+
+def encode(cfg: ModelConfig, params, x: Array) -> Array:
+    """Encoder-only (hubert): full-sequence logits via chunk-free head on
+    pooled classes (vocab is small: 504)."""
+    b, t = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    h, _, _ = backbone(cfg, params, x, positions)
+    return logits_fn(cfg, params, h)

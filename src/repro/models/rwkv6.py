@@ -1,0 +1,221 @@
+"""RWKV-6 "Finch" mixer: linear attention with data-dependent decay.
+
+Per head (dim K): state S (K, V) evolves as
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = (r_t (S_{t-1} + diag(u) k_t^T v_t))          (bonus u on current)
+
+with w_t = exp(-exp(ww + lora_w(x_t))) in (0, 1) data-dependent decay —
+the arch pool's "Finch — data-dependent decay".  Attention-free: O(1)
+state per head, so `long_500k` decode runs (the reason this arch keeps
+that shape).
+
+Chunked training form: within a chunk of Q steps the contribution of
+earlier chunks is  r_t (prod_{chunk} w) ... handled by carrying S between
+chunks (lax.scan) and computing within-chunk interactions with cumulative
+decay products — O(T/Q) sequential steps, matmul-shaped work inside.
+
+Token-shift ("time-mix") follows RWKV: each block input is a learned lerp
+of x_t and x_{t-1}; the shift carry is part of the decode state.
+
+Simplifications vs the reference CUDA kernel (recorded in DESIGN.md):
+data-dependent token-shift LoRAs are collapsed to static mix vectors, and
+gate/receptance LoRA ranks are folded into dense projections.  The state
+recurrence — the part that defines the architecture class — is exact.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import ParamSpec, Template
+
+Array = jax.Array
+
+
+class RWKVState(NamedTuple):
+    shift: Array    # (B, 1, d) previous token (time-mix carry)
+    wkv: Array      # (B, H, K, V) f32 linear-attention state
+    shift_ffn: Array  # (B, 1, d) channel-mix carry
+
+
+def rwkv6_template(d: int, n_heads: int, head_dim: int, dtype,
+                   fsdp: bool, decay_lora: int = 64) -> Template:
+    dax = "data" if fsdp else None
+    hd = n_heads * head_dim
+    return {
+        "mix_r": ParamSpec((d,), jnp.float32, P(None), "ones", 0.5),
+        "mix_k": ParamSpec((d,), jnp.float32, P(None), "ones", 0.5),
+        "mix_v": ParamSpec((d,), jnp.float32, P(None), "ones", 0.5),
+        "mix_w": ParamSpec((d,), jnp.float32, P(None), "ones", 0.5),
+        "mix_g": ParamSpec((d,), jnp.float32, P(None), "ones", 0.5),
+        "wr": ParamSpec((d, hd), dtype, P(dax, "model"), "fan_in"),
+        "wk": ParamSpec((d, hd), dtype, P(dax, "model"), "fan_in"),
+        "wv": ParamSpec((d, hd), dtype, P(dax, "model"), "fan_in"),
+        "wg": ParamSpec((d, hd), dtype, P(dax, "model"), "fan_in"),
+        "wo": ParamSpec((hd, d), dtype, P("model", dax), "fan_in"),
+        # data-dependent decay: w_t = exp(-exp(ww + (x W_a) W_b))
+        "ww": ParamSpec((hd,), jnp.float32, P("model"), "normal", 0.5),
+        "w_lora_a": ParamSpec((d, decay_lora), dtype, P(dax, None), "fan_in"),
+        "w_lora_b": ParamSpec((decay_lora, hd), dtype, P(None, "model"), "fan_in", 0.1),
+        "u_bonus": ParamSpec((n_heads, head_dim), jnp.float32, P("model", None),
+                             "normal", 0.5),
+        "ln_x_w": ParamSpec((hd,), jnp.float32, P("model"), "ones"),
+    }
+
+
+def channel_mix_template(d: int, ff: int, dtype, fsdp: bool) -> Template:
+    dax = "data" if fsdp else None
+    return {
+        "mix_k": ParamSpec((d,), jnp.float32, P(None), "ones", 0.5),
+        "wk": ParamSpec((d, ff), dtype, P(dax, "model"), "fan_in"),
+        "wv": ParamSpec((ff, d), dtype, P("model", dax), "fan_in"),
+    }
+
+
+def _token_shift(x: Array, carry: Array) -> Tuple[Array, Array]:
+    """x (B, T, d) -> previous-token tensor, new carry (last token)."""
+    prev = jnp.concatenate([carry.astype(x.dtype), x[:, :-1]], axis=1)
+    return prev, x[:, -1:].astype(jnp.float32)
+
+
+def _wkv_chunk(r: Array, k: Array, v: Array, w: Array, u: Array,
+               s0: Array) -> Tuple[Array, Array]:
+    """One chunk of the RWKV6 recurrence.
+
+    r/k/w (B, H, Q, K); v (B, H, Q, V); u (H, K); s0 (B, H, K, V) f32.
+    Returns (o (B, H, Q, V), s_end).
+
+    Derivation: with cumulative decay D_t = prod_{i<=t} w_i,
+      contribution of state:     r_t D_t S_0
+      intra-chunk (j < t):       r_t (D_t / D_j) k_j^T v_j
+      current-token bonus:       (r_t u k_t) v_t
+    Products are stabilized in log space (w in (0,1) => log w < 0).
+    """
+    bh, q = r.shape[:2], r.shape[2]
+    logw = jnp.log(jnp.maximum(w, 1e-12))                  # (B, H, Q, K)
+    lcum = jnp.cumsum(logw, axis=2)                        # D_t (inclusive)
+    d_in = jnp.exp(lcum - logw)                            # D_t / w_t = prod_{i<t}
+    r_dec = r * d_in                                       # r_t prod_{i<t} w_i
+    o_state = jnp.einsum("bhqk,bhkv->bhqv", r_dec, s0,
+                         preferred_element_type=jnp.float32)
+
+    # intra-chunk: A[t, j] = r_t . (k_j * D_{t-1}/D_j) for j < t
+    k_dec = k * jnp.exp(-lcum)                             # k_j / D_j
+    att = jnp.einsum("bhqk,bhjk->bhqj", r_dec, k_dec,
+                     preferred_element_type=jnp.float32)
+    tri = jnp.tril(jnp.ones((q, q), jnp.float32), k=-1)    # strictly lower
+    att = att * tri
+    o_intra = jnp.einsum("bhqj,bhjv->bhqv", att, v,
+                         preferred_element_type=jnp.float32)
+
+    # current-token bonus
+    o_bonus = jnp.einsum("bhqk,bhqk,bhqv->bhqv", r, u[None, :, None, :] * k,
+                         jnp.ones_like(v),
+                         preferred_element_type=jnp.float32) if False else (
+        jnp.sum(r * u[None, :, None, :] * k, axis=-1, keepdims=True) * v)
+
+    # state update: S_end = D_Q S_0 + sum_j (D_Q / D_j) k_j^T v_j
+    d_total = jnp.exp(lcum[:, :, -1])                      # (B, H, K)
+    s_end = d_total[..., None] * s0 + jnp.einsum(
+        "bhjk,bhjv->bhkv", k_dec * d_total[:, :, None, :], v,
+        preferred_element_type=jnp.float32)
+    return o_state + o_intra + o_bonus, s_end
+
+
+def rwkv6_mixer(
+    p: Dict[str, Array],
+    x: Array,                      # (B, T, d)
+    *,
+    n_heads: int,
+    head_dim: int,
+    dtype=jnp.bfloat16,
+    chunk: int = 128,
+    state: Optional[RWKVState] = None,
+    shift_carry: Optional[Array] = None,
+) -> Tuple[Array, Array, Array]:
+    """Returns (out (B, T, d), wkv_state (B, H, K, V), shift_carry (B, 1, d))."""
+    b, t, d = x.shape
+    h, kd = n_heads, head_dim
+
+    if state is None:
+        carry = jnp.zeros((b, 1, d), jnp.float32)
+        s0 = jnp.zeros((b, h, kd, kd), jnp.float32)
+    else:
+        carry, s0 = shift_carry, state
+
+    prev, new_carry = _token_shift(x, carry)
+
+    def mixed(mv):
+        return x * mv.astype(x.dtype) + prev * (1.0 - mv).astype(x.dtype)
+
+    xf = x.astype(jnp.float32)
+    r = layers.linear(mixed(p["mix_r"]), p["wr"], dtype)
+    k = layers.linear(mixed(p["mix_k"]), p["wk"], dtype)
+    v = layers.linear(mixed(p["mix_v"]), p["wv"], dtype)
+    g = layers.linear(mixed(p["mix_g"]), p["wg"], dtype)
+    w_in = layers.linear(mixed(p["mix_w"]), p["w_lora_a"], dtype)
+    w_log = p["ww"] + layers.linear(jnp.tanh(w_in.astype(jnp.float32)).astype(dtype),
+                                    p["w_lora_b"], dtype).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_log))                            # (B, T, H*K) in (0,1)
+
+    def heads(z):
+        return z.astype(jnp.float32).reshape(b, t, h, kd).transpose(0, 2, 1, 3)
+
+    rh, kh, vh, wh = heads(r), heads(k), heads(v), heads(w)
+    u = p["u_bonus"]
+
+    if t == 1:
+        # decode: o = r (S + u k^T v); S' = diag(w) S + k^T v
+        kv = kh[:, :, 0, :, None] * vh[:, :, 0, None, :]     # (B, H, K, V)
+        o = jnp.einsum("bhk,bhkv->bhv", rh[:, :, 0],
+                       s0 + u[None, :, :, None] * kv,
+                       preferred_element_type=jnp.float32)[:, :, None]
+        s_end = wh[:, :, 0, :, None] * s0 + kv
+        o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * kd)
+    else:
+        q = min(chunk, t)
+        n_chunks = -(-t // q)
+        pad = n_chunks * q - t
+        if pad:
+            padw = ((0, 0), (0, 0), (0, pad), (0, 0))
+            rh, kh, vh = (jnp.pad(z, padw) for z in (rh, kh, vh))
+            wh = jnp.pad(wh, padw, constant_values=1.0)      # decay 1 = inert
+
+        # chunk-level remat: backward recomputes the intra-chunk (Q, Q)
+        # interaction matrices instead of keeping all chunks' alive
+        @jax.checkpoint
+        def body(s, xs_):
+            rq, kq, vq, wq = xs_
+            o, s_end = _wkv_chunk(rq, kq, vq, wq, u, s)
+            return s_end, o
+
+        def to_chunks(z):
+            return z.reshape(b, h, n_chunks, q, kd).transpose(2, 0, 1, 3, 4)
+
+        s_end, os = jax.lax.scan(body, s0, (to_chunks(rh), to_chunks(kh),
+                                            to_chunks(vh), to_chunks(wh)))
+        o = os.transpose(1, 2, 0, 3, 4).reshape(b, h, n_chunks * q, kd)[:, :, :t]
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, h * kd)
+
+    # per-head group norm (ln_x) + silu gate
+    of = o.reshape(b, -1, h, kd)
+    mu = jnp.mean(of, axis=-1, keepdims=True)
+    var = jnp.var(of, axis=-1, keepdims=True)
+    of = (of - mu) * jax.lax.rsqrt(var + 1e-5)
+    o = (of.reshape(b, -1, h * kd) * p["ln_x_w"]).astype(dtype)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(dtype)
+    return layers.linear(o, p["wo"], dtype), s_end, new_carry
+
+
+def channel_mix(p: Dict[str, Array], x: Array, carry: Array, dtype
+                ) -> Tuple[Array, Array]:
+    """RWKV FFN: squared-relu with token shift.  Returns (out, new carry)."""
+    prev, new_carry = _token_shift(x, carry)
+    xk = x * p["mix_k"].astype(x.dtype) + prev * (1.0 - p["mix_k"]).astype(x.dtype)
+    hidden = layers.act_fn("relu2", layers.linear(xk, p["wk"], dtype))
+    return layers.linear(hidden, p["wv"], dtype), new_carry

@@ -1,0 +1,161 @@
+"""Mamba(1) selective-state-space mixer, chunked for TPU memory.
+
+The selective scan h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t is a diagonal
+per-(channel, state) linear recurrence.  A full-sequence associative scan
+would materialize (B, T, D_inner, N) state history — 30+ GB at train_4k —
+so we scan over chunks of ``chunk`` steps: the carry is one (B, D_inner, N)
+state, and only the within-chunk history (B, chunk, D_inner, N) is ever
+live.  Decode is the exact same recurrence with T == 1: an O(1)-state step
+(the SSM's whole point for `long_500k`).
+
+Sharding: d_inner is the TP axis ('model'); the state dim N is tiny (16)
+and replicated.  The depthwise conv is causal with a (d_conv - 1) carry so
+chunking does not change results.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers
+from repro.models.layers import ParamSpec, Template
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    conv: Array   # (B, d_conv - 1, d_inner) rolling conv inputs
+    ssm: Array    # (B, d_inner, N) f32 recurrent state
+
+
+def mamba_template(d: int, d_inner: int, d_state: int, d_conv: int,
+                   dt_rank: int, dtype, fsdp: bool) -> Template:
+    dax = "data" if fsdp else None
+    return {
+        "in_proj": ParamSpec((d, 2 * d_inner), dtype, P(dax, "model"), "fan_in"),
+        "conv_w": ParamSpec((d_conv, d_inner), jnp.float32, P(None, "model"), "normal", 0.2),
+        "conv_b": ParamSpec((d_inner,), jnp.float32, P("model"), "zeros"),
+        "x_proj": ParamSpec((d_inner, dt_rank + 2 * d_state), dtype,
+                            P("model", None), "fan_in"),
+        "dt_proj_w": ParamSpec((dt_rank, d_inner), jnp.float32, P(None, "model"),
+                               "fan_in"),
+        "dt_proj_b": ParamSpec((d_inner,), jnp.float32, P("model"), "ones", 0.01),
+        "a_log": ParamSpec((d_inner, d_state), jnp.float32, P("model", None),
+                           "normal", 0.5),
+        "d_skip": ParamSpec((d_inner,), jnp.float32, P("model"), "ones"),
+        "out_proj": ParamSpec((d_inner, d), dtype, P("model", dax), "fan_in"),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array, carry: Array) -> Tuple[Array, Array]:
+    """Depthwise causal conv1d.  x (B, T, D); w (K, D); carry (B, K-1, D)."""
+    k = w.shape[0]
+    xin = jnp.concatenate([carry.astype(x.dtype), x], axis=1)   # (B, K-1+T, D)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xin[:, i: i + x.shape[1]].astype(jnp.float32) * w[i]
+    new_carry = xin[:, -(k - 1):] if k > 1 else xin[:, :0]
+    return (out + b).astype(x.dtype), new_carry.astype(jnp.float32)
+
+
+def _ssm_chunk(xz: Array, dt: Array, b_t: Array, c_t: Array, a: Array,
+               h0: Array) -> Tuple[Array, Array]:
+    """One chunk of the selective scan via associative_scan.
+
+    xz (B, Q, D) conv'd input; dt (B, Q, D); b_t/c_t (B, Q, N); a (D, N);
+    h0 (B, D, N).  Returns (y (B, Q, D), h_end).
+    """
+    da = jnp.exp(dt[..., None] * a)                       # (B, Q, D, N) decay
+    dbx = (dt * xz)[..., None] * b_t[:, :, None, :]       # (B, Q, D, N) input
+
+    # prepend h0 as step 0 with decay 1, then scan the composition
+    # (a2, b2) o (a1, b1) = (a1 a2, a2 b1 + b2)
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    ones = jnp.ones_like(h0)[:, None]                     # (B, 1, D, N)
+    a_all = jnp.concatenate([ones, da], axis=1)
+    b_all = jnp.concatenate([h0[:, None], dbx], axis=1)
+    _, h_hist = jax.lax.associative_scan(combine, (a_all, b_all), axis=1)
+    h_hist = h_hist[:, 1:]                                # (B, Q, D, N)
+    y = jnp.einsum("bqdn,bqn->bqd", h_hist, c_t,
+                   preferred_element_type=jnp.float32)
+    return y, h_hist[:, -1]
+
+
+def mamba_mixer(
+    p: Dict[str, Array],
+    x: Array,                       # (B, T, d)
+    *,
+    d_inner: int,
+    d_state: int,
+    d_conv: int,
+    dt_rank: int,
+    dtype=jnp.bfloat16,
+    chunk: int = 256,
+    state: Optional[SSMState] = None,
+) -> Tuple[Array, SSMState]:
+    """Returns (out (B, T, d), end state).  Pass ``state`` for decode."""
+    b, t, _ = x.shape
+    xz = layers.linear(x, p["in_proj"], dtype)            # (B, T, 2*D)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    if state is None:
+        conv_carry = jnp.zeros((b, d_conv - 1, d_inner), jnp.float32)
+        h0 = jnp.zeros((b, d_inner, d_state), jnp.float32)
+    else:
+        conv_carry, h0 = state.conv, state.ssm
+
+    xs, conv_carry = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_carry)
+    xs = jax.nn.silu(xs.astype(jnp.float32)).astype(dtype)
+
+    proj = layers.linear(xs, p["x_proj"], dtype).astype(jnp.float32)
+    dt_in, b_t, c_t = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj_w"] + p["dt_proj_b"])   # (B, T, D)
+    a = -jnp.exp(p["a_log"])                                         # (D, N)
+    xf = xs.astype(jnp.float32)
+
+    if t == 1:
+        # decode: closed-form single step
+        da = jnp.exp(dt[:, 0, :, None] * a)                          # (B, D, N)
+        h = da * h0 + (dt[:, 0] * xf[:, 0])[..., None] * b_t[:, 0, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t[:, 0],
+                       preferred_element_type=jnp.float32)[:, None]
+        h_end = h
+    else:
+        q = min(chunk, t)
+        n_chunks = -(-t // q)
+        pad = n_chunks * q - t
+        if pad:
+            xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_t = jnp.pad(b_t, ((0, 0), (0, pad), (0, 0)))
+            c_t = jnp.pad(c_t, ((0, 0), (0, pad), (0, 0)))
+
+        # chunk-level remat: without it, backward keeps every chunk's
+        # (B, Q, D, N) state history alive at once (~17 GB/layer at
+        # train_4k) — recomputing h_hist per chunk caps the live set at
+        # one chunk.
+        @jax.checkpoint
+        def body(h, xs_):
+            xq, dtq, bq, cq = xs_
+            y, h_end = _ssm_chunk(xq, dtq, bq, cq, a, h)
+            return h_end, y
+
+        xs_c = (xf.reshape(b, n_chunks, q, d_inner).transpose(1, 0, 2, 3),
+                dt.reshape(b, n_chunks, q, d_inner).transpose(1, 0, 2, 3),
+                b_t.reshape(b, n_chunks, q, d_state).transpose(1, 0, 2, 3),
+                c_t.reshape(b, n_chunks, q, d_state).transpose(1, 0, 2, 3))
+        h_end, ys = jax.lax.scan(body, h0, xs_c)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, n_chunks * q, d_inner)[:, :t]
+
+    y = y + xf[:, :t if t > 1 else 1] * p["d_skip"]
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = layers.linear(y.astype(dtype), p["out_proj"], dtype)
+    return out, SSMState(conv=conv_carry, ssm=h_end)

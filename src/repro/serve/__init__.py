@@ -1,0 +1,4 @@
+from repro.serve.kv_cache import pad_cache, cache_bytes
+from repro.serve.engine import generate, serve_step
+
+__all__ = ["pad_cache", "cache_bytes", "generate", "serve_step"]

@@ -1,0 +1,77 @@
+"""Serving engine: batched prefill + autoregressive decode.
+
+``serve_step`` is the unit the decode/long-context dry-run shapes lower:
+one new token against a full cache.  ``generate`` is the host-side loop
+used by the examples (greedy / temperature sampling), with continuous
+batching via a per-row "done" mask.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_mod
+from repro.models.model import ModelConfig
+from repro.serve.kv_cache import pad_cache
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def serve_step(cfg: ModelConfig, params, token: Array, cache: Dict[str, Any],
+               pos: Array) -> Tuple[Array, Dict[str, Any]]:
+    """One decode step: token (B, 1) -> (logits (B, vocab), new cache)."""
+    return model_mod.decode_step(cfg, params, token, cache, pos)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def prefill_step(cfg: ModelConfig, params, tokens: Array
+                 ) -> Tuple[Array, Dict[str, Any]]:
+    return model_mod.prefill(cfg, params, tokens)
+
+
+def _sample(logits: Array, key: Array, temperature: float) -> Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(
+    cfg: ModelConfig,
+    params,
+    prompt: Array,                 # (B, T_prompt) int32
+    max_new_tokens: int,
+    temperature: float = 0.0,
+    eos_id: Optional[int] = None,
+    seed: int = 0,
+) -> Array:
+    """Greedy/sampled generation.  Returns (B, T_prompt + max_new_tokens)."""
+    b, t0 = prompt.shape
+    budget = t0 + max_new_tokens
+    logits, cache = prefill_step(cfg, params, prompt)
+    cache = pad_cache(cfg, cache, budget)
+
+    key = jax.random.PRNGKey(seed)
+    tokens = [prompt]
+    done = jnp.zeros((b,), bool)
+    cur = _sample(logits, key, temperature).astype(jnp.int32)
+
+    for step in range(max_new_tokens):
+        if eos_id is not None:
+            done = done | (cur == eos_id)
+            cur = jnp.where(done, eos_id if eos_id is not None else 0, cur)
+        tokens.append(cur[:, None])
+        if step == max_new_tokens - 1:
+            break
+        key, sk = jax.random.split(key)
+        logits, cache = serve_step(cfg, params, cur[:, None], cache,
+                                   jnp.int32(t0 + step))
+        cur = _sample(logits, sk, temperature).astype(jnp.int32)
+        if eos_id is not None and bool(done.all()):
+            tokens.append(jnp.full((b, max_new_tokens - step - 1), eos_id,
+                                   jnp.int32))
+            break
+    return jnp.concatenate(tokens, axis=1)[:, :budget]

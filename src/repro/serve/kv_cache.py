@@ -1,0 +1,83 @@
+"""KV-cache utilities: prefill-cache padding, ring-buffer semantics, sizing.
+
+Cache layout (see repro.models.model.cache_struct):
+  {"stack": {"pos<i>": {leafs stacked over n_periods}}, "tail<j>": {...}}
+  attention leafs "k"/"v": (..., B, S, Hk, D); ssm/rwkv leafs are O(1)
+  recurrent states that never grow with S.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import ModelConfig
+
+Array = jax.Array
+
+
+def _quantize_kv(leaf: Array):
+    """bf16 kv -> (int8, per-(token, head) f32 scale)."""
+    sc = jnp.max(jnp.abs(leaf.astype(jnp.float32)), axis=-1,
+                 keepdims=True) / 127.0
+    sc = jnp.maximum(sc, 1e-10)
+    q8 = jnp.clip(jnp.round(leaf.astype(jnp.float32) / sc),
+                  -127, 127).astype(jnp.int8)
+    return q8, sc
+
+
+def _pad_layer_cache(piece: Dict[str, Any], target_len: int,
+                     quantize: bool) -> Dict[str, Any]:
+    out = {}
+    for name, leaf in piece.items():
+        if name in ("k", "v"):
+            if quantize and leaf.dtype != jnp.int8:
+                leaf, sc = _quantize_kv(leaf)
+                out[name + "_scale"] = sc
+            seq_axis = leaf.ndim - 3
+            cur = leaf.shape[seq_axis]
+            if cur < target_len:
+                widths = [(0, 0)] * leaf.ndim
+                widths[seq_axis] = (0, target_len - cur)
+                leaf = jnp.pad(leaf, widths)
+        out[name] = leaf
+    # pad the scales to match
+    for name in ("k_scale", "v_scale"):
+        if name in out:
+            leaf = out[name]
+            seq_axis = leaf.ndim - 3
+            cur = leaf.shape[seq_axis]
+            if cur < target_len:
+                widths = [(0, 0)] * leaf.ndim
+                widths[seq_axis] = (0, target_len - cur)
+                out[name] = jnp.pad(leaf, widths, constant_values=1e-10)
+    return out
+
+
+def pad_cache(cfg: ModelConfig, cache: Dict[str, Any], target_len: int
+              ) -> Dict[str, Any]:
+    """Right-pad every attention kv cache to ``target_len`` slots (and
+    quantize prefill kv when the config serves an int8 cache).
+
+    Padded slots are masked in decode (never-written ring positions), so
+    prefill(T) + pad(S) + decode at pos=T is exact.
+    """
+    quant = cfg.kv_cache_dtype == "int8"
+    out: Dict[str, Any] = {}
+    for key, piece in cache.items():
+        if key == "stack":
+            out["stack"] = {p: _pad_layer_cache(lc, target_len, quant)
+                            for p, lc in piece.items()}
+        else:
+            out[key] = _pad_layer_cache(piece, target_len, quant)
+    return out
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, seq: int) -> int:
+    """Total decode-state bytes (capacity planning / roofline memory term)."""
+    from repro.models.model import cache_struct
+    tree = cache_struct(cfg, batch, seq)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(tree))

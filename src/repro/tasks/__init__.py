@@ -1,0 +1,3 @@
+from repro.tasks.builder import TaskSet, make_tasks
+
+__all__ = ["TaskSet", "make_tasks"]

@@ -1,0 +1,3 @@
+from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+
+__all__ = ["LiquidSVM", "SVMTrainerConfig"]

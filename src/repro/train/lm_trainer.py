@@ -1,0 +1,142 @@
+"""LM training loop: jit'd step + grad accumulation + checkpoint/resume.
+
+Scale posture (the parts that transfer to 1000+ nodes):
+  * one compiled train_step under the mesh; all distribution comes from
+    param/batch shardings (pjit/SPMD), so the same loop runs 1 or 512 chips;
+  * microbatch grad accumulation via lax.scan — the per-microbatch
+    backward overlaps with the previous microbatch's gradient all-reduce
+    under XLA's async collectives (the compute/comm overlap trick);
+  * checkpoint every N steps, atomic, with deterministic data replay
+    (batch = f(seed, step)), so preemption costs at most N steps;
+  * straggler story: static balanced shapes (no dynamic work), plus
+    restart-from-checkpoint on failed hosts — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as model_mod
+from repro.models.model import ModelConfig
+from repro.train import checkpoint as ckpt_mod
+from repro.train.optimizer import OptConfig, OptState, adamw_step, init_opt_state
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoopConfig:
+    total_steps: int = 100
+    grad_accum: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_last: int = 3
+    log_every: int = 10
+
+
+def make_train_step(model_cfg: ModelConfig, opt_cfg: OptConfig,
+                    grad_accum: int = 1) -> Callable:
+    """Builds the jit-able (params, opt_state, batch) -> (params, opt, metrics).
+
+    With grad_accum > 1, the batch leading dim is (accum * micro_batch) and
+    microbatches are scanned; gradients average across microbatches.
+    """
+
+    def loss(params, batch):
+        return model_mod.loss_fn(model_cfg, params, batch)
+
+    def step(params, opt_state: OptState, batch: Dict[str, Array]):
+        if grad_accum == 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss)(params, mb)
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+
+            def split(x):
+                return x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                 + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: (g / grad_accum), gsum)
+            grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+            l = lsum / grad_accum
+        new_params, new_opt, metrics = adamw_step(grads, opt_state, opt_cfg)
+        metrics["loss"] = l
+        return new_params, new_opt, metrics
+
+    return step
+
+
+class Trainer:
+    """Host-side loop with fault tolerance."""
+
+    def __init__(self, model_cfg: ModelConfig, opt_cfg: OptConfig,
+                 loop_cfg: TrainLoopConfig, pipeline,
+                 param_shardings=None, mesh=None):
+        self.model_cfg = model_cfg
+        self.opt_cfg = opt_cfg
+        self.loop_cfg = loop_cfg
+        self.pipeline = pipeline
+        self.mesh = mesh
+        self.param_shardings = param_shardings
+        # no donation: compute params alias opt.master for f32 leaves (norm
+        # weights), and XLA rejects donating an aliased buffer twice.  At
+        # production scale, donate by keeping master strictly separate.
+        self._step_fn = jax.jit(make_train_step(model_cfg, opt_cfg,
+                                                loop_cfg.grad_accum))
+
+    def init_state(self, seed: int = 0):
+        from repro.models.layers import init_params
+        params = init_params(model_mod.build_template(self.model_cfg),
+                             jax.random.PRNGKey(seed))
+        if self.param_shardings is not None:
+            params = jax.tree.map(jax.device_put, params, self.param_shardings)
+        opt = init_opt_state(params, self.opt_cfg)
+        return params, opt
+
+    def restore_or_init(self, seed: int = 0):
+        lc = self.loop_cfg
+        params, opt = self.init_state(seed)
+        start = 0
+        if lc.ckpt_dir and ckpt_mod.latest_step(lc.ckpt_dir) is not None:
+            (params, opt), start, _ = ckpt_mod.restore_checkpoint(
+                lc.ckpt_dir, (params, opt))
+        return params, opt, start
+
+    def run(self, seed: int = 0, fail_at: Optional[int] = None
+            ) -> Dict[str, Any]:
+        """Train to total_steps; ``fail_at`` raises mid-run to exercise the
+        restart path in tests."""
+        lc = self.loop_cfg
+        params, opt, start = self.restore_or_init(seed)
+        history = []
+        t0 = time.time()
+        for step in range(start, lc.total_steps):
+            if fail_at is not None and step == fail_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            batch = self.pipeline.batch(step)
+            params, opt, metrics = self._step_fn(params, opt, batch)
+            if step % lc.log_every == 0 or step == lc.total_steps - 1:
+                history.append({"step": step,
+                                "loss": float(metrics["loss"]),
+                                "grad_norm": float(metrics["grad_norm"]),
+                                "lr": float(metrics["lr"])})
+            if lc.ckpt_dir and (step + 1) % lc.ckpt_every == 0:
+                ckpt_mod.save_checkpoint(lc.ckpt_dir, step + 1, (params, opt),
+                                         keep_last=lc.keep_last)
+        if lc.ckpt_dir:
+            ckpt_mod.save_checkpoint(lc.ckpt_dir, lc.total_steps, (params, opt),
+                                     keep_last=lc.keep_last)
+        return {"params": params, "opt": opt, "history": history,
+                "wall_s": time.time() - t0}

@@ -1,0 +1,125 @@
+"""AdamW with sharding-aware dtype policies + LR schedules.
+
+Policies (per-arch choice recorded in DESIGN.md §5):
+  "fp32"      — fp32 master copy + fp32 moments (default, <70B)
+  "bf16_mom"  — fp32 master + bf16 moments
+  "pure_bf16" — bf16 master + bf16 moments (>=200B to fit 16 GB/chip);
+                update math still runs in f32.
+
+The optimizer state is a pytree congruent with params, so the launcher
+shards it with the same NamedShardings (optimizer state lives wherever
+its parameter lives — ZeRO-style when fsdp_params shards over 'data').
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_POLICIES = {
+    "fp32": (jnp.float32, jnp.float32),
+    "bf16_mom": (jnp.float32, jnp.bfloat16),
+    "pure_bf16": (jnp.bfloat16, jnp.bfloat16),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    policy: str = "fp32"
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"     # cosine | linear | constant
+    min_lr_frac: float = 0.1
+
+
+class OptState(NamedTuple):
+    step: Array       # () int32
+    master: Any       # params in master dtype
+    m: Any
+    v: Any
+
+
+def init_opt_state(params, cfg: OptConfig) -> OptState:
+    mdt, sdt = _POLICIES[cfg.policy]
+    return OptState(
+        step=jnp.int32(0),
+        master=jax.tree.map(lambda p: p.astype(mdt), params),
+        m=jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+        v=jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+    )
+
+
+def schedule_lr(cfg: OptConfig, step: Array) -> Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        if cfg.schedule == "cosine":
+            decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+                1.0 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - (1 - cfg.min_lr_frac) * frac
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_step(grads, state: OptState, cfg: OptConfig
+               ) -> Tuple[Any, OptState, Dict[str, Array]]:
+    """Returns (new compute-dtype params, new state, metrics)."""
+    step = state.step + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mast, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * b1 + (1 - b1) * gf
+        vf = v.astype(jnp.float32) * b2 + (1 - b2) * gf * gf
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        wd = cfg.weight_decay if mast.ndim >= 2 else 0.0  # no decay on norms
+        new_master = mast.astype(jnp.float32) - lr * (u + wd * mast.astype(jnp.float32))
+        return new_master, mf, vf
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_ma = jax.tree.leaves(state.master)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new_master, new_m, new_v = [], [], []
+    for g, ma, m, v in zip(flat_g, flat_ma, flat_m, flat_v):
+        nm, mm, vv = upd(g, ma, m, v)
+        new_master.append(nm.astype(ma.dtype))
+        new_m.append(mm.astype(m.dtype))
+        new_v.append(vv.astype(v.dtype))
+
+    master = jax.tree.unflatten(treedef, new_master)
+    new_state = OptState(step=step, master=master,
+                         m=jax.tree.unflatten(treedef, new_m),
+                         v=jax.tree.unflatten(treedef, new_v))
+    # compute-dtype params come from the master copy
+    compute = jax.tree.map(lambda ma, g: ma.astype(g.dtype), master, grads)
+    metrics = {"lr": lr, "grad_norm": gnorm, "clip_scale": scale}
+    return compute, new_state, metrics

@@ -1,0 +1,214 @@
+"""The full liquidSVM application cycle: train -> select -> test, composing
+tasks x cells x CV-grid, with optional mesh sharding of the cell axis.
+
+This is the top-level estimator the examples and benchmarks use — the JAX
+equivalent of the package's `mcSVM(Y ~ ., d$train, ...)` entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.cells.builder import CellPlan, build_cells
+from repro.core import cv as cv_mod
+from repro.core import grids, kernel_fns
+from repro.data.scaling import Scaler
+from repro.distributed.cell_trainer import predict_cells, train_cells
+from repro.distributed.planner import PackedCells, pack_cells
+from repro.tasks.builder import TaskSet, combine_ava, combine_ova, make_tasks
+
+
+@dataclasses.dataclass(frozen=True)
+class SVMTrainerConfig:
+    scenario: str = "binary"        # binary | ova | ava | weighted | npsvm |
+                                    # quantile | expectile
+    solver: str = "auto"            # auto: hinge for classification, else ls/quantile/expectile
+    kernel: str = "gauss_rbf"
+    cell_method: str = "none"       # none | random | voronoi | overlap | recursive | coarse_fine
+    cell_size: int = 2000
+    n_folds: int = 5
+    fold_scheme: str = "random"
+    grid_choice: int = 0
+    adaptivity_control: int = 0
+    taus: Tuple[float, ...] = (0.05, 0.5, 0.95)
+    weights: Tuple[float, ...] = (1.0,)
+    np_alpha: float = 0.05          # npsvm: false-alarm budget on class -1
+    tol: float = 1e-3
+    max_iters: int = 1000
+    seed: int = 0
+
+    def resolve_solver(self) -> str:
+        if self.solver != "auto":
+            return self.solver
+        return {"binary": "hinge", "ova": "hinge", "ava": "hinge",
+                "weighted": "hinge", "npsvm": "hinge", "quantile": "quantile",
+                "expectile": "expectile"}[self.scenario]
+
+
+class LiquidSVM:
+    def __init__(self, config: SVMTrainerConfig = SVMTrainerConfig(),
+                 mesh: Optional[Mesh] = None,
+                 mesh_axes: Optional[Tuple[str, ...]] = None):
+        self.config = config
+        self.mesh = mesh
+        self.mesh_axes = mesh_axes
+        self._fitted = False
+
+    # ------------------------------------------------------------- train
+    def fit(self, x: np.ndarray, y: np.ndarray) -> "LiquidSVM":
+        cfg = self.config
+        x = np.asarray(x, np.float32)
+        self.scaler = Scaler.fit(x)
+        xs = self.scaler.transform(x)
+        n, d = xs.shape
+
+        scenario = "weighted" if cfg.scenario in ("weighted", "npsvm") \
+            else cfg.scenario
+        self.tasks: TaskSet = make_tasks(y, scenario, taus=cfg.taus,
+                                         weights=cfg.weights)
+
+        n_dev = 1
+        if self.mesh is not None and self.mesh_axes is not None:
+            n_dev = int(np.prod([self.mesh.shape[a] for a in self.mesh_axes]))
+        self.plan: CellPlan = build_cells(
+            xs, cell_size=cfg.cell_size, method=cfg.cell_method, seed=cfg.seed)
+        self.packed: PackedCells = pack_cells(self.plan, n_dev)
+
+        # ---- gather padded per-slot arrays (host)
+        k = self.plan.k_max
+        n_slots = self.packed.n_slots
+        t_count = self.tasks.n_tasks
+        x_cells = np.zeros((n_slots, k, d), np.float32)
+        mask_cells = np.zeros((n_slots, k), np.float32)
+        y_cells = np.zeros((n_slots, t_count, k), np.float32)
+        tmask_cells = np.zeros((n_slots, t_count, k), np.float32)
+        gam_cells = []
+        cv_cfg = cv_mod.CVConfig(
+            solver=cfg.resolve_solver(), kernel=cfg.kernel, n_folds=cfg.n_folds,
+            fold_scheme=cfg.fold_scheme, tol=cfg.tol, max_iters=cfg.max_iters,
+            taus=cfg.taus, weights=cfg.weights)
+
+        base_grid = grids.liquid_grid(n=k, dim=d, median_dist=1.0,
+                                      grid_choice=cfg.grid_choice,
+                                      cell_size=cfg.cell_size)
+        if cfg.adaptivity_control > 0:
+            base_grid = grids.adaptive_subgrid(base_grid, cfg.adaptivity_control)
+        for s, cid in enumerate(self.packed.order):
+            if cid < 0:
+                gam_cells.append(np.ones(len(base_grid.gammas), np.float32))
+                continue
+            ids = self.plan.indices[cid]
+            m = self.plan.mask[cid]
+            x_cells[s], mask_cells[s] = xs[ids], m
+            y_cells[s] = self.tasks.labels[:, ids] * m[None, :]
+            tmask_cells[s] = self.tasks.task_mask[:, ids] * m[None, :]
+            # per-cell adaptive gamma endpoints (paper: grid scaled per cell)
+            med = float(kernel_fns.median_heuristic(jnp.asarray(x_cells[s]),
+                                                    jnp.asarray(m)))
+            g = grids.liquid_grid(n=int(m.sum()), dim=d, median_dist=med,
+                                  grid_choice=cfg.grid_choice,
+                                  cell_size=cfg.cell_size)
+            if cfg.adaptivity_control > 0:
+                g = grids.adaptive_subgrid(g, cfg.adaptivity_control)
+            gam_cells.append(np.asarray(g.gammas))
+        gam_cells = np.stack(gam_cells).astype(np.float32)
+
+        lam_c, sub_c, task_c, n_lam, n_sub = cv_mod.grid_columns(
+            base_grid, cv_cfg, t_count)
+        keys = jax.random.split(jax.random.PRNGKey(cfg.seed), n_slots)
+
+        coefs, gamma, lam, tau, val = train_cells(
+            jnp.asarray(x_cells), jnp.asarray(y_cells), jnp.asarray(tmask_cells),
+            jnp.asarray(mask_cells), jnp.asarray(gam_cells), keys,
+            lam_c, sub_c, task_c, cv_cfg, n_lam, n_sub,
+            mesh=self.mesh, axis_names=self.mesh_axes)
+
+        self.cv_cfg = cv_cfg
+        self.x_cells, self.mask_cells = x_cells, mask_cells
+        self.coefs = np.asarray(coefs)      # (n_slots, k, T, S)
+        self.gamma = np.asarray(gamma)      # (n_slots, T, S)
+        self.lam, self.tau = np.asarray(lam), np.asarray(tau)
+        self.val_loss = np.asarray(val)
+        self._fitted = True
+
+        if cfg.scenario == "npsvm":
+            # Neyman-Pearson selection over the weight grid: best detection
+            # among weights whose (training-data) false alarm <= alpha
+            from repro.core.select import np_select_weight
+            dec = self.decision_function(x)          # (n, 1, n_weights)
+            yv = np.asarray(y, np.float32)
+            neg, pos = yv < 0, yv > 0
+            fa = (dec[neg, 0, :] > 0).mean(0)
+            det = (dec[pos, 0, :] > 0).mean(0)
+            self.np_fa, self.np_det = fa, det
+            self.np_weight_idx = int(np_select_weight(
+                jnp.asarray(fa), jnp.asarray(det), cfg.np_alpha))
+        return self
+
+    # ------------------------------------------------------------- test
+    def decision_function(self, x_test: np.ndarray) -> np.ndarray:
+        """(m, d) -> (m, T, S) via Voronoi routing to owning cells."""
+        assert self._fitted
+        xt = self.scaler.transform(np.asarray(x_test, np.float32))
+        m_total = xt.shape[0]
+        cell_of = self.plan.route(xt)                       # (m,) cell ids
+        slot_of = self.packed.slot_of_cell[cell_of]         # (m,) slots
+        n_slots = self.packed.n_slots
+        counts = np.bincount(slot_of, minlength=n_slots)
+        m_max = max(int(counts.max()), 1)
+        xt_cells = np.zeros((n_slots, m_max, xt.shape[1]), np.float32)
+        back = np.zeros((n_slots, m_max), np.int64)
+        fill = np.zeros(n_slots, np.int64)
+        for i, s in enumerate(slot_of):
+            xt_cells[s, fill[s]] = xt[i]
+            back[s, fill[s]] = i
+            fill[s] += 1
+
+        dec = np.asarray(predict_cells(
+            jnp.asarray(xt_cells), jnp.asarray(self.x_cells),
+            jnp.asarray(self.coefs), jnp.asarray(self.gamma),
+            kernel=self.config.kernel,
+            mesh=self.mesh, axis_names=self.mesh_axes))     # (slots, m_max, T, S)
+
+        out = np.zeros((m_total,) + dec.shape[2:], np.float32)
+        for s in range(n_slots):
+            for j in range(fill[s]):
+                out[back[s, j]] = dec[s, j]
+        return out
+
+    def predict(self, x_test: np.ndarray) -> np.ndarray:
+        dec = self.decision_function(x_test)
+        sc = self.config.scenario
+        if sc == "npsvm":
+            return np.sign(dec[:, 0, self.np_weight_idx])
+        if sc in ("binary", "weighted"):
+            return np.sign(dec[:, 0, 0])
+        if sc == "ova":
+            return combine_ova(dec[:, :, 0].T, self.tasks.classes)
+        if sc == "ava":
+            return combine_ava(dec[:, :, 0].T, self.tasks.pairs, self.tasks.classes)
+        if sc in ("quantile", "expectile"):
+            return dec[:, 0, :]              # (m, n_taus)
+        raise ValueError(sc)
+
+    def error(self, x_test: np.ndarray, y_test: np.ndarray) -> float:
+        pred = self.predict(x_test)
+        sc = self.config.scenario
+        if sc in ("binary", "weighted", "npsvm"):
+            return float((pred != np.sign(y_test)).mean())
+        if sc in ("ova", "ava"):
+            return float((pred != y_test).mean())
+        if sc == "quantile":
+            taus = np.asarray(self.config.taus)
+            r = y_test[:, None] - pred
+            return float(np.where(r >= 0, taus * r, (taus - 1) * r).mean())
+        if sc == "expectile":
+            taus = np.asarray(self.config.taus)
+            r = y_test[:, None] - pred
+            return float(np.where(r >= 0, taus * r * r, (1 - taus) * r * r).mean())
+        raise ValueError(sc)

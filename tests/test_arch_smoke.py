@@ -1,0 +1,143 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-grad step on CPU, asserting output shapes and finiteness.
+The FULL configs are exercised only via the dry-run (no allocation here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import model as model_mod
+from repro.models.layers import init_params, param_count
+from repro.serve.kv_cache import pad_cache
+
+
+def _batch(cfg, b=2, t=32, key=jax.random.PRNGKey(0)):
+    if cfg.input_kind == "tokens":
+        x = jax.random.randint(key, (b, t), 0, cfg.vocab)
+    else:
+        x = jax.random.normal(key, (b, t, cfg.d_frontend), jnp.float32)
+    labels = jax.random.randint(key, (b, t), 0, cfg.vocab)
+    return {"inputs": x, "labels": labels}
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+class TestArchSmoke:
+    def test_forward_loss_finite(self, arch_id):
+        spec = get_arch(arch_id)
+        cfg = spec.smoke
+        params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(1))
+        batch = _batch(cfg)
+        loss = model_mod.loss_fn(cfg, params, batch)
+        assert loss.shape == ()
+        assert np.isfinite(float(loss))
+        # at init, loss should be near ln(vocab) (uniform predictions)
+        assert abs(float(loss) - np.log(cfg.vocab)) < 2.0
+
+    def test_train_grad_step(self, arch_id):
+        spec = get_arch(arch_id)
+        cfg = spec.smoke
+        params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(2))
+        batch = _batch(cfg)
+        loss, grads = jax.value_and_grad(
+            lambda p: model_mod.loss_fn(cfg, p, batch))(params)
+        leaves = jax.tree.leaves(grads)
+        assert all(np.isfinite(np.asarray(g)).all() for g in leaves)
+        # a plain SGD step reduces the loss
+        params2 = jax.tree.map(lambda p, g: p - 0.5 * g.astype(p.dtype),
+                               params, grads)
+        loss2 = model_mod.loss_fn(cfg, params2, batch)
+        assert float(loss2) < float(loss)
+
+    def test_full_config_dims_match_assignment(self, arch_id):
+        """The CONFIG must carry the exact assigned dimensions."""
+        expected = {
+            "rwkv6-1.6b": (24, 2048, 7168, 65536),
+            "stablelm-12b": (40, 5120, 13824, 100352),
+            "gemma3-4b": (34, 2560, 10240, 262144),
+            "command-r-plus-104b": (64, 12288, 33792, 256000),
+            "stablelm-1.6b": (24, 2048, 5632, 100352),
+            "internvl2-76b": (80, 8192, 28672, 128256),
+            "hubert-xlarge": (48, 1280, 5120, 504),
+            "qwen3-moe-235b-a22b": (94, 4096, 1536, 151936),
+            "llama4-maverick-400b-a17b": (48, 5120, 8192, 202048),
+            "jamba-v0.1-52b": (32, 4096, 14336, 65536),
+        }[arch_id]
+        cfg = get_arch(arch_id).config
+        assert (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab) == expected
+        # pattern consistency: layers = periods * len(pattern) + tail
+        assert cfg.n_periods * cfg.period + cfg.tail == cfg.n_layers
+        assert cfg.tail < cfg.period or cfg.period == 1
+
+
+class TestDecodePaths:
+    @pytest.mark.parametrize("arch_id", [a for a in ARCH_IDS
+                                         if a != "hubert-xlarge"])
+    def test_prefill_decode_consistency(self, arch_id):
+        """prefill(T) + decode(token T) == prefill(T+1) last logits."""
+        spec = get_arch(arch_id)
+        import dataclasses
+        # drop-free MoE capacity: token dropping legitimately differs between
+        # prefill (tokens compete per chunk) and decode (one token) — that is
+        # capacity-factor semantics, not a bug; test the exact math instead.
+        kw = {}
+        if spec.smoke.n_experts:
+            kw["moe_capacity_factor"] = float(spec.smoke.n_experts
+                                              / max(spec.smoke.top_k, 1))
+        cfg = dataclasses.replace(spec.smoke, dtype=jnp.float32, **kw)
+        params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(3))
+        b, t = 2, 12
+        key = jax.random.PRNGKey(4)
+        if cfg.input_kind == "tokens":
+            x = jax.random.randint(key, (b, t + 1), 0, cfg.vocab)
+        else:
+            x = jax.random.normal(key, (b, t + 1, cfg.d_frontend), jnp.float32)
+        ref, _ = model_mod.prefill(cfg, params, x)
+        _, cache = model_mod.prefill(cfg, params, x[:, :t])
+        cache = pad_cache(cfg, cache, t + 4)
+        got, new_cache = model_mod.decode_step(cfg, params, x[:, t:t + 1],
+                                               cache, jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=2e-3, rtol=1e-3)
+        # cache pytree keeps its structure
+        assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+    def test_hubert_encode(self):
+        spec = get_arch("hubert-xlarge")
+        cfg = spec.smoke
+        params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(5))
+        x = jax.random.normal(jax.random.PRNGKey(6), (2, 16, cfg.d_frontend))
+        logits = model_mod.encode(cfg, params, x)
+        assert logits.shape == (2, 16, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+
+class TestGenerate:
+    def test_greedy_generation_runs(self):
+        from repro.serve.engine import generate
+        spec = get_arch("stablelm-1.6b")
+        cfg = spec.smoke
+        params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(7))
+        prompt = jax.random.randint(jax.random.PRNGKey(8), (2, 8), 0, cfg.vocab)
+        out = generate(cfg, params, prompt, max_new_tokens=6)
+        assert out.shape == (2, 14)
+        assert (np.asarray(out[:, :8]) == np.asarray(prompt)).all()
+
+    def test_generate_matches_rerun_prefill(self):
+        """Greedy decode token-by-token == greedy re-prefill at every step."""
+        import dataclasses
+        from repro.serve.engine import generate
+        spec = get_arch("rwkv6-1.6b")
+        cfg = dataclasses.replace(spec.smoke, dtype=jnp.float32)
+        params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(9))
+        prompt = jax.random.randint(jax.random.PRNGKey(10), (1, 6), 0, cfg.vocab)
+        out = np.asarray(generate(cfg, params, prompt, max_new_tokens=4))
+        cur = prompt
+        for _ in range(4):
+            logits, _ = model_mod.prefill(cfg, params, cur)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            cur = jnp.concatenate([cur, nxt], axis=1)
+        np.testing.assert_array_equal(out, np.asarray(cur))

@@ -1,0 +1,116 @@
+"""Cell decomposition + task creation invariants (hypothesis property tests
+on the system's working-set machinery)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cells.builder import build_cells
+from repro.tasks.builder import combine_ava, combine_ova, make_tasks
+
+
+def _coverage(plan, n):
+    cover = np.zeros(n, np.int32)
+    for c in range(plan.n_cells):
+        ids = plan.indices[c][plan.mask[c] > 0]
+        cover[ids] += 1
+    return cover
+
+
+class TestCells:
+    @settings(max_examples=12, deadline=None)
+    @given(n=st.integers(10, 600), d=st.integers(1, 6),
+           method=st.sampled_from(["random", "voronoi", "recursive"]),
+           k=st.integers(8, 200))
+    def test_partition_property(self, n, d, method, k):
+        """Non-overlapping methods cover every sample exactly once."""
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        plan = build_cells(x, cell_size=k, method=method, seed=1)
+        assert (_coverage(plan, n) == 1).all()
+        # owner consistent with membership
+        for i in range(n):
+            c = plan.owner[i]
+            assert i in plan.indices[c][plan.mask[c] > 0]
+
+    def test_overlap_covers_at_least_once(self):
+        rng = np.random.default_rng(1)
+        x = rng.normal(size=(500, 3)).astype(np.float32)
+        plan = build_cells(x, cell_size=100, method="overlap", seed=2)
+        cover = _coverage(plan, 500)
+        assert (cover >= 1).all() and (cover <= 2).all()
+
+    def test_recursive_respects_cell_size(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(1000, 4)).astype(np.float32)
+        plan = build_cells(x, cell_size=120, method="recursive", seed=3)
+        sizes = plan.mask.sum(1)
+        assert (sizes <= 120).all()
+
+    def test_coarse_fine_two_level(self):
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(2000, 3)).astype(np.float32)
+        plan = build_cells(x, cell_size=100, method="coarse_fine", seed=4,
+                           coarse_size=500)
+        assert (_coverage(plan, 2000) == 1).all()
+        assert plan.coarse_of.max() >= 1           # >1 coarse group
+        assert (plan.mask.sum(1) <= 100).all()
+
+    def test_route_returns_owner_for_training_points(self):
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(300, 2)).astype(np.float32)
+        plan = build_cells(x, cell_size=60, method="voronoi", seed=5)
+        routed = plan.route(x)
+        agree = (routed == plan.owner).mean()
+        assert agree > 0.95  # ties at boundaries may flip a few
+
+    def test_single_cell_when_small(self):
+        x = np.random.default_rng(5).normal(size=(50, 2)).astype(np.float32)
+        plan = build_cells(x, cell_size=2000, method="voronoi")
+        assert plan.n_cells == 1
+
+
+class TestTasks:
+    def test_ova_shapes_and_labels(self):
+        y = np.array([0, 1, 2, 1, 0, 2])
+        ts = make_tasks(y, "ova")
+        assert ts.n_tasks == 3
+        np.testing.assert_array_equal(ts.labels[0], [1, -1, -1, -1, 1, -1])
+        assert (ts.task_mask == 1).all()
+
+    def test_ava_masks_out_other_classes(self):
+        y = np.array([0, 1, 2, 1])
+        ts = make_tasks(y, "ava")
+        assert ts.n_tasks == 3  # (0,1), (0,2), (1,2)
+        np.testing.assert_array_equal(ts.task_mask[0], [1, 1, 0, 1])
+        np.testing.assert_array_equal(ts.labels[0], [1, -1, 0, -1])
+
+    def test_combine_ova_argmax(self):
+        dec = np.array([[0.9, -0.2], [0.1, 0.7], [-0.5, 0.1]])
+        classes = np.array([10, 20, 30])
+        np.testing.assert_array_equal(combine_ova(dec, classes), [10, 20])
+
+    def test_combine_ava_voting(self):
+        classes = np.array([0, 1, 2])
+        pairs = np.array([[0, 1], [0, 2], [1, 2]])
+        # sample where 0 beats 1, 0 beats 2, (1 vs 2 irrelevant) -> class 0
+        dec = np.array([[1.0], [1.0], [-1.0]])
+        np.testing.assert_array_equal(combine_ava(dec, pairs, classes), [0])
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(6, 100), n_classes=st.integers(2, 5))
+    def test_ava_property(self, n, n_classes):
+        rng = np.random.default_rng(6)
+        y = rng.integers(0, n_classes, n)
+        if len(np.unique(y)) < 2:
+            return
+        ts = make_tasks(y, "ava")
+        c = len(np.unique(y))
+        assert ts.n_tasks == c * (c - 1) // 2
+        # every sample participates in exactly (c - 1) tasks
+        np.testing.assert_array_equal(ts.task_mask.sum(0), c - 1)
+
+    def test_binary_requires_pm1(self):
+        with pytest.raises(AssertionError):
+            make_tasks(np.array([0, 1, 1]), "binary")

@@ -1,0 +1,133 @@
+"""CV driver: fold construction, grid columns, selection, warm-start path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cv as cv_mod
+from repro.core import grids
+from repro.core.svm import TrainedSVM, train_select
+from repro.core.svm import test_error as svm_test_error
+
+
+class TestFoldMasks:
+    def test_partition_of_valid_samples(self):
+        key = jax.random.PRNGKey(0)
+        mask = jnp.asarray([1.0] * 50 + [0.0] * 14)
+        folds = cv_mod.make_fold_masks(key, mask, 5)
+        f = np.asarray(folds)
+        assert f.shape == (5, 64)
+        np.testing.assert_array_equal(f.sum(0), np.asarray(mask))  # each valid in 1 fold
+        sizes = f.sum(1)
+        assert sizes.max() - sizes.min() <= 1  # balanced
+
+    def test_blocks_scheme_contiguous(self):
+        key = jax.random.PRNGKey(0)
+        mask = jnp.ones(30)
+        folds = np.asarray(cv_mod.make_fold_masks(key, mask, 3, scheme="blocks"))
+        # first 10 valid samples in fold 0
+        assert folds[0, :10].all() and not folds[0, 10:].any()
+
+    def test_stratified_balances_classes(self):
+        key = jax.random.PRNGKey(1)
+        n = 100
+        y = jnp.asarray([1.0] * 20 + [-1.0] * 80)
+        folds = np.asarray(cv_mod.make_fold_masks(key, jnp.ones(n), 5,
+                                                  scheme="stratified", y=y))
+        pos_per_fold = (folds * (np.asarray(y) > 0)).sum(1)
+        assert pos_per_fold.max() - pos_per_fold.min() <= 1
+
+
+class TestGrids:
+    def test_libsvm_grid_shape_and_order(self):
+        g = grids.libsvm_grid(n=4000)
+        assert g.shape == (10, 11)
+        lam = np.asarray(g.lambdas)
+        assert (np.diff(lam) < 0).all()  # descending: largest lambda first
+
+    def test_liquid_grid_choices(self):
+        for choice, exp in [(0, (10, 10)), (1, (15, 15)), (2, (20, 20))]:
+            g = grids.liquid_grid(n=1000, dim=5, grid_choice=choice)
+            assert g.shape == exp
+            assert float(g.gammas[0]) > float(g.gammas[-1]) > 0
+
+    def test_adaptive_subgrid(self):
+        g = grids.liquid_grid(n=1000, dim=5)
+        sub = grids.adaptive_subgrid(g, 1)
+        assert len(sub.gammas) == 5 and len(sub.lambdas) == 5
+
+    def test_grid_columns_task_major(self):
+        g = grids.GridSpec(gammas=jnp.asarray([1.0]),
+                           lambdas=jnp.asarray([0.1, 0.01]))
+        cfg = cv_mod.CVConfig(solver="quantile", taus=(0.2, 0.8))
+        lam_c, sub_c, task_c, n_lam, n_sub = cv_mod.grid_columns(g, cfg, n_tasks=2)
+        assert lam_c.shape == (8,)
+        np.testing.assert_allclose(np.asarray(task_c), [0, 0, 0, 0, 1, 1, 1, 1])
+        np.testing.assert_allclose(np.asarray(lam_c)[:4], [0.1, 0.1, 0.01, 0.01])
+        np.testing.assert_allclose(np.asarray(sub_c)[:4], [0.2, 0.8, 0.2, 0.8])
+
+
+class TestTrainSelect:
+    def test_binary_separable(self):
+        rng = np.random.default_rng(0)
+        n = 200
+        y = np.sign(rng.normal(size=n)).astype(np.float32)
+        x = (rng.normal(size=(n, 2)) + 2.5 * y[:, None]).astype(np.float32)
+        model = train_select(x, y, cfg=cv_mod.CVConfig(n_folds=3, max_iters=400))
+        err = float(svm_test_error(model, x, y))
+        assert err <= 0.02
+        assert float(model.val_loss[0, 0]) <= 0.05
+
+    def test_selected_hyperparams_inside_grid(self):
+        rng = np.random.default_rng(1)
+        n = 150
+        y = np.sign(rng.normal(size=n)).astype(np.float32)
+        x = (rng.normal(size=(n, 3)) + y[:, None]).astype(np.float32)
+        g = grids.liquid_grid(n=n, dim=3)
+        model = train_select(x, y, grid=g,
+                             cfg=cv_mod.CVConfig(n_folds=3, max_iters=300))
+        assert float(model.gamma[0, 0]) in [float(v) for v in np.asarray(g.gammas)]
+        assert float(model.lam[0, 0]) in [float(v) for v in np.asarray(g.lambdas)]
+
+    def test_quantile_multi_tau_selection(self):
+        rng = np.random.default_rng(2)
+        n = 250
+        x = rng.uniform(-1, 1, (n, 1)).astype(np.float32)
+        y = (np.sin(2 * x[:, 0]) + 0.3 * rng.normal(size=n)).astype(np.float32)
+        cfg = cv_mod.CVConfig(solver="quantile", taus=(0.1, 0.5, 0.9),
+                              n_folds=3, max_iters=2000)
+        model = train_select(x, y, cfg=cfg)
+        f = np.asarray(model.decision_function(x))[:, 0, :]  # (n, 3)
+        cover = (y[:, None] <= f).mean(0)
+        assert cover[0] < cover[1] < cover[2]
+        # per-tau selection may pick different gamma/lambda
+        assert model.gamma.shape == (1, 3)
+
+    def test_multitask_ova_path(self):
+        from repro.tasks.builder import make_tasks
+        rng = np.random.default_rng(3)
+        n, c = 180, 3
+        y = rng.integers(0, c, n)
+        centers = np.array([[0, 3], [3, -2], [-3, -2]], np.float32)
+        x = (centers[y] + 0.7 * rng.normal(size=(n, 2))).astype(np.float32)
+        ts = make_tasks(y, "ova")
+        model = train_select(x, None, y_tasks=ts.labels, task_mask=ts.task_mask,
+                             cfg=cv_mod.CVConfig(n_folds=3, max_iters=400))
+        dec = np.asarray(model.decision_function(x))[:, :, 0]  # (n, 3)
+        pred = dec.argmax(1)
+        assert (pred == y).mean() > 0.95
+
+    def test_warm_start_quality_invariance(self):
+        """Scanning gammas in either order lands at comparable val loss
+        (warm start is an accelerator, not a result-changer)."""
+        rng = np.random.default_rng(4)
+        n = 120
+        y = np.sign(rng.normal(size=n)).astype(np.float32)
+        x = (rng.normal(size=(n, 2)) + 1.4 * y[:, None]).astype(np.float32)
+        g = grids.liquid_grid(n=n, dim=2)
+        cfg = cv_mod.CVConfig(n_folds=3, max_iters=1500, tol=1e-4)
+        m1 = train_select(x, y, grid=g, cfg=cfg)
+        g_rev = grids.GridSpec(gammas=g.gammas[::-1], lambdas=g.lambdas)
+        m2 = train_select(x, y, grid=g_rev, cfg=cfg)
+        assert abs(float(m1.val_loss[0, 0]) - float(m2.val_loss[0, 0])) < 0.05

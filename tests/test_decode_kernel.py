@@ -1,0 +1,122 @@
+"""Fused decode-attention kernel vs oracle, bf16 + int8 KV paths,
+shape/dtype sweep per the kernel-validation requirement."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attention.ops import decode_attention_fused
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def _mk(b, hk, g, d, s, quantize, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, hk, g, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, hk, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hk, d)), jnp.float32)
+    ks = vs = None
+    if quantize:
+        ks = jnp.max(jnp.abs(k), -1, keepdims=True) / 127.0
+        vs = jnp.max(jnp.abs(v), -1, keepdims=True) / 127.0
+        k = jnp.clip(jnp.round(k / ks), -127, 127).astype(jnp.int8)
+        v = jnp.clip(jnp.round(v / vs), -127, 127).astype(jnp.int8)
+    return q, k, v, ks, vs
+
+
+class TestDecodeKernel:
+    @pytest.mark.parametrize("b,hk,g,d,s", [(2, 2, 4, 64, 256),
+                                            (1, 4, 1, 128, 300),
+                                            (2, 1, 8, 32, 512)])
+    @pytest.mark.parametrize("quantize", [False, True])
+    def test_matches_ref(self, b, hk, g, d, s, quantize):
+        q, k, v, ks, vs = _mk(b, hk, g, d, s, quantize)
+        pos = jnp.int32(s - 1)
+        got = decode_attention_fused(q, k, v, pos, scale=d ** -0.5,
+                                     k_scale=ks, v_scale=vs,
+                                     force_pallas=True)
+        want = decode_attention_ref(q, k, v, pos, d ** -0.5, ks, vs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5)
+
+    def test_partial_cache_masking(self):
+        """Ring positions beyond cache_pos never attend."""
+        q, k, v, _, _ = _mk(1, 2, 2, 32, 256, False)
+        pos = jnp.int32(100)
+        got = decode_attention_fused(q, k, v, pos, scale=32 ** -0.5,
+                                     force_pallas=True)
+        # poisoning the invalid region must not change the result
+        k2 = k.at[:, 101:].set(99.0)
+        v2 = v.at[:, 101:].set(-99.0)
+        got2 = decode_attention_fused(q, k2, v2, pos, scale=32 ** -0.5,
+                                      force_pallas=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(got2),
+                                   atol=1e-6)
+
+    def test_window_masking(self):
+        q, k, v, _, _ = _mk(1, 1, 2, 32, 256, False, seed=3)
+        pos = jnp.int32(200)
+        got = decode_attention_fused(q, k, v, pos, scale=32 ** -0.5,
+                                     window=16, force_pallas=True)
+        want = decode_attention_ref(q, k, v, pos, 32 ** -0.5, window=16)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.integers(16, 700), d=st.sampled_from([32, 64, 128]),
+           g=st.integers(1, 8))
+    def test_property_sweep(self, s, d, g):
+        q, k, v, ks, vs = _mk(1, 2, g, d, s, True, seed=s)
+        pos = jnp.int32(min(s - 1, 37))
+        got = decode_attention_fused(q, k, v, pos, scale=d ** -0.5,
+                                     k_scale=ks, v_scale=vs,
+                                     force_pallas=True)
+        want = decode_attention_ref(q, k, v, pos, d ** -0.5, ks, vs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-5)
+
+    def test_int8_vs_f32_quality(self):
+        """Quantized attention stays close to unquantized attention."""
+        qf, kf, vf, _, _ = _mk(2, 2, 4, 64, 256, False, seed=7)
+        _, k8, v8, ks, vs = _mk(2, 2, 4, 64, 256, True, seed=7)
+        pos = jnp.int32(255)
+        full = decode_attention_fused(qf, kf, vf, pos, scale=64 ** -0.5,
+                                      force_pallas=True)
+        quant = decode_attention_fused(qf, k8, v8, pos, scale=64 ** -0.5,
+                                       k_scale=ks, v_scale=vs,
+                                       force_pallas=True)
+        rel = float(jnp.max(jnp.abs(full - quant)) / jnp.max(jnp.abs(full)))
+        assert rel < 0.05, rel
+
+
+class TestModelWiring:
+    """fused_decode (the model-side wrapper) == the jnp decode executor."""
+
+    @pytest.mark.parametrize("quantize", [False, True])
+    def test_fused_matches_jnp_decode(self, quantize):
+        from repro.models.attention import decode_attention, fused_decode
+        rng = np.random.default_rng(11)
+        b, h, hk, d, s = 2, 8, 2, 64, 256
+        q = jnp.asarray(rng.normal(size=(b, 1, h, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, s, hk, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, s, hk, d)), jnp.float32)
+        cache = {"k": k, "v": v}
+        if quantize:
+            ks = jnp.max(jnp.abs(k), -1, keepdims=True) / 127.0
+            vs = jnp.max(jnp.abs(v), -1, keepdims=True) / 127.0
+            cache = {"k": jnp.clip(jnp.round(k / ks), -127, 127).astype(jnp.int8),
+                     "v": jnp.clip(jnp.round(v / vs), -127, 127).astype(jnp.int8),
+                     "k_scale": ks, "v_scale": vs}
+        pos = jnp.int32(200)
+        got = fused_decode(q, cache, 64 ** -0.5, window=0, cache_pos=pos,
+                           force_pallas=True)
+        k_eff = cache["k"].astype(jnp.float32)
+        v_eff = cache["v"].astype(jnp.float32)
+        if quantize:
+            k_eff = k_eff * cache["k_scale"]
+            v_eff = v_eff * cache["v_scale"]
+        want = decode_attention(q, k_eff, v_eff, 64 ** -0.5, cache_pos=pos)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=5e-5)

@@ -1,0 +1,80 @@
+"""Elastic scaling: a checkpoint written under one mesh restores and keeps
+training under a DIFFERENT device count (the re-shard path)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import get_arch
+    from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+    from repro.models import model as model_mod
+    from repro.models.layers import init_params, sharding_tree
+    from repro.train import checkpoint as ckpt
+    from repro.train.lm_trainer import make_train_step
+    from repro.train.optimizer import OptConfig, init_opt_state
+
+    ckpt_dir = sys.argv[1]
+    cfg = dataclasses.replace(get_arch("stablelm-1.6b").smoke,
+                              dtype=jnp.float32, batch_axes=("data",))
+    ocfg = OptConfig(lr=1e-3, warmup_steps=0, schedule="constant")
+    pipe = TokenPipeline(TokenPipelineConfig(vocab=cfg.vocab, seq_len=16,
+                                             global_batch=8, seed=0))
+
+    def run_on_mesh(shape, start_step, n_steps, restore):
+        mesh = jax.make_mesh(shape, ("data", "model"))
+        shards = sharding_tree(model_mod.build_template(cfg), mesh)
+        params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(0))
+        opt = init_opt_state(params, ocfg)
+        if restore:
+            (params, opt), start, _ = ckpt.restore_checkpoint(
+                ckpt_dir, (params, opt))
+            start_step = start
+        params = jax.tree.map(jax.device_put, params, shards)
+        with mesh:
+            step = jax.jit(make_train_step(cfg, ocfg))
+            bshard = NamedSharding(mesh, P("data", None))
+            for i in range(start_step, start_step + n_steps):
+                batch = {k: jax.device_put(v, bshard)
+                         for k, v in pipe.batch(i).items()}
+                params, opt, m = step(params, opt, batch)
+        return params, opt, float(m["loss"])
+
+    # phase 1: 4x2 mesh, 3 steps, checkpoint
+    p, o, _ = run_on_mesh((4, 2), 0, 3, restore=False)
+    ckpt.save_checkpoint(ckpt_dir, 3, (p, o))
+
+    # phase 2a: resume on a DIFFERENT mesh (2x4 — elastic re-shard), 2 steps
+    p2, o2, loss_elastic = run_on_mesh((2, 4), 3, 2, restore=True)
+    # phase 2b: control — same continuation on the original mesh
+    p3, o3, loss_same = run_on_mesh((4, 2), 3, 2, restore=True)
+
+    assert abs(loss_elastic - loss_same) < 1e-4, (loss_elastic, loss_same)
+    worst = max(float(jnp.max(jnp.abs(jax.device_get(a) - jax.device_get(b))))
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(p3)))
+    assert worst < 1e-4, worst
+    print("OK elastic", loss_elastic, "same", loss_same, "worst", worst)
+""")
+
+
+@pytest.mark.slow
+def test_elastic_remesh_resume(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SCRIPT, str(tmp_path)], env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))),
+                       capture_output=True, text=True, timeout=900)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout

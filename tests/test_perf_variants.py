@@ -1,0 +1,123 @@
+"""§Perf variant correctness: every beyond-paper optimization must keep
+the math (exactly, or within quantization tolerance)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models import model as model_mod
+from repro.models.layers import init_params
+from repro.serve.kv_cache import pad_cache
+
+
+class TestInt8KVCache:
+    def _setup(self):
+        spec = get_arch("stablelm-1.6b")
+        cfg = dataclasses.replace(spec.smoke, dtype=jnp.float32)
+        params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(0))
+        x = jax.random.randint(jax.random.PRNGKey(1), (2, 13), 0, cfg.vocab)
+        return cfg, params, x
+
+    def test_int8_decode_close_to_bf16(self):
+        cfg, params, x = self._setup()
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        _, cache = model_mod.prefill(cfg, params, x[:, :12])
+        c16 = pad_cache(cfg, cache, 16)
+        l16, _ = model_mod.decode_step(cfg, params, x[:, 12:13], c16,
+                                       jnp.int32(12))
+        c8 = pad_cache(cfg8, cache, 16)
+        l8, nc8 = model_mod.decode_step(cfg8, params, x[:, 12:13], c8,
+                                        jnp.int32(12))
+        rel = float(jnp.max(jnp.abs(l8 - l16)) / jnp.max(jnp.abs(l16)))
+        assert rel < 0.02, rel
+        # cache stays int8 across steps
+        assert nc8["stack"]["pos0"]["k"].dtype == jnp.int8
+        assert "k_scale" in nc8["stack"]["pos0"]
+
+    def test_int8_argmax_agreement(self):
+        """Greedy decisions agree between int8 and bf16 caches."""
+        cfg, params, x = self._setup()
+        cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+        _, cache = model_mod.prefill(cfg, params, x[:, :12])
+        l16, _ = model_mod.decode_step(cfg, params, x[:, 12:13],
+                                       pad_cache(cfg, cache, 16), jnp.int32(12))
+        l8, _ = model_mod.decode_step(cfg8, params, x[:, 12:13],
+                                      pad_cache(cfg8, cache, 16), jnp.int32(12))
+        np.testing.assert_array_equal(np.argmax(np.asarray(l16), -1),
+                                      np.argmax(np.asarray(l8), -1))
+
+
+class TestGatherMoE:
+    def test_gather_equals_einsum_forward_and_grad(self):
+        spec = get_arch("qwen3-moe-235b-a22b")
+        cfgE = dataclasses.replace(spec.smoke, dtype=jnp.float32)
+        cfgG = dataclasses.replace(cfgE, moe_impl="gather")
+        params = init_params(model_mod.build_template(cfgE), jax.random.PRNGKey(2))
+        toks = jax.random.randint(jax.random.PRNGKey(3), (2, 32), 0, cfgE.vocab)
+        batch = {"inputs": toks, "labels": jnp.roll(toks, -1, 1)}
+        lE = model_mod.loss_fn(cfgE, params, batch)
+        lG = model_mod.loss_fn(cfgG, params, batch)
+        assert float(jnp.abs(lE - lG)) < 1e-6
+        gE = jax.grad(lambda p: model_mod.loss_fn(cfgE, p, batch))(params)
+        gG = jax.grad(lambda p: model_mod.loss_fn(cfgG, p, batch))(params)
+        worst = max(float(jnp.max(jnp.abs(a - b)))
+                    for a, b in zip(jax.tree.leaves(gE), jax.tree.leaves(gG)))
+        assert worst < 1e-5, worst
+
+    def test_gather_capacity_drops_match_einsum(self):
+        """With tight capacity both impls drop the SAME tokens."""
+        spec = get_arch("jamba-v0.1-52b")
+        cfgE = dataclasses.replace(spec.smoke, dtype=jnp.float32,
+                                   moe_capacity_factor=0.5)
+        cfgG = dataclasses.replace(cfgE, moe_impl="gather")
+        params = init_params(model_mod.build_template(cfgE), jax.random.PRNGKey(4))
+        toks = jax.random.randint(jax.random.PRNGKey(5), (2, 32), 0, cfgE.vocab)
+        batch = {"inputs": toks, "labels": jnp.roll(toks, -1, 1)}
+        lE = model_mod.loss_fn(cfgE, params, batch)
+        lG = model_mod.loss_fn(cfgG, params, batch)
+        assert float(jnp.abs(lE - lG)) < 1e-6
+
+
+class TestBf16Gram:
+    def test_bf16_gram_error_parity(self):
+        from repro.core import cv as cv_mod
+        from repro.core.svm import test_error as svm_err, train_select
+        from repro.data.synthetic import covtype_like, train_test_split
+        x, yc = covtype_like(n=900, d=6, seed=0, label_noise=0.05, n_modes=3)
+        y = np.where(yc == 0, -1.0, 1.0).astype(np.float32)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
+        errs = {}
+        for gd in ("f32", "bf16"):
+            cfg = cv_mod.CVConfig(n_folds=3, max_iters=300, gram_dtype=gd)
+            m = train_select(xtr, ytr, cfg=cfg)
+            errs[gd] = float(svm_err(m, xte, yte))
+        assert abs(errs["f32"] - errs["bf16"]) < 0.02, errs
+
+    def test_shared_lipschitz_same_fixed_point(self):
+        """box_qp with the full-Gram L reaches the same optimum as with the
+        (smaller) masked-Gram L — step size changes the path, not the
+        fixed point (lambda_max(MKM) <= lambda_max(K))."""
+        from repro.core import kernel_fns
+        from repro.core.solvers import base
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.normal(size=(80, 4)), jnp.float32)
+        k = kernel_fns.gaussian(x, x, jnp.float32(1.2))
+        mask = jnp.asarray([1.0] * 60 + [0.0] * 20)
+        km = k * mask[:, None] * mask[None, :]
+        y = jnp.asarray(np.sign(rng.normal(size=(80, 3))), jnp.float32) \
+            * mask[:, None]
+        lo, hi = jnp.minimum(0.0, y), jnp.maximum(0.0, y)
+        l_full = base.power_iteration_l(k)
+        l_masked = base.power_iteration_l(km)
+        assert float(l_full) >= float(l_masked)  # the bound that makes it safe
+        c_full = base.box_qp(k, y, lo, hi, tol=1e-7, max_iters=30000,
+                             l_est=l_full).c
+        c_masked = base.box_qp(k, y, lo, hi, tol=1e-7, max_iters=30000,
+                               l_est=l_masked).c
+        np.testing.assert_allclose(np.asarray(c_full), np.asarray(c_masked),
+                                   atol=1e-4)

@@ -1,0 +1,243 @@
+"""Solver unit tests: every liquidSVM dual reaches its KKT point and the
+statistical contract of each loss holds (margin / coverage / expectile).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kernel_fns
+from repro.core.solvers import (
+    base, expectile as exp_solver, hinge, least_squares as ls, quantile as qs,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _gram(x, gamma=1.0):
+    return kernel_fns.gaussian(jnp.asarray(x, jnp.float32), jnp.asarray(x, jnp.float32),
+                               jnp.float32(gamma))
+
+
+# ---------------------------------------------------------------- box QP core
+
+class TestBoxQP:
+    def test_identity_kernel_analytic(self):
+        """With K = I the solution is clip(y, lo, hi) exactly."""
+        n, p = 40, 7
+        rng = np.random.default_rng(1)
+        y = jnp.asarray(rng.normal(size=(n, p)), jnp.float32)
+        lo = jnp.full((n, p), -0.5, jnp.float32)
+        hi = jnp.full((n, p), 0.8, jnp.float32)
+        res = base.box_qp(jnp.eye(n), y, lo, hi, tol=1e-6, max_iters=5000)
+        np.testing.assert_allclose(res.c, np.clip(y, -0.5, 0.8), atol=2e-5)
+
+    def test_kkt_residual_below_tol(self):
+        rng = np.random.default_rng(2)
+        x = rng.normal(size=(96, 5)).astype(np.float32)
+        k = _gram(x)
+        y = jnp.asarray(np.sign(rng.normal(size=(96, 4))), jnp.float32)
+        lo, hi = jnp.minimum(0.0, y) * 2.0, jnp.maximum(0.0, y) * 2.0
+        res = base.box_qp(k, y, lo, hi, tol=1e-4, max_iters=8000)
+        assert np.max(np.asarray(res.kkt)) <= 1e-4
+
+    def test_matches_cd_reference_fixed_point(self):
+        """FISTA and Gauss-Seidel CD land on the same box-QP optimum."""
+        from repro.kernels.cd_solver import ref as cd_ref
+        rng = np.random.default_rng(3)
+        x = rng.normal(size=(64, 4)).astype(np.float32)
+        k = _gram(x) + 1e-3 * jnp.eye(64)
+        y = jnp.asarray(rng.normal(size=(64, 3)), jnp.float32)
+        lo = jnp.full((64, 3), -1.0, jnp.float32)
+        hi = jnp.full((64, 3), 1.0, jnp.float32)
+        c_fista = base.box_qp(k, y, lo, hi, tol=1e-7, max_iters=20000).c
+        c_cd, _ = cd_ref.solve_cd_ref(k, y, lo, hi, jnp.zeros((64, 3)), epochs=600)
+        np.testing.assert_allclose(c_fista, c_cd, atol=5e-4)
+
+    def test_dual_objective_monotone_in_iterations(self):
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(48, 3)).astype(np.float32)
+        k = _gram(x)
+        y = jnp.asarray(np.sign(rng.normal(size=(48, 1))), jnp.float32)
+        lo, hi = jnp.minimum(0.0, y), jnp.maximum(0.0, y)
+        objs = []
+        for iters in (5, 20, 80, 400):
+            c = base.box_qp(k, y, lo, hi, tol=0.0, max_iters=iters).c
+            objs.append(float(base.dual_objective(k, y, c)[0]))
+        assert objs == sorted(objs) or max(
+            objs[i] - objs[i + 1] for i in range(len(objs) - 1)) < 1e-5
+
+    def test_power_iteration_upper_bounds_spectrum(self):
+        rng = np.random.default_rng(5)
+        a = rng.normal(size=(60, 60)).astype(np.float32)
+        k = a @ a.T / 60.0
+        l_est = float(base.power_iteration_l(jnp.asarray(k)))
+        l_true = float(np.linalg.eigvalsh(k).max())
+        assert l_est >= 0.99 * l_true  # 1.05 safety factor in estimator
+
+
+# ------------------------------------------------------------------- hinge
+
+class TestHinge:
+    def test_separable_margin(self):
+        rng = np.random.default_rng(6)
+        n = 120
+        y = np.sign(rng.normal(size=n)).astype(np.float32)
+        x = (rng.normal(size=(n, 2)) + 3.0 * y[:, None]).astype(np.float32)
+        k = _gram(x, gamma=3.0)
+        lam = jnp.asarray([1e-4], jnp.float32)
+        res = hinge.solve_hinge(k, jnp.asarray(y), lam, jnp.float32(n),
+                                tol=1e-5, max_iters=10000)
+        f = np.asarray(k @ res.c)[:, 0]
+        assert np.mean(np.sign(f) == y) == 1.0
+
+    def test_duality_gap_closes(self):
+        rng = np.random.default_rng(7)
+        n = 100
+        y = np.sign(rng.normal(size=n)).astype(np.float32)
+        x = (rng.normal(size=(n, 4)) + 1.2 * y[:, None]).astype(np.float32)
+        k = _gram(x, gamma=2.0)
+        lam = jnp.asarray([1e-3, 1e-2], jnp.float32)
+        res = hinge.solve_hinge(k, jnp.asarray(y), lam, jnp.float32(n),
+                                tol=1e-6, max_iters=30000)
+        gap = np.asarray(hinge.primal_dual_gap(k, jnp.asarray(y), res.c, lam,
+                                               jnp.float32(n)))
+        assert np.all(gap < 1e-3)
+
+    def test_box_respects_class_weight(self):
+        y = jnp.asarray([1.0, -1.0], jnp.float32)
+        lam = jnp.asarray([0.1], jnp.float32)
+        w = jnp.asarray([2.0, 1.0], jnp.float32)  # +1 class weighted 2x
+        lo, hi = hinge.hinge_boxes(y, lam, jnp.float32(2.0), sample_weight=w)
+        c = 1.0 / (2.0 * 0.1 * 2.0)
+        np.testing.assert_allclose(hi[0, 0], 2.0 * c, rtol=1e-6)
+        np.testing.assert_allclose(lo[1, 0], -c, rtol=1e-6)
+
+    def test_masked_samples_are_inert(self):
+        """Zero-width box == removing the sample from the dual exactly."""
+        rng = np.random.default_rng(8)
+        n = 60
+        y = np.sign(rng.normal(size=n)).astype(np.float32)
+        x = (rng.normal(size=(n, 3)) + 1.5 * y[:, None]).astype(np.float32)
+        k_full = _gram(x)
+        mask = np.ones(n, np.float32)
+        mask[40:] = 0.0
+        lam = jnp.asarray([1e-3], jnp.float32)
+        res_m = hinge.solve_hinge(k_full, jnp.asarray(y), lam, jnp.float32(40),
+                                  train_mask=jnp.asarray(mask), tol=1e-6,
+                                  max_iters=20000)
+        k_sub = _gram(x[:40])
+        res_s = hinge.solve_hinge(k_sub, jnp.asarray(y[:40]), lam,
+                                  jnp.float32(40), tol=1e-6, max_iters=20000)
+        np.testing.assert_allclose(res_m.c[:40], res_s.c, atol=5e-4)
+        np.testing.assert_allclose(res_m.c[40:], 0.0, atol=1e-7)
+
+
+# ------------------------------------------------------------------ quantile
+
+class TestQuantile:
+    @pytest.mark.parametrize("tau", [0.1, 0.5, 0.9])
+    def test_pinball_coverage(self, tau):
+        rng = np.random.default_rng(9)
+        n = 400
+        x = rng.uniform(-1, 1, (n, 1)).astype(np.float32)
+        y = (np.sin(2 * x[:, 0]) + 0.3 * rng.normal(size=n)).astype(np.float32)
+        k = _gram(x, gamma=0.4)
+        res = qs.solve_quantile(k, jnp.asarray(y), jnp.asarray([tau], jnp.float32),
+                                jnp.asarray([2e-5], jnp.float32), jnp.float32(n),
+                                tol=1e-5, max_iters=30000)
+        f = np.asarray(k @ res.c)[:, 0]
+        cover = float(np.mean(y <= f))
+        assert abs(cover - tau) < 0.08, (tau, cover)
+
+    def test_box_is_label_independent(self):
+        lo, hi = qs.quantile_boxes(jnp.asarray([0.3]), jnp.asarray([0.1]),
+                                   jnp.float32(10.0), n=4)
+        c = 1.0 / (2.0 * 0.1 * 10.0)
+        np.testing.assert_allclose(lo, np.full((4, 1), (0.3 - 1.0) * c), rtol=1e-6)
+        np.testing.assert_allclose(hi, np.full((4, 1), 0.3 * c), rtol=1e-6)
+
+
+# ----------------------------------------------------------------- LS / KRR
+
+class TestLeastSquares:
+    def test_eigh_path_matches_cholesky(self):
+        rng = np.random.default_rng(10)
+        x = rng.normal(size=(80, 4)).astype(np.float32)
+        y = jnp.asarray(rng.normal(size=80), jnp.float32)
+        k = _gram(x)
+        lams = jnp.asarray([1e-3, 1e-2, 1e-1], jnp.float32)
+        c_path = ls.solve_krr_eigh(k, y, lams, jnp.float32(80))
+        for j, lam in enumerate(np.asarray(lams)):
+            c_chol = ls.solve_krr_chol(k, y, jnp.float32(lam), jnp.float32(80))
+            np.testing.assert_allclose(c_path[:, j], c_chol, atol=2e-3)
+
+    def test_interpolates_at_tiny_lambda(self):
+        rng = np.random.default_rng(11)
+        x = rng.normal(size=(50, 2)).astype(np.float32)
+        y = rng.normal(size=50).astype(np.float32)
+        k = _gram(x, gamma=1.5) + 1e-4 * jnp.eye(50)
+        c = ls.solve_krr_eigh(k, jnp.asarray(y), jnp.asarray([1e-9], jnp.float32),
+                              jnp.float32(50))
+        f = np.asarray(k @ c)[:, 0]
+        assert np.max(np.abs(f - y)) < 0.15  # f32 eigh conditioning floor
+
+    def test_masked_fold_equals_subproblem(self):
+        rng = np.random.default_rng(12)
+        x = rng.normal(size=(60, 3)).astype(np.float32)
+        y = rng.normal(size=60).astype(np.float32)
+        mask = np.ones(60, np.float32); mask[45:] = 0.0
+        k = _gram(x)
+        c_m = ls.solve_krr_eigh(k, jnp.asarray(y), jnp.asarray([1e-2], jnp.float32),
+                                jnp.float32(45), train_mask=jnp.asarray(mask))
+        c_s = ls.solve_krr_eigh(_gram(x[:45]), jnp.asarray(y[:45]),
+                                jnp.asarray([1e-2], jnp.float32), jnp.float32(45))
+        np.testing.assert_allclose(c_m[:45], c_s, atol=1e-3)
+        np.testing.assert_allclose(c_m[45:], 0.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------- expectile
+
+class TestExpectile:
+    def test_tau_half_is_krr(self):
+        """tau = 0.5 halves the LS loss => lambda is effectively doubled."""
+        rng = np.random.default_rng(13)
+        x = rng.normal(size=(70, 3)).astype(np.float32)
+        y = rng.normal(size=70).astype(np.float32)
+        k = _gram(x)
+        c_exp = exp_solver.solve_expectile(
+            k, jnp.asarray(y), jnp.asarray([0.5], jnp.float32),
+            jnp.asarray([1e-2], jnp.float32), jnp.float32(70))
+        c_krr = ls.solve_krr_eigh(k, jnp.asarray(y),
+                                  jnp.asarray([2e-2], jnp.float32), jnp.float32(70))
+        np.testing.assert_allclose(c_exp[:, 0], c_krr[:, 0], atol=2e-3)
+
+    def test_expectile_ordering(self):
+        """Higher tau => pointwise higher expectile estimate (on average)."""
+        rng = np.random.default_rng(14)
+        n = 300
+        x = rng.uniform(-1, 1, (n, 1)).astype(np.float32)
+        y = (0.4 * rng.normal(size=n)).astype(np.float32)
+        k = _gram(x, gamma=0.5)
+        c = exp_solver.solve_expectile(
+            k, jnp.asarray(y), jnp.asarray([0.2, 0.5, 0.8], jnp.float32),
+            jnp.asarray([1e-4, 1e-4, 1e-4], jnp.float32), jnp.float32(n))
+        f = np.asarray(k @ c)
+        assert np.mean(f[:, 0]) < np.mean(f[:, 1]) < np.mean(f[:, 2])
+
+    def test_irls_stationarity(self):
+        """At the IRLS fixed point: K c + lam n W^{-1} c - y = 0 on W(c)."""
+        rng = np.random.default_rng(15)
+        x = rng.normal(size=(40, 2)).astype(np.float32)
+        y = rng.normal(size=40).astype(np.float32)
+        k = _gram(x)
+        tau, lam = 0.7, 1e-2
+        c = exp_solver.solve_expectile(
+            k, jnp.asarray(y), jnp.asarray([tau], jnp.float32),
+            jnp.asarray([lam], jnp.float32), jnp.float32(40), sweeps=40)[:, 0]
+        f = np.asarray(k @ c)
+        w = np.where(y - f > 0, tau, 1.0 - tau)
+        resid = f + lam * 40.0 * np.asarray(c) / w - y
+        assert np.max(np.abs(resid)) < 1e-3

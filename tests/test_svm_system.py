@@ -1,0 +1,119 @@
+"""End-to-end LiquidSVM integration tests: the paper's learning scenarios and
+the cell-decomposition error-parity claims (Tables 3/9 mechanism)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.data.synthetic import banana_mc, covtype_like, regression_1d, train_test_split
+from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+
+
+def _binary_data(n=1600, seed=0):
+    x, y = covtype_like(n=n, d=6, seed=seed, label_noise=0.02, n_modes=3)
+    return train_test_split(x, np.where(y == 0, -1, 1), 0.25, seed)
+
+
+class TestScenarios:
+    def test_binary(self):
+        xtr, ytr, xte, yte = _binary_data()
+        m = LiquidSVM(SVMTrainerConfig(n_folds=3, max_iters=300)).fit(xtr, ytr)
+        assert m.error(xte, yte) < 0.12
+
+    def test_ova_multiclass(self):
+        x, y = banana_mc(n=1200, n_classes=4, seed=1)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 1)
+        m = LiquidSVM(SVMTrainerConfig(scenario="ova", n_folds=3,
+                                       max_iters=600)).fit(xtr, ytr)
+        assert m.error(xte, yte) < 0.18  # 4 overlapping bananas, nonzero Bayes
+
+    def test_ava_multiclass(self):
+        x, y = banana_mc(n=1200, n_classes=3, seed=2)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 2)
+        m = LiquidSVM(SVMTrainerConfig(scenario="ava", n_folds=3,
+                                       max_iters=300)).fit(xtr, ytr)
+        assert m.error(xte, yte) < 0.15
+
+    def test_quantile_regression(self):
+        x, y = regression_1d(n=900, seed=3)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 3)
+        cfg = SVMTrainerConfig(scenario="quantile", taus=(0.1, 0.5, 0.9),
+                               n_folds=3, max_iters=2000)
+        m = LiquidSVM(cfg).fit(xtr, ytr)
+        pred = m.predict(xte)                      # (m, 3)
+        cover = (yte[:, None] <= pred).mean(0)
+        assert cover[0] < cover[1] < cover[2]
+        assert abs(cover[1] - 0.5) < 0.12
+
+    def test_expectile_regression(self):
+        x, y = regression_1d(n=700, seed=4)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 4)
+        cfg = SVMTrainerConfig(scenario="expectile", taus=(0.25, 0.75),
+                               n_folds=3)
+        m = LiquidSVM(cfg).fit(xtr, ytr)
+        pred = m.predict(xte)
+        assert (pred[:, 0].mean() < pred[:, 1].mean())
+
+    def test_weighted_classification(self):
+        xtr, ytr, xte, yte = _binary_data(seed=5)
+        cfg = SVMTrainerConfig(scenario="weighted", weights=(0.5, 1.0, 2.0),
+                               n_folds=3, max_iters=300)
+        m = LiquidSVM(cfg).fit(xtr, ytr)
+        assert m.error(xte, yte) < 0.15
+
+    def test_neyman_pearson_false_alarm_control(self):
+        """npsvm: pick the class weight meeting the false-alarm budget."""
+        xtr, ytr, xte, yte = _binary_data(n=2000, seed=10)
+        cfg = SVMTrainerConfig(scenario="npsvm", np_alpha=0.05,
+                               weights=(0.25, 0.5, 1.0, 2.0, 4.0),
+                               n_folds=3, max_iters=400)
+        m = LiquidSVM(cfg).fit(xtr, ytr)
+        pred = m.predict(xte)
+        fa_test = float((pred[yte < 0] > 0).mean())
+        det_test = float((pred[yte > 0] > 0).mean())
+        assert m.np_fa[m.np_weight_idx] <= cfg.np_alpha + 1e-9
+        assert fa_test <= cfg.np_alpha + 0.05       # generalization slack
+        assert det_test > 0.5                        # still detects
+
+
+class TestCellDecomposition:
+    """The paper's Tables 3/9 claim: cells give big speedups with little
+    error cost.  We assert the error side; the FLOP side is benchmarked."""
+
+    @pytest.mark.parametrize("method", ["random", "voronoi", "recursive"])
+    def test_cells_error_parity(self, method):
+        xtr, ytr, xte, yte = _binary_data(n=2400, seed=6)
+        base_cfg = SVMTrainerConfig(n_folds=3, max_iters=300)
+        err_full = LiquidSVM(base_cfg).fit(xtr, ytr).error(xte, yte)
+        cell_cfg = SVMTrainerConfig(n_folds=3, max_iters=300,
+                                    cell_method=method, cell_size=450)
+        err_cell = LiquidSVM(cell_cfg).fit(xtr, ytr).error(xte, yte)
+        assert err_cell <= err_full + 0.06, (method, err_full, err_cell)
+
+    def test_overlap_cells(self):
+        xtr, ytr, xte, yte = _binary_data(n=1600, seed=7)
+        cfg = SVMTrainerConfig(n_folds=3, max_iters=300,
+                               cell_method="overlap", cell_size=400)
+        m = LiquidSVM(cfg).fit(xtr, ytr)
+        assert m.error(xte, yte) < 0.15
+
+    def test_coarse_fine(self):
+        xtr, ytr, xte, yte = _binary_data(n=2000, seed=8)
+        cfg = SVMTrainerConfig(n_folds=3, max_iters=300,
+                               cell_method="coarse_fine", cell_size=300)
+        m = LiquidSVM(cfg).fit(xtr, ytr)
+        assert m.error(xte, yte) < 0.15
+
+
+class TestConfigKnobs:
+    def test_grid_choice_1(self):
+        xtr, ytr, xte, yte = _binary_data(n=800, seed=9)
+        cfg = SVMTrainerConfig(n_folds=3, max_iters=200, grid_choice=1)
+        m = LiquidSVM(cfg).fit(xtr, ytr)
+        assert m.error(xte, yte) < 0.2
+
+    def test_adaptivity_control_shrinks_grid(self):
+        from repro.core.grids import adaptive_subgrid, liquid_grid
+        g = liquid_grid(n=500, dim=4, grid_choice=0)
+        a1 = adaptive_subgrid(g, 1)
+        assert len(a1.gammas) * len(a1.lambdas) < len(g.gammas) * len(g.lambdas)
