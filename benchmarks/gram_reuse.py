@@ -1,0 +1,157 @@
+"""Distance-cache Gram pipeline benchmark (§2 "Hyper-Parameter Selection").
+
+Measures the CV hot loop — ``cv_cell`` over an n_gamma grid — with the
+cached-D² pipeline (one O(n²d) cross term total, one O(n²) epilogue per
+gamma) against the per-gamma-Gram baseline that rematerializes the kernel
+matrix for every gamma.  The gap grows with both d (cross-term cost) and
+n_gamma (amortization), so the sweep is over gamma-grid size at fixed (n, d).
+
+Three variants per grid size:
+
+  * ``cached_d2``       — the new pipeline: D² hoisted out of the gamma scan;
+  * ``per_gamma_gram``  — THE baseline: one fused-CV invocation per gamma
+                          (selection combined host-side), so the Gram is
+                          genuinely rebuilt n_gamma times.  This is the
+                          execution shape of every grid driver without
+                          kernel-matrix re-use (libsvm-style outer loops,
+                          and our own scan on TPU where the fused Pallas
+                          Gram kernel is opaque to XLA);
+  * ``scan_no_cache``   — ``cv_cell(cache_d2=False)``: the pre-optimization
+                          in-scan Gram.  On CPU XLA's loop-invariant code
+                          motion hoists the jnp cross term itself, so this
+                          lands near ``cached_d2`` — evidence the transform
+                          is exactly the loop-invariant structure, made
+                          explicit so it survives opaque (Pallas) kernels.
+
+``PYTHONPATH=src python -m benchmarks.gram_reuse``  — quick mode by default
+(REPRO_BENCH_FULL=1 for larger shapes); always writes BENCH_gram_reuse.json
+at the repo root so the perf trajectory is recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QUICK, Report, timeit
+from repro.core import cv as cv_mod
+from repro.core import grids
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_gram_reuse.json")
+
+N_LAMBDA = 8
+
+
+def _make_problem(n: int, d: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    y = np.sign(rng.normal(size=n)).astype(np.float32)
+    x = (rng.normal(size=(n, d)) * 0.3 + y[:, None] * rng.normal(size=d) * 0.2)
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)
+
+
+def _columns(x, y, cfg):
+    grid = grids.GridSpec(gammas=jnp.ones((1,), jnp.float32),
+                          lambdas=jnp.logspace(0, -3, N_LAMBDA).astype(jnp.float32))
+    lam_c, sub_c, task_c, n_lam, n_sub = cv_mod.grid_columns(grid, cfg, n_tasks=1)
+    return dict(y_tasks=y[None, :], task_mask=jnp.ones((1, x.shape[0]), jnp.float32),
+                mask=jnp.ones((x.shape[0],), jnp.float32),
+                lam_c=lam_c, sub_c=sub_c, task_c=task_c, n_lam=n_lam, n_sub=n_sub,
+                key=jax.random.PRNGKey(0))
+
+
+def _scan_runner(x, gammas, cfg, cols):
+    """One fused invocation over the whole gamma grid (lax.scan inside)."""
+
+    def run():
+        sel = cv_mod.cv_cell(x, cols["y_tasks"], cols["task_mask"], cols["mask"],
+                             gammas, cols["lam_c"], cols["sub_c"], cols["task_c"],
+                             cols["key"], cfg, n_lam=cols["n_lam"], n_sub=cols["n_sub"])
+        jax.block_until_ready(sel.val_loss)
+        return sel
+
+    return run
+
+
+def _per_gamma_runner(x, gammas, cfg, cols):
+    """One invocation per gamma; streaming argmin combined host-side.  The
+    Gram is rebuilt from scratch inside every call — no reuse possible."""
+
+    def run():
+        best = np.inf
+        for i in range(gammas.shape[0]):
+            sel = cv_mod.cv_cell(x, cols["y_tasks"], cols["task_mask"], cols["mask"],
+                                 gammas[i:i + 1], cols["lam_c"], cols["sub_c"],
+                                 cols["task_c"], cols["key"], cfg,
+                                 n_lam=cols["n_lam"], n_sub=cols["n_sub"])
+            jax.block_until_ready(sel.val_loss)
+            best = min(best, float(sel.val_loss[0, 0]))
+        return best
+
+    return run
+
+
+def run(report: Report) -> None:
+    n = 512 if QUICK else 1024
+    d = 4096
+    gamma_counts = (2, 8, 16) if QUICK else (2, 4, 8, 16, 32)
+    x, y = _make_problem(n, d)
+    # tol low enough that all variants run the full iteration budget: the
+    # comparison isolates Gram rematerialization, not warm-start luck
+    base_cfg = cv_mod.CVConfig(n_folds=3, max_iters=60, tol=1e-5)
+    cols = _columns(x, y, base_cfg)
+
+    results = []
+    for n_gamma in gamma_counts:
+        gammas = jnp.logspace(1.2, -0.5, n_gamma).astype(jnp.float32)
+        runners = {
+            "cached_d2": _scan_runner(x, gammas, base_cfg, cols),
+            "per_gamma_gram": _per_gamma_runner(x, gammas, base_cfg, cols),
+            "scan_no_cache": _scan_runner(
+                x, gammas, dataclasses.replace(base_cfg, cache_d2=False), cols),
+        }
+        times = {}
+        for label, runner in runners.items():
+            runner()                       # compile + warmup
+            times[label] = timeit(runner, repeats=3 if QUICK else 5)
+        speedup = times["per_gamma_gram"] / max(times["cached_d2"], 1e-9)
+        report.add("gram_reuse", f"n{n}_d{d}_g{n_gamma}", times["cached_d2"],
+                   per_gamma_gram_s=round(times["per_gamma_gram"], 4),
+                   scan_no_cache_s=round(times["scan_no_cache"], 4),
+                   speedup=round(speedup, 2), n_gamma=n_gamma)
+        results.append({"n": n, "d": d, "n_gamma": n_gamma,
+                        "n_folds": base_cfg.n_folds, "n_lambda": N_LAMBDA,
+                        "cached_d2_s": times["cached_d2"],
+                        "per_gamma_gram_s": times["per_gamma_gram"],
+                        "scan_no_cache_s": times["scan_no_cache"],
+                        "speedup": speedup})
+
+    payload = {
+        "benchmark": "gram_reuse",
+        "backend": jax.default_backend(),
+        "quick": QUICK,
+        "unix_time": time.time(),
+        "rows": results,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+
+
+def main() -> int:
+    report = Report()
+    print(f"# gram_reuse (quick={QUICK}) — csv: table,name,us,derived", flush=True)
+    run(report)
+    md = report.table_markdown("gram_reuse")
+    if md:
+        print(f"\n## gram_reuse\n{md}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,7 +16,7 @@ from benchmarks.common import QUICK, Report
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", default="table1,table2,table3,table4,table10")
+    ap.add_argument("--tables", default="table1,table2,table3,table4,table10,gram_reuse")
     args = ap.parse_args(argv)
     tables = args.tables.split(",")
     report = Report()
@@ -39,9 +39,12 @@ def main(argv=None) -> int:
     if "table10" in tables:
         from benchmarks import table10_configs
         table10_configs.run(report)
+    if "gram_reuse" in tables:
+        from benchmarks import gram_reuse
+        gram_reuse.run(report)
 
     print(f"\n# done in {time.time() - t0:.0f}s")
-    for t in ("table1", "table2", "table3", "table4", "table10"):
+    for t in ("table1", "table2", "table3", "table4", "table10", "gram_reuse"):
         md = report.table_markdown(t)
         if md:
             print(f"\n## {t}\n{md}")

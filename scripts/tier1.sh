@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify gate — the exact command from ROADMAP.md, reproducible.
+#   ./scripts/tier1.sh            # full suite
+#   ./scripts/tier1.sh -m 'not slow'   # quick pass (extra args forwarded)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -2,14 +2,29 @@
 
 Execution shape (the whole point of the TPU port):
 
+    D2 = sq_dists(X, X)                    # ONE distance matrix per cell —
+                                           #   the only O(n²d) MXU cross term
+                                           #   in the whole gamma scan
     for gamma in gammas:                   # lax.scan — Gram re-use
-        K = kernel(X, X, gamma)            # ONE Gram per gamma, shared by
-                                           #   all folds, all TASKS, and the
-                                           #   full lambda/tau/w grid
+        K = epilogue(D2, gamma)            # O(n²) VPU pass: exp(-D2/gamma²),
+                                           #   bf16 downcast fused on write;
+                                           #   shared by all folds, all TASKS,
+                                           #   and the full lambda/tau/w grid
         for fold in folds:                 # vmap — "multi-threading"
             solve ALL columns (task x lambda x tau/w) as one batched box-QP
             validation predictions = K @ C             (one GEMM)
         streaming selection: keep the per-(task, sub) best model so far
+
+Distance-cache pipeline: both built-in kernels factor through the
+gamma-independent D², so the Gram rematerialization cost across an n_gamma
+grid drops from n_gamma GEMMs to one GEMM plus n_gamma elementwise passes
+(kernels that do not factor — see ``kernel_fns.KernelSpec`` — fall back to
+one full evaluation per gamma, as does ``cache_d2=False``, kept as the
+benchmark baseline).  On TPU the D² kernel computes only upper-triangle
+tiles and mirrors them (``sq_dists_pallas(symmetric=True)``), and the bf16
+read path for the hinge/quantile solvers is fused into the per-gamma
+epilogue's single VMEM pass (``gram_from_d2_pallas(out_dtype="bf16")``) —
+the Gram is never materialized in f32 at all on that path.
 
 Columns are task-major:  col = t * (n_lam * n_sub) + l * n_sub + s, where
 "sub" is the quantile/expectile tau or the hinge class-weight index.
@@ -58,6 +73,9 @@ class CVConfig:
                                     # Gram + power iteration — the baseline)
     gram_dtype: str = "f32"         # f32 | bf16 (hinge/quantile solve reads
                                     # a 2-byte Gram, accumulates f32 — §Perf)
+    cache_d2: bool = True           # hoist the gamma-independent D² out of
+                                    # the gamma scan (False: recompute the
+                                    # full Gram per gamma — the baseline)
     taus: Tuple[float, ...] = (0.5,)       # quantile/expectile levels (sub axis)
     weights: Tuple[float, ...] = (1.0,)    # hinge +1-class weight grid (sub axis)
 
@@ -195,11 +213,22 @@ def cv_cell(
     y_cols = y_tasks[task_c].T                                 # (n, P)
     colmask = task_mask[task_c].T * mask[:, None]              # (n, P)
 
+    spec = kernel_fns.get_spec(cfg.kernel)
+    use_d2 = cfg.cache_d2 and spec.factors_through_d2
+    want_bf16 = cfg.gram_dtype == "bf16" and cfg.solver in ("hinge", "quantile")
+    gram_dtype = "bf16" if want_bf16 else "f32"
+    # ONE D² for the whole gamma scan: the O(n²d) MXU cross term is hoisted
+    # out of the lax.scan; each scan step replays only the O(n²) epilogue.
+    cg = kernel_fns.CachedGram.build(x, name=cfg.kernel) if use_d2 else None
+
     def per_gamma(carry, gamma):
         best_val, best_cfs, best_g, best_l, c0_all = carry
-        k_full = kernel_fns.get_kernel(cfg.kernel)(x, x, gamma)  # ONE Gram
-        if cfg.gram_dtype == "bf16" and cfg.solver in ("hinge", "quantile"):
-            k_full = k_full.astype(jnp.bfloat16)   # 2-byte solver reads
+        if use_d2:
+            k_full = cg.gram(gamma, gram_dtype)                # VPU-only pass
+        else:
+            k_full = spec.fn(x, x, gamma)                      # ONE Gram/gamma
+            if want_bf16:
+                k_full = k_full.astype(jnp.bfloat16)   # 2-byte solver reads
 
         # ONE Lipschitz estimate per gamma, shared by every fold: for a PSD
         # Gram, lambda_max(M K M) <= lambda_max(K) for any 0/1 mask M, so

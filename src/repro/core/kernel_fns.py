@@ -1,4 +1,4 @@
-"""Kernel functions (liquidSVM §2 "Solvers").
+"""Kernel functions (liquidSVM §2 "Solvers") and the distance-cache API.
 
 liquidSVM's RBF convention (paper Table 5) is ``k_gamma(u, v) =
 exp(-||u-v||^2 / gamma^2)`` — gamma is a *length scale*, unlike libsvm's
@@ -7,43 +7,62 @@ converts between the two so the "libsvm grid" benchmarks are faithful.
 
 All pairwise ops use the MXU-friendly decomposition
 ``||u-v||^2 = ||u||^2 + ||v||^2 - 2 u.v`` so the dominant cost is a matmul.
-The Pallas kernel in ``repro.kernels.kernel_matrix`` implements the same
+The Pallas kernels in ``repro.kernels.kernel_matrix`` implement the same
 contract with explicit VMEM tiling; these jnp versions are the oracles and
 the default CPU path.
+
+Distance-cache pipeline (the package's headline kernel-matrix re-use,
+§2 "Hyper-Parameter Selection"): both built-in kernels *factor through the
+squared-distance matrix* — ``K_gamma = epilogue_gamma(D2)`` with D2
+gamma-independent.  The registry records that factorization, so grid scans
+(``repro.core.cv``) and multi-gamma prediction (``repro.core.svm``) pay the
+O(n²d) MXU cross term ONCE and replay an O(n²) VPU epilogue per gamma.
+:class:`CachedGram` / :func:`gram_for_gammas` expose the same shape to
+users; kernels registered without an epilogue transparently fall back to
+the per-gamma full evaluation.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.kernel_matrix import ops as km_ops
+from repro.kernels.kernel_matrix import ref as km_ref
 
 Array = jax.Array
 
 _EPS = 1e-12
 
+KernelFn = Callable[[Array, Array, Array], Array]
+# (d2, gamma, out_dtype) -> K;  out_dtype in {"f32", "bf16"}
+D2Epilogue = Callable[[Array, Array, str], Array]
+
 
 def sq_dists(x: Array, z: Array) -> Array:
-    """Pairwise squared distances, (n, d) x (m, d) -> (n, m), f32 accum."""
-    x = x.astype(jnp.float32)
-    z = z.astype(jnp.float32)
-    xx = jnp.sum(x * x, axis=-1)[:, None]
-    zz = jnp.sum(z * z, axis=-1)[None, :]
-    cross = x @ z.T
-    return jnp.maximum(xx + zz - 2.0 * cross, 0.0)
+    """Pairwise squared distances, (n, d) x (m, d) -> (n, m), f32 accum.
+
+    Single implementation lives in ``kernels.kernel_matrix.ref`` (as with
+    the epilogues) so oracle and pipeline can never drift apart.
+    """
+    return km_ref.sq_dists_ref(x, z)
 
 
 def gaussian(x: Array, z: Array, gamma: Array) -> Array:
-    """liquidSVM Gaussian RBF: exp(-||u-v||^2 / gamma^2)."""
-    g2 = jnp.asarray(gamma, jnp.float32) ** 2
-    return jnp.exp(-sq_dists(x, z) / jnp.maximum(g2, _EPS))
+    """liquidSVM Gaussian RBF: exp(-||u-v||^2 / gamma^2).
+
+    Delegates to the single epilogue implementation in
+    ``kernels.kernel_matrix.ref`` so oracle and pipeline share one formula.
+    """
+    return km_ref.gram_from_d2_ref(sq_dists(x, z), gamma, "gauss_rbf")
 
 
 def laplacian(x: Array, z: Array, gamma: Array) -> Array:
     """Laplacian kernel: exp(-||u-v|| / gamma)."""
-    d = jnp.sqrt(sq_dists(x, z) + _EPS)
-    return jnp.exp(-d / jnp.maximum(jnp.asarray(gamma, jnp.float32), _EPS))
+    return km_ref.gram_from_d2_ref(sq_dists(x, z), gamma, "laplacian")
 
 
 def libsvm_gamma_to_scale(g: Array) -> Array:
@@ -51,21 +70,76 @@ def libsvm_gamma_to_scale(g: Array) -> Array:
     return jnp.asarray(g, jnp.float32) ** -0.5
 
 
-_REGISTRY: Dict[str, Callable[[Array, Array, Array], Array]] = {
-    "gauss_rbf": gaussian,
-    "laplacian": laplacian,
+def _cast_out(k: Array, out_dtype: str) -> Array:
+    """Honor the out_dtype contract on fallback paths too (the D² epilogue
+    fuses this downcast; full-kernel fallbacks apply it after the fact)."""
+    return k.astype(jnp.bfloat16) if out_dtype == "bf16" else k
+
+
+def _builtin_epilogue(kind: str) -> D2Epilogue:
+    def epilogue(d2: Array, gamma: Array, out_dtype: str = "f32") -> Array:
+        return km_ops.gram_from_d2(d2, gamma, kind=kind, out_dtype=out_dtype)
+
+    return epilogue
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """Registry entry: the full kernel plus its (optional) D² factorization.
+
+    ``d2_epilogue(d2, gamma, out_dtype)`` must satisfy
+    ``fn(x, z, gamma) == d2_epilogue(sq_dists(x, z), gamma, "f32")``; leave
+    it None for kernels that do not factor through pairwise distances (the
+    grid scan then falls back to one full evaluation per gamma).
+    """
+    name: str
+    fn: KernelFn
+    d2_epilogue: Optional[D2Epilogue] = None
+
+    @property
+    def factors_through_d2(self) -> bool:
+        return self.d2_epilogue is not None
+
+
+_REGISTRY: Dict[str, KernelSpec] = {
+    "gauss_rbf": KernelSpec("gauss_rbf", gaussian, _builtin_epilogue("gauss_rbf")),
+    "laplacian": KernelSpec("laplacian", laplacian, _builtin_epilogue("laplacian")),
 }
 
 
-def register_kernel(name: str, fn: Callable[[Array, Array, Array], Array]) -> None:
-    """Paper: 'it is possible to add own normalized kernels'."""
-    _REGISTRY[name] = fn
+def register_kernel(name: str, fn: KernelFn,
+                    d2_epilogue: Optional[D2Epilogue] = None) -> None:
+    """Paper: 'it is possible to add own normalized kernels'.
+
+    Pass ``d2_epilogue`` when the kernel is a function of ``||u-v||^2`` so
+    grid scans can reuse the cached distance matrix across gammas.
+    """
+    _REGISTRY[name] = KernelSpec(name, fn, d2_epilogue)
 
 
-def get_kernel(name: str) -> Callable[[Array, Array, Array], Array]:
+def unregister_kernel(name: str) -> None:
+    """Remove a registered kernel (tests / plugin teardown).
+
+    NOTE: jit'd entry points (``gram``, ``gram_for_gammas``) key their
+    compilation cache by the static name — re-registering the same name
+    with a different fn will NOT recompile already-traced shapes.  Use a
+    fresh name per distinct kernel function.
+    """
+    _REGISTRY.pop(name)
+
+
+def get_kernel(name: str) -> KernelFn:
+    return get_spec(name).fn
+
+
+def get_spec(name: str) -> KernelSpec:
     if name not in _REGISTRY:
         raise KeyError(f"unknown kernel {name!r}; known: {sorted(_REGISTRY)}")
     return _REGISTRY[name]
+
+
+def factors_through_d2(name: str) -> bool:
+    return get_spec(name).factors_through_d2
 
 
 @functools.partial(jax.jit, static_argnames=("name",))
@@ -76,6 +150,79 @@ def gram(x: Array, gamma: Array, name: str = "gauss_rbf") -> Array:
 @functools.partial(jax.jit, static_argnames=("name",))
 def cross_gram(x: Array, z: Array, gamma: Array, name: str = "gauss_rbf") -> Array:
     return get_kernel(name)(x, z, gamma)
+
+
+@dataclasses.dataclass(frozen=True)
+class CachedGram:
+    """Gamma-independent state of a Gram matrix: D² plus the epilogue.
+
+    Build once per working set (``symmetric=True`` halves the MXU flops for
+    the train Gram), then ``.gram(gamma)`` is a pure VPU pass per gamma.
+    A jax pytree (D² is the only leaf), so it threads through jit/vmap.
+    """
+    d2: Array
+    name: str = "gauss_rbf"
+
+    @classmethod
+    def build(cls, x: Array, z: Array | None = None,
+              name: str = "gauss_rbf") -> "CachedGram":
+        spec = get_spec(name)
+        if not spec.factors_through_d2:
+            raise ValueError(
+                f"kernel {name!r} does not factor through D2; "
+                "use get_kernel(name) per gamma instead")
+        if z is None:
+            d2 = km_ops.sq_dists(x, x, symmetric=True)
+        else:
+            d2 = km_ops.sq_dists(x, z)
+        return cls(d2=d2, name=name)
+
+    def gram(self, gamma: Array, out_dtype: str = "f32") -> Array:
+        return get_spec(self.name).d2_epilogue(self.d2, gamma, out_dtype)
+
+    def grams(self, gammas: Array, out_dtype: str = "f32") -> Array:
+        """(n_gamma,) -> (n_gamma, n, m) stacked Grams, one D² read each."""
+        return jax.vmap(lambda g: self.gram(g, out_dtype))(gammas)
+
+
+jax.tree_util.register_pytree_node(
+    CachedGram,
+    lambda cg: ((cg.d2,), cg.name),
+    lambda name, leaves: CachedGram(d2=leaves[0], name=name),
+)
+
+
+@functools.partial(jax.jit, static_argnames=("name", "symmetric", "out_dtype"))
+def gram_for_gammas(x: Array, z: Array, gammas: Array, name: str = "gauss_rbf",
+                    symmetric: bool = False, out_dtype: str = "f32") -> Array:
+    """Stacked (n_gamma, n, m) Grams with at most one D² materialization.
+
+    Kernels that factor through D² pay one O(n m d) cross term total;
+    others fall back to the full per-gamma evaluation (jnp oracle).
+    ``symmetric=True`` means "the Gram of x with itself": z is ignored and
+    the halved upper-triangle path is used.
+    """
+    spec = get_spec(name)
+    if symmetric:
+        z = x
+    if not spec.factors_through_d2:
+        return jax.vmap(lambda g: _cast_out(spec.fn(x, z, g), out_dtype))(gammas)
+    d2 = km_ops.sq_dists(x, z, symmetric=symmetric)
+    return jax.vmap(lambda g: spec.d2_epilogue(d2, g, out_dtype))(gammas)
+
+
+def cross_gram_fn(x: Array, z: Array, name: str = "gauss_rbf"):
+    """Per-gamma cross-Gram closure for a FIXED (x, z) pair.
+
+    Returns ``gram_of(gamma) -> (n, m)``; the gamma-independent D² is
+    cached up front when the kernel factors through it (the multi-gamma
+    prediction paths in ``core.svm`` / ``distributed.cell_trainer`` call
+    this once per batch, then sweep selected gammas for free).
+    """
+    spec = get_spec(name)
+    if spec.factors_through_d2:
+        return CachedGram.build(x, z, name=name).gram
+    return lambda gamma, out_dtype="f32": _cast_out(spec.fn(x, z, gamma), out_dtype)
 
 
 def median_heuristic(x: Array, mask: Array | None = None, max_points: int = 512) -> Array:

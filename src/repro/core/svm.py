@@ -34,15 +34,17 @@ class TrainedSVM(NamedTuple):
     def decision_function(self, x_test: Array) -> Array:
         """(m, d) -> (m, n_tasks, n_sub).
 
-        Each (task, sub) can select a different gamma, so one Gram per
-        distinct selected gamma; vmap over the (small) task axis.
+        Each (task, sub) can select a different gamma; the cross D² matrix
+        is gamma-independent, so it is computed once and each (task, sub)
+        replays only the cheap per-gamma epilogue (vmap over the small task
+        axis).  Kernels without a D² factorization fall back to one full
+        cross-Gram per (task, sub).
         """
         x_test = jnp.asarray(x_test, jnp.float32)
-        kfun = kernel_fns.get_kernel(self.kernel)
+        gram_of = kernel_fns.cross_gram_fn(x_test, self.sv_x, self.kernel)
 
         def per_ts(gamma, coef):
-            k = kfun(x_test, self.sv_x, gamma)
-            return k @ coef
+            return gram_of(gamma) @ coef
 
         t, s = self.gamma.shape
         gflat = self.gamma.reshape(-1)

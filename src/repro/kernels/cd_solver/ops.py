@@ -9,6 +9,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.cd_solver import ref
 from repro.kernels.cd_solver.cd_solver import BLOCK_COORDS, cd_epoch_pallas
 
@@ -18,7 +19,7 @@ Array = jax.Array
 @functools.partial(jax.jit, static_argnames=("epochs", "force_pallas", "interpret"))
 def cd_epochs(k_mat: Array, y: Array, lo: Array, hi: Array, c0: Array,
               epochs: int = 1, force_pallas: bool = False,
-              interpret: bool = True) -> Array:
+              interpret: bool | None = None) -> Array:
     """Run `epochs` Gauss-Seidel sweeps on min 0.5 c'Kc - c'y, lo<=c<=hi.
 
     k_mat (n, n); y (n,) or (n, P); lo/hi/c0 (n, P).  Returns c (n, P).
@@ -31,7 +32,7 @@ def cd_epochs(k_mat: Array, y: Array, lo: Array, hi: Array, c0: Array,
     p = c0.shape[1]
     y = jnp.broadcast_to(y.astype(jnp.float32), (n, p))
 
-    use_pallas = force_pallas or jax.default_backend() == "tpu"
+    use_pallas = force_pallas or runtime.on_tpu()
     if not use_pallas:
         c, _ = ref.solve_cd_ref(k_mat, y, lo, hi, c0, epochs)
         return c
@@ -45,7 +46,7 @@ def cd_epochs(k_mat: Array, y: Array, lo: Array, hi: Array, c0: Array,
         hi = jnp.pad(hi, ((0, pad), (0, 0)))
         c0 = jnp.pad(c0, ((0, pad), (0, 0)))
     g0 = k_mat @ c0 - y
-    use_interpret = interpret and jax.default_backend() != "tpu"
+    use_interpret = runtime.resolve_interpret(interpret)
 
     def body(_, state):
         return cd_epoch_pallas(k_mat, state[0], state[1], lo, hi,

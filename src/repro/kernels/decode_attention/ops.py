@@ -7,6 +7,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.decode_attention import ref
 from repro.kernels.decode_attention.decode_attention import (
     BLOCK_S, decode_attention_pallas)
@@ -21,13 +22,13 @@ def decode_attention_fused(q: Array, k_cache: Array, v_cache: Array,
                            k_scale: Optional[Array] = None,
                            v_scale: Optional[Array] = None,
                            window: int = 0, force_pallas: bool = False,
-                           interpret: bool = True) -> Array:
+                           interpret: bool | None = None) -> Array:
     """q (B, Hk, G, D); caches (B, S, Hk, D) [+ scales (B, S, Hk, 1)].
 
     Streams the cache in its stored dtype (int8 halves HBM traffic),
     dequantizes in VMEM.  Returns (B, Hk, G, D).
     """
-    if not (force_pallas or jax.default_backend() == "tpu"):
+    if not (force_pallas or runtime.on_tpu()):
         return ref.decode_attention_ref(q, k_cache, v_cache, cache_pos,
                                         scale, k_scale, v_scale, window)
     b, hk, g, d = q.shape
@@ -46,5 +47,5 @@ def decode_attention_fused(q: Array, k_cache: Array, v_cache: Array,
     out = decode_attention_pallas(
         qf, to_bh(k_cache), to_bh(v_cache), to_bh(k_scale), to_bh(v_scale),
         cache_pos, scale=scale, window=window, s_real=s,
-        interpret=interpret and jax.default_backend() != "tpu")
+        interpret=runtime.resolve_interpret(interpret))
     return out.reshape(b, hk, g, d)

@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.flash_attention import ref
 from repro.kernels.flash_attention.flash_attention import (
     BLOCK_K, BLOCK_Q, flash_attention_pallas)
@@ -16,9 +17,9 @@ Array = jax.Array
 @functools.partial(jax.jit, static_argnames=("mask_kind", "window", "force_pallas", "interpret"))
 def flash_attention(q: Array, k: Array, v: Array, mask_kind: str = "causal",
                     window: int = 0, force_pallas: bool = False,
-                    interpret: bool = True) -> Array:
+                    interpret: bool | None = None) -> Array:
     """q (B, T, H, D); k, v (B, S, Hk, D); returns (B, T, H, D)."""
-    if not (force_pallas or jax.default_backend() == "tpu"):
+    if not (force_pallas or runtime.on_tpu()):
         return ref.flash_attention_ref(q, k, v, mask_kind, window)
 
     b, t, h, d = q.shape
@@ -38,7 +39,7 @@ def flash_attention(q: Array, k: Array, v: Array, mask_kind: str = "causal",
     qp = qp.transpose(0, 2, 1, 3).reshape(b * h, t + pad_t, d + pad_d)
     kp = kp.transpose(0, 2, 1, 3).reshape(b * h, s + pad_s, d + pad_d)
     vp = vp.transpose(0, 2, 1, 3).reshape(b * h, s + pad_s, d + pad_d)
-    use_interpret = interpret and jax.default_backend() != "tpu"
+    use_interpret = runtime.resolve_interpret(interpret)
     out = flash_attention_pallas(qp, kp, vp, mask_kind=mask_kind, window=window,
                                  scale=scale, t_real=t, s_real=s,
                                  interpret=use_interpret)

@@ -1,3 +1,3 @@
-from repro.kernels.kernel_matrix.ops import kernel_matrix
+from repro.kernels.kernel_matrix.ops import gram_from_d2, kernel_matrix, sq_dists
 
-__all__ = ["kernel_matrix"]
+__all__ = ["gram_from_d2", "kernel_matrix", "sq_dists"]

@@ -1,6 +1,15 @@
-"""jit'd wrapper: pads to tile boundaries, dispatches Pallas-on-TPU vs
-jnp-oracle elsewhere (this container is CPU; the kernel is validated in
-interpret mode by tests and enabled on real TPU backends).
+"""jit'd wrappers: pad to tile boundaries, dispatch Pallas-on-TPU vs
+jnp-oracle elsewhere (CPU hosts validate the kernels in interpret mode via
+``force_pallas=True``; real TPU backends run the Mosaic-compiled kernels).
+
+Three entry points:
+
+  * ``kernel_matrix``  — one-shot Gram/cross-Gram (legacy path);
+  * ``sq_dists``       — the gamma-independent D² matrix, computed ONCE per
+                         working set (symmetric upper-triangle compute when
+                         x is z);
+  * ``gram_from_d2``   — the per-gamma VPU epilogue replayed over a cached
+                         D², optionally downcast to bf16 on write.
 """
 from __future__ import annotations
 
@@ -9,8 +18,15 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.kernel_matrix import ref
-from repro.kernels.kernel_matrix.kernel_matrix import BLOCK_M, BLOCK_N, gram_pallas
+from repro.kernels.kernel_matrix.kernel_matrix import (
+    BLOCK_M,
+    BLOCK_N,
+    gram_from_d2_pallas,
+    gram_pallas,
+    sq_dists_pallas,
+)
 
 Array = jax.Array
 
@@ -24,19 +40,59 @@ def _pad_to(a: Array, mult: int, axis: int) -> Array:
     return jnp.pad(a, widths)
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 @functools.partial(jax.jit, static_argnames=("kind", "force_pallas", "interpret"))
 def kernel_matrix(x: Array, z: Array, gamma: Array, kind: str = "gauss_rbf",
-                  force_pallas: bool = False, interpret: bool = True) -> Array:
+                  force_pallas: bool = False, interpret: bool | None = None) -> Array:
     """K[i, j] = k_gamma(x_i, z_j); (n, d) x (m, d) -> (n, m) f32."""
     n, m = x.shape[0], z.shape[0]
-    if not (force_pallas or _on_tpu()):
+    if not (force_pallas or runtime.on_tpu()):
         return ref.kernel_matrix_ref(x, z, gamma, kind)
     xp = _pad_to(_pad_to(x, BLOCK_N, 0), 128, 1)
     zp = _pad_to(_pad_to(z, BLOCK_M, 0), 128, 1)
-    use_interpret = interpret and not _on_tpu()
-    k = gram_pallas(xp, zp, gamma, kind=kind, interpret=use_interpret)
+    k = gram_pallas(xp, zp, gamma, kind=kind,
+                    interpret=runtime.resolve_interpret(interpret))
+    return k[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("symmetric", "force_pallas", "interpret"))
+def sq_dists(x: Array, z: Array, symmetric: bool = False,
+             force_pallas: bool = False, interpret: bool | None = None) -> Array:
+    """Pairwise squared distances (n, d) x (m, d) -> (n, m) f32.
+
+    ``symmetric=True`` asserts z has x's shape and REQUIRES z to be the
+    same points as x (unverifiable at trace time — the caller's contract):
+    it computes only the upper-triangle tiles on the MXU and mirrors them —
+    ~2x fewer flops for the train Gram, and K == K.T bitwise by
+    construction.  Passing different same-shape points would silently mix
+    triangles; use ``CachedGram.build(x)`` / ``gram_for_gammas`` which pass
+    x on both sides themselves.
+    """
+    n, m = x.shape[0], z.shape[0]
+    if symmetric:
+        assert x.shape == z.shape, (x.shape, z.shape)
+    if not (force_pallas or runtime.on_tpu()):
+        return ref.sq_dists_ref(x, z, symmetric=symmetric)
+    xp = _pad_to(_pad_to(x, BLOCK_N, 0), 128, 1)
+    zp = _pad_to(_pad_to(z, BLOCK_M, 0), 128, 1)
+    d2 = sq_dists_pallas(xp, zp, symmetric=symmetric,
+                         interpret=runtime.resolve_interpret(interpret))
+    return d2[:n, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "out_dtype", "force_pallas", "interpret"))
+def gram_from_d2(d2: Array, gamma: Array, kind: str = "gauss_rbf",
+                 out_dtype: str = "f32", force_pallas: bool = False,
+                 interpret: bool | None = None) -> Array:
+    """Apply the per-gamma kernel epilogue to a cached D² matrix.
+
+    One VMEM pass per (bn, bm) tile: exp(-d2/gamma²) (or Laplacian) and the
+    optional bf16 downcast happen before the tile is written back, so the
+    per-gamma cost is a single elementwise sweep — no MXU work at all.
+    """
+    n, m = d2.shape
+    if not (force_pallas or runtime.on_tpu()):
+        return ref.gram_from_d2_ref(d2, gamma, kind, out_dtype)
+    d2p = _pad_to(_pad_to(d2, BLOCK_N, 0), BLOCK_M, 1)
+    k = gram_from_d2_pallas(d2p, gamma, kind=kind, out_dtype=out_dtype,
+                            interpret=runtime.resolve_interpret(interpret))
     return k[:n, :m]

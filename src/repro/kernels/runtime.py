@@ -1,0 +1,33 @@
+"""Backend-aware Pallas execution mode.
+
+Every kernel wrapper takes an ``interpret`` knob.  Historically it defaulted
+to ``True`` (safe everywhere, slow); the correct default depends on where we
+run: on a real TPU the Mosaic-compiled kernel must execute natively, anywhere
+else (CPU CI, GPU hosts) only the interpreter can run the kernel body.
+
+All ``ops.py`` entry points now accept ``interpret=None`` meaning "resolve
+against the actual backend at trace time" via :func:`resolve_interpret`.
+Passing an explicit bool still wins (tests force ``interpret=True`` to
+validate kernel bodies off-TPU).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    """True when jax will dispatch to a real TPU backend."""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve the tri-state interpret knob.
+
+    ``None``  -> auto: native on TPU, interpreter elsewhere.
+    ``True``  -> interpreter, except on TPU where native is always correct
+                 (and the interpreter is not supported on device).
+    ``False`` -> native Mosaic compilation (only valid on TPU).
+    """
+    if interpret is None:
+        return not on_tpu()
+    return bool(interpret) and not on_tpu()

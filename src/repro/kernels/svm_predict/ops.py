@@ -6,6 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import runtime
 from repro.kernels.svm_predict import ref
 from repro.kernels.svm_predict.svm_predict import BLOCK_S, BLOCK_T, svm_predict_pallas
 
@@ -15,12 +16,12 @@ Array = jax.Array
 @functools.partial(jax.jit, static_argnames=("kind", "force_pallas", "interpret"))
 def svm_predict(x_test: Array, sv: Array, coefs: Array, gamma: Array,
                 kind: str = "gauss_rbf", force_pallas: bool = False,
-                interpret: bool = True) -> Array:
+                interpret: bool | None = None) -> Array:
     """f = K(x_test, sv) @ coefs; returns (n_test, P)."""
     squeeze = coefs.ndim == 1
     if squeeze:
         coefs = coefs[:, None]
-    if not (force_pallas or jax.default_backend() == "tpu"):
+    if not (force_pallas or runtime.on_tpu()):
         out = ref.svm_predict_ref(x_test, sv, coefs, gamma, kind)
         return out[:, 0] if squeeze else out
 
@@ -30,6 +31,6 @@ def svm_predict(x_test: Array, sv: Array, coefs: Array, gamma: Array,
     xp = jnp.pad(x_test.astype(jnp.float32), ((0, pad_t), (0, pad_d)))
     svp = jnp.pad(sv.astype(jnp.float32), ((0, pad_s), (0, pad_d)))
     cp = jnp.pad(coefs.astype(jnp.float32), ((0, pad_s), (0, 0)))  # 0-coef padding
-    use_interpret = interpret and jax.default_backend() != "tpu"
-    out = svm_predict_pallas(xp, svp, cp, gamma, kind=kind, interpret=use_interpret)[:nt]
+    out = svm_predict_pallas(xp, svp, cp, gamma, kind=kind,
+                             interpret=runtime.resolve_interpret(interpret))[:nt]
     return out[:, 0] if squeeze else out

@@ -1,0 +1,75 @@
+"""Tiny deterministic fallback for ``hypothesis`` on bare interpreters.
+
+The tier-1 suite must collect and run without optional dev dependencies.
+When hypothesis is installed we re-export the real API unchanged; otherwise
+``@given`` degrades to a fixed-seed sweep of a handful of drawn examples —
+far weaker than real property testing, but it keeps the property tests
+exercising the code instead of being skipped wholesale.
+
+Usage in test modules::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    _FALLBACK_MAX_EXAMPLES = 6  # keep the bare-interpreter sweep cheap
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            seq = list(elements)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    st = _Strategies()
+
+    def settings(max_examples=_FALLBACK_MAX_EXAMPLES, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strats):
+        def deco(fn):
+            # no functools.wraps: __wrapped__ would leak the original
+            # signature and pytest would treat drawn params as fixtures
+            def wrapper(*args):
+                n = min(getattr(wrapper, "_max_examples", _FALLBACK_MAX_EXAMPLES),
+                        _FALLBACK_MAX_EXAMPLES)
+                rng = np.random.default_rng(0)
+                for _ in range(n):
+                    fn(*args, **{k: s.draw(rng) for k, s in strats.items()})
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco

@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.cells.builder import build_cells
 from repro.tasks.builder import combine_ava, combine_ova, make_tasks

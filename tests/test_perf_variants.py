@@ -88,7 +88,7 @@ class TestBf16Gram:
         from repro.core import cv as cv_mod
         from repro.core.svm import test_error as svm_err, train_select
         from repro.data.synthetic import covtype_like, train_test_split
-        x, yc = covtype_like(n=900, d=6, seed=0, label_noise=0.05, n_modes=3)
+        x, yc = covtype_like(n=600, d=6, seed=0, label_noise=0.05, n_modes=3)
         y = np.where(yc == 0, -1.0, 1.0).astype(np.float32)
         xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
         errs = {}

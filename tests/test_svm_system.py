@@ -8,8 +8,12 @@ import pytest
 from repro.data.synthetic import banana_mc, covtype_like, regression_1d, train_test_split
 from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
 
+# shapes are sized for CPU interpret-mode CI: big enough for the error
+# thresholds to be stable, no bigger (see pytest.ini slow marker for the
+# paper-scale variants)
 
-def _binary_data(n=1600, seed=0):
+
+def _binary_data(n=1200, seed=0):
     x, y = covtype_like(n=n, d=6, seed=seed, label_noise=0.02, n_modes=3)
     return train_test_split(x, np.where(y == 0, -1, 1), 0.25, seed)
 
@@ -21,24 +25,24 @@ class TestScenarios:
         assert m.error(xte, yte) < 0.12
 
     def test_ova_multiclass(self):
-        x, y = banana_mc(n=1200, n_classes=4, seed=1)
+        x, y = banana_mc(n=1000, n_classes=4, seed=1)
         xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 1)
         m = LiquidSVM(SVMTrainerConfig(scenario="ova", n_folds=3,
-                                       max_iters=600)).fit(xtr, ytr)
-        assert m.error(xte, yte) < 0.18  # 4 overlapping bananas, nonzero Bayes
+                                       max_iters=400)).fit(xtr, ytr)
+        assert m.error(xte, yte) < 0.2  # 4 overlapping bananas, nonzero Bayes
 
     def test_ava_multiclass(self):
-        x, y = banana_mc(n=1200, n_classes=3, seed=2)
+        x, y = banana_mc(n=1000, n_classes=3, seed=2)
         xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 2)
         m = LiquidSVM(SVMTrainerConfig(scenario="ava", n_folds=3,
                                        max_iters=300)).fit(xtr, ytr)
         assert m.error(xte, yte) < 0.15
 
     def test_quantile_regression(self):
-        x, y = regression_1d(n=900, seed=3)
+        x, y = regression_1d(n=600, seed=3)
         xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 3)
         cfg = SVMTrainerConfig(scenario="quantile", taus=(0.1, 0.5, 0.9),
-                               n_folds=3, max_iters=2000)
+                               n_folds=3, max_iters=1200)
         m = LiquidSVM(cfg).fit(xtr, ytr)
         pred = m.predict(xte)                      # (m, 3)
         cover = (yte[:, None] <= pred).mean(0)
@@ -46,10 +50,10 @@ class TestScenarios:
         assert abs(cover[1] - 0.5) < 0.12
 
     def test_expectile_regression(self):
-        x, y = regression_1d(n=700, seed=4)
+        x, y = regression_1d(n=350, seed=4)
         xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 4)
         cfg = SVMTrainerConfig(scenario="expectile", taus=(0.25, 0.75),
-                               n_folds=3)
+                               n_folds=3, max_iters=500)
         m = LiquidSVM(cfg).fit(xtr, ytr)
         pred = m.predict(xte)
         assert (pred[:, 0].mean() < pred[:, 1].mean())
@@ -61,12 +65,13 @@ class TestScenarios:
         m = LiquidSVM(cfg).fit(xtr, ytr)
         assert m.error(xte, yte) < 0.15
 
+    @pytest.mark.slow
     def test_neyman_pearson_false_alarm_control(self):
         """npsvm: pick the class weight meeting the false-alarm budget."""
-        xtr, ytr, xte, yte = _binary_data(n=2000, seed=10)
+        xtr, ytr, xte, yte = _binary_data(n=1400, seed=10)
         cfg = SVMTrainerConfig(scenario="npsvm", np_alpha=0.05,
-                               weights=(0.25, 0.5, 1.0, 2.0, 4.0),
-                               n_folds=3, max_iters=400)
+                               weights=(0.25, 0.5, 1.0, 2.0),
+                               n_folds=3, max_iters=300)
         m = LiquidSVM(cfg).fit(xtr, ytr)
         pred = m.predict(xte)
         fa_test = float((pred[yte < 0] > 0).mean())
@@ -80,27 +85,34 @@ class TestCellDecomposition:
     """The paper's Tables 3/9 claim: cells give big speedups with little
     error cost.  We assert the error side; the FLOP side is benchmarked."""
 
+    _full_err_cache = {}
+
+    @pytest.mark.slow
     @pytest.mark.parametrize("method", ["random", "voronoi", "recursive"])
     def test_cells_error_parity(self, method):
-        xtr, ytr, xte, yte = _binary_data(n=2400, seed=6)
-        base_cfg = SVMTrainerConfig(n_folds=3, max_iters=300)
-        err_full = LiquidSVM(base_cfg).fit(xtr, ytr).error(xte, yte)
+        data_key = (1600, 6)                    # keep cache keyed to the data
+        xtr, ytr, xte, yte = _binary_data(*data_key)
+        if data_key not in self._full_err_cache:  # one baseline, three methods
+            base_cfg = SVMTrainerConfig(n_folds=3, max_iters=300)
+            self._full_err_cache[data_key] = LiquidSVM(base_cfg).fit(
+                xtr, ytr).error(xte, yte)
+        err_full = self._full_err_cache[data_key]
         cell_cfg = SVMTrainerConfig(n_folds=3, max_iters=300,
-                                    cell_method=method, cell_size=450)
+                                    cell_method=method, cell_size=350)
         err_cell = LiquidSVM(cell_cfg).fit(xtr, ytr).error(xte, yte)
         assert err_cell <= err_full + 0.06, (method, err_full, err_cell)
 
     def test_overlap_cells(self):
-        xtr, ytr, xte, yte = _binary_data(n=1600, seed=7)
+        xtr, ytr, xte, yte = _binary_data(n=1200, seed=7)
         cfg = SVMTrainerConfig(n_folds=3, max_iters=300,
-                               cell_method="overlap", cell_size=400)
+                               cell_method="overlap", cell_size=300)
         m = LiquidSVM(cfg).fit(xtr, ytr)
         assert m.error(xte, yte) < 0.15
 
     def test_coarse_fine(self):
-        xtr, ytr, xte, yte = _binary_data(n=2000, seed=8)
+        xtr, ytr, xte, yte = _binary_data(n=1400, seed=8)
         cfg = SVMTrainerConfig(n_folds=3, max_iters=300,
-                               cell_method="coarse_fine", cell_size=300)
+                               cell_method="coarse_fine", cell_size=250)
         m = LiquidSVM(cfg).fit(xtr, ytr)
         assert m.error(xte, yte) < 0.15
 
