@@ -16,7 +16,8 @@ from benchmarks.common import QUICK, Report
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--tables", default="table1,table2,table3,table4,table10,gram_reuse")
+    ap.add_argument("--tables",
+                    default="table1,table2,table3,table4,table10,gram_reuse,serve")
     args = ap.parse_args(argv)
     tables = args.tables.split(",")
     report = Report()
@@ -42,9 +43,13 @@ def main(argv=None) -> int:
     if "gram_reuse" in tables:
         from benchmarks import gram_reuse
         gram_reuse.run(report)
+    if "serve" in tables:
+        from benchmarks import serve_throughput
+        serve_throughput.run(report)
 
     print(f"\n# done in {time.time() - t0:.0f}s")
-    for t in ("table1", "table2", "table3", "table4", "table10", "gram_reuse"):
+    for t in ("table1", "table2", "table3", "table4", "table10", "gram_reuse",
+              "serve"):
         md = report.table_markdown(t)
         if md:
             print(f"\n## {t}\n{md}")

@@ -1,0 +1,182 @@
+"""Serving-engine throughput: cell-routed batched prediction vs naive calls.
+
+The paper's speed claims cover the test phase too ("data sets of tens of
+millions of samples"), and batched prediction is where large-SVM
+deployments spend their time (Rgtsvm).  This benchmark drives the same
+routed multi-task multi-gamma workload through two paths:
+
+  * ``engine``  — :class:`repro.serve.SVMEngine` over a compacted
+                  :class:`ModelBank`: per-cell request accumulation, one
+                  batched launch per step (``plan_wave`` padding plan),
+                  persistent per-wave D²;
+  * ``naive``   — one ``TrainedSVM.decision_function`` call per request
+                  against the uncompacted per-cell models: the execution
+                  shape of a predict server without batching, compaction or
+                  cross-request Gram reuse (the cross-Gram is rebuilt from
+                  scratch on every call).
+
+A second row measures the multi-gamma sweep: replaying ``n_sweep`` gammas
+over the engine's cached wave D² (epilogue-only) vs re-running full
+prediction per gamma.
+
+``PYTHONPATH=src python -m benchmarks.serve_throughput`` — quick mode by
+default (REPRO_BENCH_FULL=1 for larger shapes); always writes
+BENCH_serve.json at the repo root so the perf trajectory is recorded.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import QUICK, Report, timeit
+from repro.serve.model_bank import ModelBank
+from repro.serve.svm_engine import SVMEngine
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_serve.json")
+
+
+def _make_bank_and_traffic(n_cells, k, d, t_count, s_count, n_req, seed=0):
+    """Synthetic trained cell batch: sparse duals (hinge-like), clustered
+    queries; per-(task, sub) gammas all distinct (>= 3 tasks x >= 4 subs)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_cells, d)).astype(np.float32) * 5.0
+    sv = (centers[:, None, :]
+          + rng.normal(size=(n_cells, k, d))).astype(np.float32)
+    coefs = rng.normal(size=(n_cells, k, t_count, s_count)).astype(np.float32)
+    coefs[rng.random((n_cells, k)) < 0.6] = 0.0        # sparse hinge duals
+    gammas = rng.uniform(0.6, 4.0,
+                         size=(n_cells, t_count, s_count)).astype(np.float32)
+    mask = np.ones((n_cells, k), np.float32)
+    compact = ModelBank.from_cells(sv, mask, coefs, gammas, centers,
+                                   drop_tol=0.0)
+    full = ModelBank.from_cells(sv, mask, coefs, gammas, centers,
+                                drop_tol=None, dedup=False)
+    owners = rng.integers(0, n_cells, n_req)
+    queries = (centers[owners]
+               + rng.normal(size=(n_req, d)) * 0.5).astype(np.float32)
+    return compact, full, queries
+
+
+def _engine_runner(bank, queries, wave):
+    """Sustained micro-batched serving: traffic arrives in waves."""
+
+    def run():
+        eng = SVMEngine(bank, fused=False)
+        for lo in range(0, queries.shape[0], wave):
+            eng.submit(queries[lo:lo + wave])
+            res = eng.step()
+        return res
+
+    return run
+
+
+def _naive_runner(full_bank, queries):
+    """One decision_function call per request, uncompacted models."""
+    probe = SVMEngine(full_bank, fused=False)          # routing only
+    xs = (queries - full_bank.feat_mean) / full_bank.feat_std
+    cells = probe.route(xs)
+    models = [full_bank.cell_model(c) for c in range(full_bank.n_cells)]
+
+    def run():
+        out = None
+        for i in range(xs.shape[0]):
+            out = models[int(cells[i])].decision_function(xs[i:i + 1])
+        jax.block_until_ready(out)
+        return out
+
+    return run
+
+
+def run(report: Report) -> None:
+    n_cells, k, d = (8, 256, 24) if QUICK else (16, 512, 32)
+    t_count, s_count = 3, 4                     # 12 columns, distinct gammas
+    n_req = 1024 if QUICK else 4096
+    wave = 256
+    naive_n = 64 if QUICK else 128              # naive is slow; extrapolate
+    n_sweep = 8
+
+    compact, full, queries = _make_bank_and_traffic(
+        n_cells, k, d, t_count, s_count, n_req)
+
+    eng_run = _engine_runner(compact, queries, wave)
+    naive_run = _naive_runner(full, queries[:naive_n])
+    eng_run()                                   # compile + warmup
+    naive_run()
+    t_engine = timeit(eng_run, repeats=3 if QUICK else 5)
+    t_naive = timeit(naive_run, repeats=3 if QUICK else 5)
+    engine_rps = n_req / t_engine
+    naive_rps = naive_n / t_naive
+    speedup = engine_rps / naive_rps
+
+    # multi-gamma sweep: epilogue-only replay over the cached wave D²
+    eng = SVMEngine(compact, fused=False)
+    eng.submit(queries[:wave])
+    eng.step()
+    sweep_gammas = np.logspace(0.5, -0.3, n_sweep).astype(np.float32)
+
+    def sweep_cached():
+        jax.block_until_ready(eng.sweep_gammas(sweep_gammas))
+
+    def sweep_naive():
+        import dataclasses
+        for g in sweep_gammas:
+            b = dataclasses.replace(compact,
+                                    gammas=np.full_like(compact.gammas, g))
+            e = SVMEngine(b, fused=False)
+            e.submit(queries[:wave])
+            e.step()
+
+    sweep_cached()
+    sweep_naive()
+    t_sweep_cached = timeit(sweep_cached, repeats=3)
+    t_sweep_naive = timeit(sweep_naive, repeats=3)
+
+    stats = compact.stats()
+    report.add("serve", f"c{n_cells}_k{k}_d{d}_p{t_count * s_count}",
+               t_engine, engine_rps=round(engine_rps),
+               naive_rps=round(naive_rps), speedup=round(speedup, 2),
+               compaction=round(stats["compaction"], 3))
+    report.add("serve", f"gamma_sweep_{n_sweep}", t_sweep_cached,
+               sweep_naive_s=round(t_sweep_naive, 4),
+               speedup=round(t_sweep_naive / max(t_sweep_cached, 1e-9), 2))
+
+    payload = {
+        "benchmark": "serve_throughput",
+        "backend": jax.default_backend(),
+        "quick": QUICK,
+        "unix_time": time.time(),
+        "workload": {"n_cells": n_cells, "k": k, "d": d,
+                     "n_tasks": t_count, "n_sub": s_count,
+                     "n_requests": n_req, "wave": wave},
+        "compaction": stats,
+        "engine_rps": engine_rps,
+        "naive_rps": naive_rps,
+        "speedup": speedup,
+        "gamma_sweep": {"n_gammas": n_sweep,
+                        "cached_d2_s": t_sweep_cached,
+                        "per_gamma_full_s": t_sweep_naive,
+                        "speedup": t_sweep_naive / max(t_sweep_cached, 1e-9)},
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+
+
+def main() -> int:
+    report = Report()
+    print(f"# serve_throughput (quick={QUICK}) — csv: table,name,us,derived",
+          flush=True)
+    run(report)
+    md = report.table_markdown("serve")
+    if md:
+        print(f"\n## serve\n{md}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

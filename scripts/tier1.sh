@@ -5,3 +5,8 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# The serving path (model bank + cell-routed engine) is part of the default
+# gate: when extra args filter the main run, still verify it explicitly.
+if [ "$#" -gt 0 ]; then
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q tests/test_serve_svm.py
+fi

@@ -159,13 +159,21 @@ class CachedGram:
     Build once per working set (``symmetric=True`` halves the MXU flops for
     the train Gram), then ``.gram(gamma)`` is a pure VPU pass per gamma.
     A jax pytree (D² is the only leaf), so it threads through jit/vmap.
+
+    ``d2_dtype="bf16"`` stores the cached D² itself in bfloat16 — half the
+    resident footprint for long-lived caches (the serving engine keeps one
+    D² per routed batch).  The epilogue always accumulates in f32; the error
+    is one bf16 rounding of d2 BEFORE the exp, so for the Gaussian kernel
+    ``|ΔK| = K * (d2/g²) * δ <= e^{-1} * 2^-8`` — bounded uniformly in
+    gamma because u e^{-u} peaks at 1/e (steep small-gamma epilogues hit the
+    bound, they do not exceed it; see the error-bound test).
     """
     d2: Array
     name: str = "gauss_rbf"
 
     @classmethod
     def build(cls, x: Array, z: Array | None = None,
-              name: str = "gauss_rbf") -> "CachedGram":
+              name: str = "gauss_rbf", d2_dtype: str = "f32") -> "CachedGram":
         spec = get_spec(name)
         if not spec.factors_through_d2:
             raise ValueError(
@@ -175,7 +183,15 @@ class CachedGram:
             d2 = km_ops.sq_dists(x, x, symmetric=True)
         else:
             d2 = km_ops.sq_dists(x, z)
+        if d2_dtype == "bf16":
+            d2 = d2.astype(jnp.bfloat16)
+        elif d2_dtype != "f32":
+            raise ValueError(f"d2_dtype must be f32|bf16, got {d2_dtype!r}")
         return cls(d2=d2, name=name)
+
+    @property
+    def nbytes(self) -> int:
+        return self.d2.size * self.d2.dtype.itemsize
 
     def gram(self, gamma: Array, out_dtype: str = "f32") -> Array:
         return get_spec(self.name).d2_epilogue(self.d2, gamma, out_dtype)
@@ -211,17 +227,19 @@ def gram_for_gammas(x: Array, z: Array, gammas: Array, name: str = "gauss_rbf",
     return jax.vmap(lambda g: spec.d2_epilogue(d2, g, out_dtype))(gammas)
 
 
-def cross_gram_fn(x: Array, z: Array, name: str = "gauss_rbf"):
+def cross_gram_fn(x: Array, z: Array, name: str = "gauss_rbf",
+                  d2_dtype: str = "f32"):
     """Per-gamma cross-Gram closure for a FIXED (x, z) pair.
 
     Returns ``gram_of(gamma) -> (n, m)``; the gamma-independent D² is
     cached up front when the kernel factors through it (the multi-gamma
     prediction paths in ``core.svm`` / ``distributed.cell_trainer`` call
     this once per batch, then sweep selected gammas for free).
+    ``d2_dtype="bf16"`` halves the cache footprint (see ``CachedGram``).
     """
     spec = get_spec(name)
     if spec.factors_through_d2:
-        return CachedGram.build(x, z, name=name).gram
+        return CachedGram.build(x, z, name=name, d2_dtype=d2_dtype).gram
     return lambda gamma, out_dtype="f32": _cast_out(spec.fn(x, z, gamma), out_dtype)
 
 

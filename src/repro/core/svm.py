@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.core import cv as cv_mod
 from repro.core import grids, kernel_fns, select
+from repro.tasks.builder import combine_decisions
 
 Array = jax.Array
 
@@ -52,8 +53,16 @@ class TrainedSVM(NamedTuple):
         out = jax.vmap(per_ts)(gflat, cflat)                   # (T*S, m)
         return out.T.reshape(x_test.shape[0], t, s)
 
-    def predict_label(self, x_test: Array) -> Array:
-        return jnp.sign(self.decision_function(x_test)[:, 0, 0])
+    def predict_label(self, x_test: Array, scenario: str = "binary",
+                      classes: np.ndarray | None = None,
+                      pairs: np.ndarray | None = None,
+                      sub: int = 0) -> np.ndarray:
+        """Scenario-aware labels: binary signs by default; OvA argmax /
+        AvA pairwise votes over the task axis when a multi-task model is
+        paired with its class values (``tasks.builder`` combiners), so
+        multi-class models predict class values end-to-end."""
+        return combine_decisions(self.decision_function(x_test), scenario,
+                                 classes=classes, pairs=pairs, sub=sub)
 
 
 def train_select(
@@ -97,8 +106,20 @@ def train_select(
 
 
 def test_error(model: TrainedSVM, x_test: Array, y_test: Array,
-               task: str = "classify") -> Array:
-    f = model.decision_function(jnp.asarray(x_test, jnp.float32))[:, 0, 0]
+               task: str = "classify",
+               classes: np.ndarray | None = None,
+               pairs: np.ndarray | None = None,
+               sub: int = 0) -> Array:
+    """Test-phase error.  ``task`` "classify"/"mse" evaluate the (0, sub)
+    decision column (single-task models); "ova"/"ava" combine the full task
+    axis into class values first (misclassification rate vs y_test)."""
+    if task in ("ova", "ava"):
+        pred = model.predict_label(jnp.asarray(x_test, jnp.float32),
+                                   scenario=task, classes=classes,
+                                   pairs=pairs, sub=sub)
+        return jnp.mean((jnp.asarray(pred) != jnp.asarray(y_test))
+                        .astype(jnp.float32))
+    f = model.decision_function(jnp.asarray(x_test, jnp.float32))[:, 0, sub]
     y_test = jnp.asarray(y_test, jnp.float32)
     if task == "classify":
         return jnp.mean((f * y_test <= 0).astype(jnp.float32))

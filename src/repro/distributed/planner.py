@@ -7,6 +7,14 @@ compilation: cells are padded to a uniform size and greedily bin-packed
 the same number of cells and a near-equal amount of real (unpadded) work.
 This is also the straggler story for the SVM phase: there is no dynamic
 work to straggle on — every device executes the same static program.
+
+The same static-shape discipline applies to SERVING: each engine step must
+lower to one fixed-shape batched launch, but per-cell request counts are
+whatever traffic happened to arrive.  :func:`plan_wave` is the per-step
+plan: pick a padded row count (bucketed so repeated steps reuse compiled
+programs), split hot cells into multiple launch slots instead of padding
+every cell to the hottest one, and order slots largest-first (LPT) so a
+sharded engine inherits the balance for free.
 """
 from __future__ import annotations
 
@@ -15,6 +23,10 @@ import dataclasses
 import numpy as np
 
 from repro.cells.builder import CellPlan
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-max(int(v), 1) // mult) * mult
 
 
 @dataclasses.dataclass
@@ -52,3 +64,76 @@ def pack_cells(plan: CellPlan, n_devices: int) -> PackedCells:
             slot_of[cid] = s
     return PackedCells(order=order, slot_of_cell=slot_of,
                        n_devices=n_devices, slots_per_device=slots_per_device)
+
+
+@dataclasses.dataclass
+class WavePlan:
+    """One serving step's static launch layout.
+
+    slot_cell: (n_slots,) cell id per launch slot, -1 = padding slot
+    slot_off:  (n_slots,) offset into that cell's pending queue
+    slot_take: (n_slots,) pending rows consumed by this slot (<= m_pad)
+    m_pad:     padded rows per slot (every slot is (m_pad, d) in the launch)
+    """
+    slot_cell: np.ndarray
+    slot_off: np.ndarray
+    slot_take: np.ndarray
+    m_pad: int
+
+    @property
+    def n_slots(self) -> int:
+        return self.slot_cell.shape[0]
+
+    @property
+    def n_requests(self) -> int:
+        return int(self.slot_take.sum())
+
+    @property
+    def pad_fraction(self) -> float:
+        """Fraction of launched rows that are padding (lower = better)."""
+        total = self.n_slots * self.m_pad
+        return 1.0 - self.n_requests / max(total, 1)
+
+
+def plan_wave(counts: np.ndarray, m_pad: int | None = None,
+              row_bucket: int = 8, slot_bucket: int = 4) -> WavePlan:
+    """Padding/bin-packing plan for one engine step.
+
+    ``counts`` (n_cells,) pending requests per cell.  The padded row count
+    defaults to the 75th-percentile active-cell load (bucketed to
+    ``row_bucket``): cold cells pad a little, hot cells are CHUNKED into
+    several launch slots — so one viral cell cannot inflate the whole
+    step's padded shape.  Slot count is bucketed to ``slot_bucket`` and
+    slots are LPT-ordered; both paddings keep the jitted launch shape set
+    small across steps.
+    """
+    counts = np.asarray(counts, np.int64)
+    active = np.where(counts > 0)[0]
+    if active.size == 0:
+        return WavePlan(slot_cell=np.full(0, -1, np.int64),
+                        slot_off=np.zeros(0, np.int64),
+                        slot_take=np.zeros(0, np.int64),
+                        m_pad=row_bucket)
+    if m_pad is None:
+        m_pad = _round_up(int(np.percentile(counts[active], 75)), row_bucket)
+    cells, offs, takes = [], [], []
+    for cid in active:
+        left, off = int(counts[cid]), 0
+        while left > 0:
+            take = min(left, m_pad)
+            cells.append(cid)
+            offs.append(off)
+            takes.append(take)
+            off += take
+            left -= take
+    order = np.argsort(-np.asarray(takes), kind="stable")   # LPT
+    n_slots = _round_up(len(cells), slot_bucket)
+    slot_cell = np.full(n_slots, -1, np.int64)
+    slot_off = np.zeros(n_slots, np.int64)
+    slot_take = np.zeros(n_slots, np.int64)
+    for s, o in enumerate(order):
+        slot_cell[s] = cells[o]
+        slot_off[s] = offs[o]
+        slot_take[s] = takes[o]
+    return WavePlan(slot_cell=slot_cell, slot_off=slot_off,
+                    slot_take=slot_take, m_pad=int(m_pad))

@@ -14,9 +14,14 @@ pipeline:
 
   * ``sq_dists_pallas``     writes D² once.  For the symmetric train Gram it
                             runs the MXU only on upper-triangle tiles
-                            (i <= j), halves the diagonal, and the wrapper
-                            mirrors with ``U + U.T`` — ~2x fewer MXU flops
-                            and a bitwise-symmetric result;
+                            (i <= j) and writes the MIRRORED tile from inside
+                            the kernel: a two-phase grid (i, j, m) keeps the
+                            just-computed tile in VMEM scratch and the m == 1
+                            phase stores its transpose at block (j, i).  ~2x
+                            fewer MXU flops, a bitwise-symmetric result, and
+                            no ``U + U.T`` combine — the old wrapper-side
+                            mirror cost one extra full read + write of the
+                            n² matrix in HBM;
   * ``gram_from_d2_pallas`` replays the cheap per-gamma VPU epilogue
                             (exp(-d2/gamma²) or Laplacian, optional bf16
                             downcast) over the cached D², one VMEM pass per
@@ -34,6 +39,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
@@ -42,15 +48,8 @@ BLOCK_M = 128
 
 
 def _gram_kernel(x_ref, z_ref, gamma_ref, o_ref, *, kind: str):
-    x = x_ref[...].astype(jnp.float32)          # (bn, d)
-    z = z_ref[...].astype(jnp.float32)          # (bm, d)
     gamma = gamma_ref[0, 0]
-    cross = jax.lax.dot_general(                # MXU: (bn, d) x (bm, d)^T
-        x, z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )
-    xx = jnp.sum(x * x, axis=-1)[:, None]
-    zz = jnp.sum(z * z, axis=-1)[None, :]
-    d2 = jnp.maximum(xx + zz - 2.0 * cross, 0.0)
+    d2 = _d2_tile(x_ref, z_ref)
     if kind == "gauss_rbf":
         o_ref[...] = jnp.exp(-d2 / jnp.maximum(gamma * gamma, 1e-12))
     elif kind == "laplacian":
@@ -81,38 +80,54 @@ def gram_pallas(x: Array, z: Array, gamma: Array, kind: str = "gauss_rbf",
     )(x, z, gamma_arr)
 
 
-def _sq_dists_kernel(x_ref, z_ref, o_ref, *, symmetric: bool):
+def _d2_tile(x_ref, z_ref) -> Array:
+    x = x_ref[...].astype(jnp.float32)          # (bn, d)
+    z = z_ref[...].astype(jnp.float32)          # (bm, d)
+    cross = jax.lax.dot_general(                # MXU: (bn, d) x (bm, d)^T
+        x, z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    xx = jnp.sum(x * x, axis=-1)[:, None]
+    zz = jnp.sum(z * z, axis=-1)[None, :]
+    return jnp.maximum(xx + zz - 2.0 * cross, 0.0)
+
+
+def _sq_dists_kernel(x_ref, z_ref, o_ref):
+    o_ref[...] = _d2_tile(x_ref, z_ref)
+
+
+def _sq_dists_sym_kernel(x_ref, z_ref, o_ref, acc_ref):
+    """Two-phase symmetric tile: m == 0 computes the upper tile (i <= j) and
+    parks it in VMEM scratch; m == 1 writes the transpose to block (j, i).
+    Diagonal tiles are bitwise symmetric (same dot-product order both ways),
+    so the m == 1 rewrite of (i, i) stores identical bits.  Strictly-lower
+    iterations (i > j) do no compute and their output window is parked on
+    the diagonal block (see ``_sym_out_map``), which a later phase of row i
+    fully overwrites — every block is written exactly once with real data
+    and the MXU runs only on the n_tiles*(n_tiles+1)/2 upper tiles.
+    """
     i = pl.program_id(0)
     j = pl.program_id(1)
+    m = pl.program_id(2)
 
-    def compute():
-        x = x_ref[...].astype(jnp.float32)      # (bn, d)
-        z = z_ref[...].astype(jnp.float32)      # (bm, d)
-        cross = jax.lax.dot_general(            # MXU: (bn, d) x (bm, d)^T
-            x, z, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        xx = jnp.sum(x * x, axis=-1)[:, None]
-        zz = jnp.sum(z * z, axis=-1)[None, :]
-        d2 = jnp.maximum(xx + zz - 2.0 * cross, 0.0)
-        if symmetric:
-            # Diagonal tiles are bitwise symmetric (same dot-product order
-            # both ways), so halving them makes U + U.T exact: off-diagonal
-            # entries appear once, diagonal-tile entries as 0.5*d2 + 0.5*d2.
-            d2 = jnp.where(i == j, 0.5 * d2, d2)
+    @pl.when((i <= j) & (m == 0))
+    def _compute():
+        d2 = _d2_tile(x_ref, z_ref)
+        acc_ref[...] = d2
         o_ref[...] = d2
 
-    if symmetric:
+    @pl.when((i <= j) & (m == 1))
+    def _mirror():
+        o_ref[...] = acc_ref[...].T
 
-        @pl.when(i <= j)
-        def _():
-            compute()
 
-        @pl.when(i > j)
-        def _():
-            o_ref[...] = jnp.zeros(o_ref.shape, o_ref.dtype)
-
-    else:
-        compute()
+def _sym_out_map(i, j, m):
+    """Upper tiles: (i, j) then the mirrored (j, i).  Lower iterations park
+    on (i, i) so the window index stays constant across the skipped stretch
+    (no spurious HBM writebacks between real visits)."""
+    up = i <= j
+    r = jnp.where(up, jnp.where(m == 0, i, j), i)
+    c = jnp.where(up, jnp.where(m == 0, j, i), i)
+    return r, c
 
 
 @functools.partial(jax.jit, static_argnames=("symmetric", "interpret"))
@@ -121,30 +136,42 @@ def sq_dists_pallas(x: Array, z: Array, symmetric: bool = False,
     """Tiled pairwise D²; n, m multiples of 128; returns (n, m) f32.
 
     ``symmetric=True`` requires x.shape == z.shape (callers pass x twice):
-    the MXU runs only on the n_tiles*(n_tiles+1)/2 upper tiles and the
-    strictly-lower tiles are zero-filled, then mirrored here via U + U.T.
+    the MXU runs only on the n_tiles*(n_tiles+1)/2 upper tiles and each
+    tile's transpose is written to the mirrored block from INSIDE the kernel
+    (two-phase grid + VMEM scratch) — the result is K == K.T bitwise with no
+    post-hoc ``U + U.T`` pass over HBM.
     """
     n, d = x.shape
     m, _ = z.shape
     assert n % BLOCK_N == 0 and m % BLOCK_M == 0, (n, m)
-    if symmetric:
-        # the tile predicate i <= j only matches the matrix upper triangle
-        # when tiles are square — guard against a BLOCK_M-only perf tweak
-        assert n == m and BLOCK_N == BLOCK_M, (n, m, BLOCK_N, BLOCK_M)
-    upper = pl.pallas_call(
-        functools.partial(_sq_dists_kernel, symmetric=symmetric),
-        grid=(n // BLOCK_N, m // BLOCK_M),
+    if not symmetric:
+        return pl.pallas_call(
+            _sq_dists_kernel,
+            grid=(n // BLOCK_N, m // BLOCK_M),
+            in_specs=[
+                pl.BlockSpec((BLOCK_N, d), lambda i, j: (i, 0)),
+                pl.BlockSpec((BLOCK_M, d), lambda i, j: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((BLOCK_N, BLOCK_M), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+            interpret=interpret,
+        )(x, z)
+
+    # the tile predicate i <= j only matches the matrix upper triangle
+    # when tiles are square — guard against a BLOCK_M-only perf tweak
+    assert n == m and BLOCK_N == BLOCK_M, (n, m, BLOCK_N, BLOCK_M)
+    return pl.pallas_call(
+        _sq_dists_sym_kernel,
+        grid=(n // BLOCK_N, m // BLOCK_M, 2),
         in_specs=[
-            pl.BlockSpec((BLOCK_N, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((BLOCK_M, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_N, d), lambda i, j, m: (i, 0)),
+            pl.BlockSpec((BLOCK_M, d), lambda i, j, m: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((BLOCK_N, BLOCK_M), lambda i, j: (i, j)),
+        out_specs=pl.BlockSpec((BLOCK_N, BLOCK_M), _sym_out_map),
         out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((BLOCK_N, BLOCK_M), jnp.float32)],
         interpret=interpret,
     )(x, z)
-    if symmetric:
-        return upper + upper.T
-    return upper
 
 
 def _gram_from_d2_kernel(d2_ref, gamma_ref, o_ref, *, kind: str):

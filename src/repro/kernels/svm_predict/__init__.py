@@ -1,3 +1,3 @@
-from repro.kernels.svm_predict.ops import svm_predict
+from repro.kernels.svm_predict.ops import svm_predict, svm_predict_cells
 
-__all__ = ["svm_predict"]
+__all__ = ["svm_predict", "svm_predict_cells"]

@@ -8,7 +8,12 @@ import jax.numpy as jnp
 
 from repro.kernels import runtime
 from repro.kernels.svm_predict import ref
-from repro.kernels.svm_predict.svm_predict import BLOCK_S, BLOCK_T, svm_predict_pallas
+from repro.kernels.svm_predict.svm_predict import (
+    BLOCK_S,
+    BLOCK_T,
+    svm_predict_cells_pallas,
+    svm_predict_pallas,
+)
 
 Array = jax.Array
 
@@ -34,3 +39,28 @@ def svm_predict(x_test: Array, sv: Array, coefs: Array, gamma: Array,
     out = svm_predict_pallas(xp, svp, cp, gamma, kind=kind,
                              interpret=runtime.resolve_interpret(interpret))[:nt]
     return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "force_pallas", "interpret"))
+def svm_predict_cells(xt: Array, sv: Array, coefs: Array, gammas: Array,
+                      kind: str = "gauss_rbf", force_pallas: bool = False,
+                      interpret: bool | None = None) -> Array:
+    """Batched per-cell multi-column prediction — the serving-engine launch.
+
+    xt (C, m, d) routed+padded queries; sv (C, k, d) compacted SV tables;
+    coefs (C, k, P) per-(task, sub) columns; gammas (C, P) per-column
+    selected gammas.  Returns (C, m, P) f32.  Zero-coefficient padding rows
+    (SV axis) and zero-coefficient cells contribute exactly zero, so the
+    wrapper only pads — it never masks.
+    """
+    if not (force_pallas or runtime.on_tpu()):
+        return ref.svm_predict_cells_ref(xt, sv, coefs, gammas, kind)
+    _, m, d = xt.shape
+    k = sv.shape[1]
+    pad_m, pad_k, pad_d = (-m) % BLOCK_T, (-k) % BLOCK_S, (-d) % 128
+    xp = jnp.pad(xt.astype(jnp.float32), ((0, 0), (0, pad_m), (0, pad_d)))
+    svp = jnp.pad(sv.astype(jnp.float32), ((0, 0), (0, pad_k), (0, pad_d)))
+    cp = jnp.pad(coefs.astype(jnp.float32), ((0, 0), (0, pad_k), (0, 0)))
+    out = svm_predict_cells_pallas(xp, svp, cp, gammas, kind=kind,
+                                   interpret=runtime.resolve_interpret(interpret))
+    return out[:, :m]

@@ -1,10 +1,22 @@
-"""Pure-jnp oracle: f = K(x_test, sv) @ coefs (Gram materialized)."""
+"""Pure-jnp oracles: f = K(x_test, sv) @ coefs (Gram materialized).
+
+``svm_predict_cells_ref`` is the serving-engine contract: a batch of cells,
+each with its own SV table and P = n_tasks * n_sub coefficient columns where
+every column may carry a DIFFERENT selected gamma.  The D² matrix is
+computed once per cell and each column replays only the per-gamma epilogue
+— the same distance-cache structure the fused Pallas kernel realizes
+tile-locally in VMEM.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.kernel_matrix.ref import kernel_matrix_ref
+from repro.kernels.kernel_matrix.ref import (
+    gram_from_d2_ref,
+    kernel_matrix_ref,
+    sq_dists_ref,
+)
 
 Array = jax.Array
 
@@ -15,3 +27,18 @@ def svm_predict_ref(x_test: Array, sv: Array, coefs: Array, gamma: Array,
     if coefs.ndim == 1:
         coefs = coefs[:, None]
     return k @ coefs.astype(jnp.float32)
+
+
+def svm_predict_cells_ref(xt: Array, sv: Array, coefs: Array, gammas: Array,
+                          kind: str = "gauss_rbf") -> Array:
+    """xt (C, m, d), sv (C, k, d), coefs (C, k, P), gammas (C, P) -> (C, m, P)."""
+
+    def one_cell(xt_c, sv_c, coef_c, gamma_c):
+        d2 = sq_dists_ref(xt_c, sv_c)                        # once per cell
+
+        def per_col(g, c):
+            return gram_from_d2_ref(d2, g, kind) @ c         # (m,)
+
+        return jax.vmap(per_col)(gamma_c, coef_c.T).T        # (m, P)
+
+    return jax.vmap(one_cell)(xt, sv, coefs, gammas)

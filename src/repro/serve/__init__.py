@@ -1,4 +1,9 @@
+"""Serving layer: the LM token engine (``engine``/``kv_cache``) and the
+cell-routed SVM serving subsystem (``model_bank`` + ``svm_engine``)."""
 from repro.serve.kv_cache import pad_cache, cache_bytes
 from repro.serve.engine import generate, serve_step
+from repro.serve.model_bank import ModelBank
+from repro.serve.svm_engine import SVMEngine
 
-__all__ = ["pad_cache", "cache_bytes", "generate", "serve_step"]
+__all__ = ["pad_cache", "cache_bytes", "generate", "serve_step",
+           "ModelBank", "SVMEngine"]

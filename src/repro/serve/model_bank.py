@@ -1,0 +1,259 @@
+"""Model bank: compacted cell-SVM storage for the serving engine.
+
+liquidSVM's test phase ships every trained cell model to the predict
+workers; at serving scale (the Rgtsvm observation: batched prediction is
+where large-SVM deployments spend their time) the resident model set is a
+first-class artifact.  The bank ingests trained cell models — a single
+:class:`repro.core.svm.TrainedSVM` or the distributed ``(n_slots, k, ...)``
+cell batch — and compacts them:
+
+  * **zero-row dropping** — the hinge duals are sparse (box-projected
+    coordinate descent leaves exact zeros), so SV rows whose coefficients
+    vanish across ALL (task, sub) columns are dropped;
+  * **SV dedup** — one SV table per cell, shared by every task, fold and
+    gamma: the per-(task, sub) models are coefficient COLUMNS over that
+    table (fold models were already averaged into one column by
+    ``select.combine_fold_models``), and exact-duplicate SV rows are merged
+    by summing their coefficient rows (k(x, u) is identical for identical
+    u, so the decision function is unchanged);
+  * **bf16 storage** — optional 2-byte SV/coefficient tables (decisions are
+    always computed in f32; storage-only downcast).
+
+Serialization goes through ``repro.train.checkpoint`` (atomic step dirs,
+raw-byte bf16-safe storage), so a predict server cold-starts from disk
+without retraining: ``bank.save(dir)`` / ``ModelBank.load(dir)``.
+
+Layout (C = number of cells, P = n_tasks * n_sub, column p = t * n_sub + s
+— the same task-major flattening as ``TrainedSVM.decision_function``):
+
+  sv        (C, k, d)   compacted, padded SV tables
+  coefs     (C, k, P)   per-(task, sub) coefficient columns
+  gammas    (C, P)      per-column selected gamma
+  sv_count  (C,)        live rows per cell (rows beyond carry zero coefs)
+  centers   (C, d)      Voronoi routing centers (empty slots pushed to inf)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.svm import TrainedSVM
+from repro.distributed.planner import _round_up
+from repro.train import checkpoint as ckpt_mod
+
+# empty-slot routing center: beyond any real (scaled) point, but small
+# enough that its squared distance stays finite in f32
+_FAR = np.float32(1.0e18)
+
+
+def _dedup_rows(sv: np.ndarray, coefs: np.ndarray):
+    """Merge exact-duplicate SV rows, first-occurrence order preserved.
+
+    sv (k, d), coefs (k, P) -> smaller (k', d), (k', P) with coefficient
+    rows of duplicates summed into the first occurrence.
+    """
+    _, first, inverse = np.unique(sv, axis=0, return_index=True,
+                                  return_inverse=True)
+    if first.shape[0] == sv.shape[0]:
+        return sv, coefs                      # no duplicates: exact identity
+    # remap unique-group ids to first-occurrence order
+    order = np.argsort(first, kind="stable")
+    rank = np.empty_like(order)
+    rank[order] = np.arange(order.shape[0])
+    g = rank[inverse]                         # (k,) group id, order-preserving
+    out_sv = sv[np.sort(first)]
+    out_coefs = np.zeros((first.shape[0], coefs.shape[1]), coefs.dtype)
+    np.add.at(out_coefs, g, coefs)
+    return out_sv, out_coefs
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBank:
+    sv: np.ndarray            # (C, k, d) f32 or bf16
+    coefs: np.ndarray         # (C, k, P) f32 or bf16
+    gammas: np.ndarray        # (C, P) f32
+    sv_count: np.ndarray      # (C,) int32
+    centers: np.ndarray       # (C, d) f32
+    feat_mean: np.ndarray     # (d,) f32 — input scaling baked into the bank
+    feat_std: np.ndarray      # (d,) f32
+    classes: np.ndarray       # (n_classes,) f32 (empty for regression)
+    pairs: np.ndarray         # (n_tasks, 2) int32 AvA pairs (or -1)
+    kernel: str = "gauss_rbf"
+    n_tasks: int = 1
+    n_sub: int = 1
+    scenario: str = "binary"
+    raw_sv_total: int = 0     # pre-compaction SV rows (for stats)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def n_cells(self) -> int:
+        return self.sv.shape[0]
+
+    @property
+    def k_max(self) -> int:
+        return self.sv.shape[1]
+
+    @property
+    def n_columns(self) -> int:
+        return self.coefs.shape[2]
+
+    @property
+    def nbytes(self) -> int:
+        return self.sv.nbytes + self.coefs.nbytes + self.gammas.nbytes
+
+    def stats(self) -> dict:
+        live = int(self.sv_count.sum())
+        return {
+            "n_cells": self.n_cells,
+            "k_max": self.k_max,
+            "sv_live": live,
+            "sv_raw": int(self.raw_sv_total),
+            "compaction": live / max(int(self.raw_sv_total), 1),
+            "bytes": self.nbytes,
+            "dtype": str(self.sv.dtype),
+        }
+
+    # ---------------------------------------------------------- construction
+    @classmethod
+    def from_cells(
+        cls,
+        sv_cells: np.ndarray,       # (C, k, d)
+        mask_cells: np.ndarray,     # (C, k)
+        coef_cells: np.ndarray,     # (C, k, T, S)
+        gamma_cells: np.ndarray,    # (C, T, S)
+        centers: np.ndarray,        # (C, d)
+        *,
+        kernel: str = "gauss_rbf",
+        drop_tol: Optional[float] = 0.0,
+        dedup: bool = True,
+        dtype: str = "f32",
+        feat_mean: Optional[np.ndarray] = None,
+        feat_std: Optional[np.ndarray] = None,
+        classes: Optional[np.ndarray] = None,
+        pairs: Optional[np.ndarray] = None,
+        scenario: str = "binary",
+        pad_multiple: int = 8,
+    ) -> "ModelBank":
+        """Compact a trained cell batch into a bank.
+
+        ``drop_tol``: SV rows with ``max_p |coef| <= drop_tol`` are dropped
+        (0.0 drops the exact zeros of the sparse hinge duals; ``None``
+        disables dropping).  Row order is preserved, so with no droppable
+        rows and no duplicates the compacted tables are bitwise identical
+        to the inputs.
+        """
+        sv_cells = np.asarray(sv_cells, np.float32)
+        mask_cells = np.asarray(mask_cells, np.float32)
+        coef_cells = np.asarray(coef_cells, np.float32)
+        c_count, _, t_count, s_count = coef_cells.shape
+        p = t_count * s_count
+        coef_flat = coef_cells.reshape(c_count, -1, p)
+
+        kept_sv, kept_coefs = [], []
+        for c in range(c_count):
+            live = mask_cells[c] > 0
+            if drop_tol is not None:
+                live &= np.abs(coef_flat[c]).max(axis=1) > drop_tol
+            sv_c, coef_c = sv_cells[c][live], coef_flat[c][live]
+            if dedup and sv_c.shape[0] > 1:
+                sv_c, coef_c = _dedup_rows(sv_c, coef_c)
+            kept_sv.append(sv_c)
+            kept_coefs.append(coef_c)
+
+        k_max = _round_up(max((s.shape[0] for s in kept_sv), default=1),
+                          pad_multiple)
+        d = sv_cells.shape[2]
+        sv = np.zeros((c_count, k_max, d), np.float32)
+        coefs = np.zeros((c_count, k_max, p), np.float32)
+        counts = np.zeros((c_count,), np.int32)
+        for c, (s, co) in enumerate(zip(kept_sv, kept_coefs)):
+            sv[c, : s.shape[0]] = s
+            coefs[c, : s.shape[0]] = co
+            counts[c] = s.shape[0]
+
+        if dtype == "bf16":
+            sv = np.asarray(jnp.asarray(sv).astype(jnp.bfloat16))
+            coefs = np.asarray(jnp.asarray(coefs).astype(jnp.bfloat16))
+        elif dtype != "f32":
+            raise ValueError(f"dtype must be f32|bf16, got {dtype!r}")
+
+        if feat_mean is None:
+            feat_mean = np.zeros((d,), np.float32)
+        if feat_std is None:
+            feat_std = np.ones((d,), np.float32)
+        return cls(
+            sv=sv, coefs=coefs,
+            gammas=np.asarray(gamma_cells, np.float32).reshape(c_count, p),
+            sv_count=counts,
+            centers=np.asarray(centers, np.float32),
+            feat_mean=np.asarray(feat_mean, np.float32),
+            feat_std=np.asarray(feat_std, np.float32),
+            classes=(np.zeros((0,), np.float32) if classes is None
+                     else np.asarray(classes, np.float32)),
+            pairs=(-np.ones((t_count, 2), np.int32) if pairs is None
+                   else np.asarray(pairs, np.int32)),
+            kernel=kernel, n_tasks=t_count, n_sub=s_count, scenario=scenario,
+            raw_sv_total=int((mask_cells > 0).sum()),
+        )
+
+    @classmethod
+    def from_trained(cls, model: TrainedSVM, **kwargs) -> "ModelBank":
+        """Single-cell bank from one working-set model."""
+        sv = np.asarray(model.sv_x, np.float32)
+        mask = np.asarray(model.sv_mask, np.float32)
+        coefs = np.asarray(model.coefs, np.float32)
+        gamma = np.asarray(model.gamma, np.float32)
+        denom = max(float(mask.sum()), 1.0)
+        center = (sv * mask[:, None]).sum(0, keepdims=True) / denom
+        kwargs.setdefault("kernel", model.kernel)
+        return cls.from_cells(sv[None], mask[None], coefs[None],
+                              gamma[None], center, **kwargs)
+
+    # -------------------------------------------------------------- adapters
+    def cell_arrays_f32(self):
+        """(sv, coefs) upcast to f32 jnp arrays — the compute dtype."""
+        return (jnp.asarray(self.sv).astype(jnp.float32),
+                jnp.asarray(self.coefs).astype(jnp.float32))
+
+    def cell_model(self, c: int) -> TrainedSVM:
+        """Reconstruct one cell as a TrainedSVM (the per-cell oracle view)."""
+        k = int(self.sv_count[c])
+        sv, coefs = self.cell_arrays_f32()
+        z = jnp.zeros((self.n_tasks, self.n_sub), jnp.float32)
+        return TrainedSVM(
+            sv_x=sv[c, :k],
+            sv_mask=jnp.ones((k,), jnp.float32),
+            coefs=coefs[c, :k].reshape(k, self.n_tasks, self.n_sub),
+            gamma=jnp.asarray(self.gammas[c].reshape(self.n_tasks, self.n_sub)),
+            lam=z, tau=z, val_loss=z, kernel=self.kernel)
+
+    # --------------------------------------------------------- serialization
+    _META_KEYS = ("kernel", "n_tasks", "n_sub", "scenario", "raw_sv_total")
+
+    def save(self, ckpt_dir: str, step: int = 0) -> str:
+        """Atomic checkpoint write; a server cold-starts from this alone."""
+        tree = {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self)
+                if f.name not in self._META_KEYS}
+        extra = {k: getattr(self, k) for k in self._META_KEYS}
+        extra["format"] = "svm_model_bank_v1"
+        return ckpt_mod.save_checkpoint(ckpt_dir, step, tree, extra=extra)
+
+    @classmethod
+    def load(cls, ckpt_dir: str, step: Optional[int] = None) -> "ModelBank":
+        manifest = ckpt_mod.peek_manifest(ckpt_dir, step)
+        extra = manifest["extra"]
+        if extra.get("format") != "svm_model_bank_v1":
+            raise ValueError(f"{ckpt_dir} is not a model-bank checkpoint "
+                             f"(format={extra.get('format')!r})")
+        target = {}
+        for path, dt in zip(manifest["paths"], manifest["dtypes"]):
+            key = path.strip("[]'\"")
+            target[key] = jnp.zeros((), dtype=np.dtype(dt))
+        tree, _, extra = ckpt_mod.restore_checkpoint(ckpt_dir, target, step=step)
+        arrays = {k: np.asarray(v) for k, v in tree.items()}
+        meta = {k: extra[k] for k in cls._META_KEYS}
+        return cls(**arrays, **meta)

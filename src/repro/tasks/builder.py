@@ -99,3 +99,31 @@ def combine_ava(decisions: np.ndarray, pairs: np.ndarray, classes: np.ndarray) -
         votes[a] += win_a
         votes[b] += ~win_a
     return classes[np.argmax(votes, axis=0)]
+
+
+def combine_decisions(dec: np.ndarray, scenario: str,
+                      classes: np.ndarray | None = None,
+                      pairs: np.ndarray | None = None,
+                      sub: int = 0) -> np.ndarray:
+    """Scenario-aware label combination for a (m, n_tasks, n_sub) decision
+    block — the single test-phase combiner shared by ``TrainedSVM``,
+    ``LiquidSVM`` and the serving engine.
+
+    binary/weighted -> signs; ova -> argmax over tasks; ava -> pairwise
+    votes; quantile/expectile -> the (m, n_taus) prediction matrix.
+    """
+    dec = np.asarray(dec)
+    if scenario in ("binary", "weighted", "npsvm"):
+        return np.sign(dec[:, 0, sub])
+    if scenario == "ova":
+        if classes is None or len(classes) == 0:
+            raise ValueError("ova combination needs the class values")
+        return combine_ova(dec[:, :, sub].T, np.asarray(classes))
+    if scenario == "ava":
+        if classes is None or len(classes) == 0 or pairs is None:
+            raise ValueError("ava combination needs class values and pairs")
+        return combine_ava(dec[:, :, sub].T, np.asarray(pairs),
+                           np.asarray(classes))
+    if scenario in ("quantile", "expectile"):
+        return dec[:, 0, :]
+    raise ValueError(f"unknown scenario {scenario!r}")

@@ -106,6 +106,23 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return int(name.split("_")[1])
 
 
+def peek_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict[str, Any]:
+    """Read a checkpoint's manifest without touching the array payload.
+
+    Lets self-describing consumers (e.g. ``repro.serve.model_bank``) build a
+    restore target from the stored paths/shapes/dtypes instead of having to
+    know them up front — a cold-starting server has nothing but the
+    directory.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")) as f:
+        manifest = json.load(f)
+    return manifest
+
+
 def restore_checkpoint(ckpt_dir: str, target: PyTree,
                        step: Optional[int] = None,
                        shardings: Optional[PyTree] = None

@@ -20,7 +20,7 @@ from repro.core import grids, kernel_fns
 from repro.data.scaling import Scaler
 from repro.distributed.cell_trainer import predict_cells, train_cells
 from repro.distributed.planner import PackedCells, pack_cells
-from repro.tasks.builder import TaskSet, combine_ava, combine_ova, make_tasks
+from repro.tasks.builder import TaskSet, combine_decisions, make_tasks
 
 
 @dataclasses.dataclass(frozen=True)
@@ -150,6 +150,33 @@ class LiquidSVM:
                 jnp.asarray(fa), jnp.asarray(det), cfg.np_alpha))
         return self
 
+    # ------------------------------------------------------------- serving
+    def to_bank(self, drop_tol: float | None = 0.0, dtype: str = "f32",
+                dedup: bool = True):
+        """Compact the fitted cell models into a serving ModelBank.
+
+        The bank carries the Voronoi routing centers (empty padding slots
+        pushed beyond any real point) and the train-set scaling, so
+        ``SVMEngine(model.to_bank())`` serves raw-feature queries with the
+        same routing the estimator uses.
+        """
+        assert self._fitted
+        from repro.serve.model_bank import _FAR, ModelBank
+        n_slots = self.packed.n_slots
+        d = self.x_cells.shape[2]
+        centers = np.full((n_slots, d), _FAR, np.float32)
+        for s, cid in enumerate(self.packed.order):
+            if cid >= 0:
+                centers[s] = self.plan.centers[cid]
+        return ModelBank.from_cells(
+            self.x_cells, self.mask_cells, self.coefs, self.gamma, centers,
+            kernel=self.config.kernel, drop_tol=drop_tol, dtype=dtype,
+            dedup=dedup,
+            feat_mean=self.scaler.mean.astype(np.float32),
+            feat_std=self.scaler.std.astype(np.float32),
+            classes=self.tasks.classes, pairs=self.tasks.pairs,
+            scenario=self.config.scenario)
+
     # ------------------------------------------------------------- test
     def decision_function(self, x_test: np.ndarray) -> np.ndarray:
         """(m, d) -> (m, T, S) via Voronoi routing to owning cells."""
@@ -184,17 +211,9 @@ class LiquidSVM:
     def predict(self, x_test: np.ndarray) -> np.ndarray:
         dec = self.decision_function(x_test)
         sc = self.config.scenario
-        if sc == "npsvm":
-            return np.sign(dec[:, 0, self.np_weight_idx])
-        if sc in ("binary", "weighted"):
-            return np.sign(dec[:, 0, 0])
-        if sc == "ova":
-            return combine_ova(dec[:, :, 0].T, self.tasks.classes)
-        if sc == "ava":
-            return combine_ava(dec[:, :, 0].T, self.tasks.pairs, self.tasks.classes)
-        if sc in ("quantile", "expectile"):
-            return dec[:, 0, :]              # (m, n_taus)
-        raise ValueError(sc)
+        sub = self.np_weight_idx if sc == "npsvm" else 0
+        return combine_decisions(dec, sc, classes=self.tasks.classes,
+                                 pairs=self.tasks.pairs, sub=sub)
 
     def error(self, x_test: np.ndarray, y_test: np.ndarray) -> float:
         pred = self.predict(x_test)

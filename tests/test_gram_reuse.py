@@ -123,6 +123,48 @@ class TestRegistryFactorization:
         np.testing.assert_allclose(many, ks, atol=1e-6)
 
 
+class TestBF16D2Storage:
+    """bf16 D² *storage* (not just bf16 K): the cache leaf itself is 2-byte.
+
+    Error model (Gaussian): d2' = d2 (1 + δ), |δ| <= 2^-8 (bf16 keeps 7
+    fraction bits; round-to-nearest half-ulp), so |K' - K| ~= K * (d2/g²)
+    * |δ| <= max_u u e^{-u} * 2^-8 = e^{-1} * 2^-8 ~= 1.4e-3 — UNIFORM in
+    gamma.  Small gamma makes the epilogue steep (exp(-d2/g²) swings over
+    many orders), but the worst-case absolute error stays at the u e^{-u}
+    peak; the test pins the analytic bound exactly there.
+    """
+
+    # e^{-1} * 2^-8, plus one f32 epilogue rounding of slack
+    _GAUSS_BOUND = float(np.exp(-1.0)) * 2.0 ** -8 * 1.05
+
+    @pytest.mark.parametrize("gamma", [0.05, 0.2, 1.0])
+    def test_error_bound_small_gamma(self, gamma):
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.normal(size=(160, 10)), jnp.float32)
+        cg16 = kernel_fns.CachedGram.build(x, d2_dtype="bf16")
+        cg32 = kernel_fns.CachedGram.build(x, d2_dtype="f32")
+        assert cg16.d2.dtype == jnp.bfloat16
+        assert cg16.nbytes * 2 == cg32.nbytes
+        err = np.abs(np.asarray(cg16.gram(jnp.float32(gamma)))
+                     - np.asarray(cg32.gram(jnp.float32(gamma))))
+        assert err.max() <= self._GAUSS_BOUND, (gamma, err.max())
+
+    def test_cross_gram_fn_threads_dtype(self):
+        rng = np.random.default_rng(12)
+        x = jnp.asarray(rng.normal(size=(32, 5)), jnp.float32)
+        z = jnp.asarray(rng.normal(size=(24, 5)), jnp.float32)
+        gram_of = kernel_fns.cross_gram_fn(x, z, d2_dtype="bf16")
+        k = gram_of(jnp.float32(0.3))
+        ref = kernel_fns.gaussian(x, z, jnp.float32(0.3))
+        np.testing.assert_allclose(np.asarray(k), np.asarray(ref),
+                                   atol=self._GAUSS_BOUND)
+
+    def test_bad_dtype_raises(self):
+        x = jnp.zeros((8, 2), jnp.float32)
+        with pytest.raises(ValueError):
+            kernel_fns.CachedGram.build(x, d2_dtype="fp8")
+
+
 class TestCVEquivalence:
     @pytest.mark.parametrize("solver,kernel", [("hinge", "gauss_rbf"),
                                                ("ls", "gauss_rbf"),
