@@ -17,7 +17,8 @@ from benchmarks.common import QUICK, Report
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
-                    default="table1,table2,table3,table4,table10,gram_reuse,serve")
+                    default="table1,table2,table3,table4,table10,gram_reuse,"
+                            "serve,cells")
     args = ap.parse_args(argv)
     tables = args.tables.split(",")
     report = Report()
@@ -46,10 +47,13 @@ def main(argv=None) -> int:
     if "serve" in tables:
         from benchmarks import serve_throughput
         serve_throughput.run(report)
+    if "cells" in tables:
+        from benchmarks import cell_build
+        cell_build.run(report)
 
     print(f"\n# done in {time.time() - t0:.0f}s")
     for t in ("table1", "table2", "table3", "table4", "table10", "gram_reuse",
-              "serve"):
+              "serve", "cells"):
         md = report.table_markdown(t)
         if md:
             print(f"\n## {t}\n{md}")

@@ -5,8 +5,10 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-# The serving path (model bank + cell-routed engine) is part of the default
-# gate: when extra args filter the main run, still verify it explicitly.
+# The serving path (model bank + cell-routed engine) and the streaming
+# pipeline (bitwise cell-plan parity, wave training) are part of the default
+# gate: when extra args filter the main run, still verify them explicitly.
 if [ "$#" -gt 0 ]; then
-  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q tests/test_serve_svm.py
+  PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+    tests/test_serve_svm.py tests/test_pipeline.py
 fi

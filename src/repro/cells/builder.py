@@ -9,9 +9,15 @@ Methods (paper's `voronoi=` configurations):
   coarse_fine — Table-4 Spark scheme: coarse cells of ~K samples, each
                 recursively split into fine cells of <= k
 
-Cell construction is host-side numpy (a data-pipeline step, as in the C++
+Cell construction is host-side (a data-pipeline step, as in the C++
 package); the resulting plan is a set of STATIC-shape padded index arrays
 that the jitted/sharded trainer consumes.
+
+The implementation is the streaming builder in
+``repro.pipeline.cell_stream`` run over an in-memory source: chunked
+GEMM-form distances (never an (n, 1, d) − (1, C, d) broadcast), running-sum
+Lloyd updates, and — by construction — a plan that is bit-identical to the
+out-of-core path on the same data.
 """
 from __future__ import annotations
 
@@ -46,12 +52,15 @@ class CellPlan:
         return self.indices.shape[1]
 
     def route(self, x: np.ndarray) -> np.ndarray:
-        """Nearest-center cell id for new points (test-phase routing)."""
-        d2 = ((x[:, None, :] - self.centers[None, :, :]) ** 2).sum(-1)
-        return np.argmin(d2, axis=1).astype(np.int32)
+        """Nearest-center cell id for new points (test-phase routing).
+
+        Row-chunked ‖x‖² + ‖c‖² − 2x·cᵀ — O(chunk · n_cells) peak, any m.
+        """
+        from repro.pipeline.assign import nearest_center
+        return nearest_center(np.asarray(x, np.float32), self.centers)
 
 
-def _pad_groups(groups: list[np.ndarray], n_pad_to: Optional[int] = None):
+def _pad_groups(groups: list, n_pad_to: Optional[int] = None):
     k_max = max((len(g) for g in groups), default=1)
     k_max = max(k_max, 1)
     if n_pad_to is not None:
@@ -64,47 +73,6 @@ def _pad_groups(groups: list[np.ndarray], n_pad_to: Optional[int] = None):
     return idx, mask
 
 
-def _centers_of(x: np.ndarray, groups: list[np.ndarray]) -> np.ndarray:
-    return np.stack([x[g].mean(0) if len(g) else np.zeros(x.shape[1]) for g in groups]).astype(
-        np.float32
-    )
-
-
-def _lloyd(x: np.ndarray, centers: np.ndarray, iters: int) -> np.ndarray:
-    for _ in range(iters):
-        d2 = ((x[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
-        a = d2.argmin(1)
-        for c in range(centers.shape[0]):
-            m = a == c
-            if m.any():
-                centers[c] = x[m].mean(0)
-    return centers
-
-
-def _recursive_split(x: np.ndarray, ids: np.ndarray, k: int, rng: np.random.Generator,
-                     out: list[np.ndarray]) -> None:
-    """voronoi=6: 2-means split until each part has <= k members."""
-    if len(ids) <= k:
-        out.append(ids)
-        return
-    pts = x[ids]
-    c = pts[rng.choice(len(ids), 2, replace=False)].copy()
-    for _ in range(8):
-        d2 = ((pts[:, None, :] - c[None, :, :]) ** 2).sum(-1)
-        a = d2.argmin(1)
-        for j in (0, 1):
-            if (a == j).any():
-                c[j] = pts[a == j].mean(0)
-    a = ((pts[:, None, :] - c[None, :, :]) ** 2).sum(-1).argmin(1)
-    if (a == 0).all() or (a == 1).all():  # degenerate split: halve by order
-        mid = len(ids) // 2
-        _recursive_split(x, ids[:mid], k, rng, out)
-        _recursive_split(x, ids[mid:], k, rng, out)
-        return
-    _recursive_split(x, ids[a == 0], k, rng, out)
-    _recursive_split(x, ids[a == 1], k, rng, out)
-
-
 def build_cells(
     x: np.ndarray,
     cell_size: int = 2000,
@@ -114,72 +82,14 @@ def build_cells(
     coarse_size: int = 20000,
     pad_to: Optional[int] = None,
 ) -> CellPlan:
-    """Decompose x (n, d) into cells of <= cell_size samples."""
-    n, d = x.shape
-    rng = np.random.default_rng(seed)
-    x = np.asarray(x, np.float32)
+    """Decompose x (n, d) into cells of <= cell_size samples.
 
-    if method == "none" or n <= cell_size:
-        groups = [np.arange(n, dtype=np.int32)]
-        owner = np.zeros(n, np.int32)
-        coarse = np.zeros(1, np.int32)
-    elif method == "random":
-        perm = rng.permutation(n).astype(np.int32)
-        n_cells = int(np.ceil(n / cell_size))
-        groups = [perm[c::n_cells] for c in range(n_cells)]
-        owner = np.empty(n, np.int32)
-        for c, g in enumerate(groups):
-            owner[g] = c
-        coarse = np.zeros(len(groups), np.int32)
-    elif method in ("voronoi", "overlap"):
-        n_cells = int(np.ceil(n / cell_size))
-        centers = x[rng.choice(n, n_cells, replace=False)].copy()
-        centers = _lloyd(x, centers, lloyd_iters)
-        d2 = ((x[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
-        owner = d2.argmin(1).astype(np.int32)
-        if method == "voronoi":
-            groups = [np.where(owner == c)[0].astype(np.int32) for c in range(n_cells)]
-        else:  # overlap (voronoi=5): 2 nearest centers train each point
-            two = np.argsort(d2, axis=1)[:, :2]
-            groups = [
-                np.where((two == c).any(1))[0].astype(np.int32) for c in range(n_cells)
-            ]
-        coarse = np.zeros(len(groups), np.int32)
-    elif method == "recursive":
-        out: list[np.ndarray] = []
-        _recursive_split(x, np.arange(n, dtype=np.int32), cell_size, rng, out)
-        groups = out
-        owner = np.empty(n, np.int32)
-        for c, g in enumerate(groups):
-            owner[g] = c
-        coarse = np.zeros(len(groups), np.int32)
-    elif method == "coarse_fine":
-        coarse_plan = build_cells(x, cell_size=coarse_size, method="voronoi", seed=seed)
-        groups, coarse_list = [], []
-        for cc in range(coarse_plan.n_cells):
-            ids = coarse_plan.indices[cc][coarse_plan.mask[cc] > 0].astype(np.int32)
-            out: list[np.ndarray] = []
-            _recursive_split(x, ids, cell_size, rng, out)
-            groups.extend(out)
-            coarse_list.extend([cc] * len(out))
-        owner = np.empty(n, np.int32)
-        for c, g in enumerate(groups):
-            owner[g] = c
-        coarse = np.asarray(coarse_list, np.int32)
-    else:
-        raise ValueError(f"unknown cell method {method!r}")
-
-    # drop empty cells (Lloyd can empty one)
-    keep = [i for i, g in enumerate(groups) if len(g) > 0]
-    if len(keep) != len(groups):
-        old_to_new = np.zeros(len(groups), np.int32)
-        for new, old in enumerate(keep):
-            old_to_new[old] = new
-        coarse = coarse[keep]
-        groups = [groups[i] for i in keep]
-        owner = old_to_new[owner]
-
-    idx, mask = _pad_groups(groups, pad_to)
-    centers = _centers_of(x, groups)
-    return CellPlan(indices=idx, mask=mask, owner=owner, centers=centers,
-                    coarse_of=np.asarray(coarse, np.int32))
+    Thin in-memory wrapper over the streaming builder (one implementation;
+    ``repro.pipeline.cell_stream.build_cells_stream`` takes any source).
+    """
+    from repro.pipeline.cell_stream import build_cells_stream
+    from repro.pipeline.dataset import ArraySource
+    return build_cells_stream(
+        ArraySource(np.asarray(x, np.float32)), cell_size=cell_size,
+        method=method, seed=seed, lloyd_iters=lloyd_iters,
+        coarse_size=coarse_size, pad_to=pad_to)

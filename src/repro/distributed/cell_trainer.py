@@ -25,6 +25,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import cv as cv_mod
@@ -86,6 +87,87 @@ def train_cells(
         **_CHECK_KWARGS,
     )
     return shard(x_cells, y_cells, tmask_cells, mask_cells, gammas_cells, keys)
+
+
+# ------------------------------------------------------------------ waves
+_WAVE_KEYS = ("coefs", "gamma", "lam", "tau", "val")
+
+
+def train_cells_waves(
+    stage,
+    n_slots: int,
+    wave_size: int | None,
+    lam_c: Array, sub_c: Array, task_c: Array,
+    cfg: cv_mod.CVConfig,
+    n_lam: int, n_sub: int,
+    mesh: Mesh | None = None,
+    axis_names: Tuple[str, ...] | None = None,
+    ckpt_dir: str | None = None,
+    fingerprint: str | None = None,
+):
+    """Wave-scheduled :func:`train_cells`: bounded staging at any n_slots.
+
+    ``stage(lo, hi)`` materializes ONLY slots [lo, hi) — six host arrays
+    ``(x, y, tmask, mask, gammas, keys)`` whose leading axis is
+    ``hi - lo`` (slots past ``n_slots`` must be empty padding: zero masks).
+    Every wave has the same padded slot count, so the jitted/sharded
+    ``train_cells`` compiles once and peak staging memory is
+    O(wave · k · d) instead of O(n_slots · k · d).
+
+    ``ckpt_dir`` checkpoints each completed wave through
+    ``repro.train.checkpoint`` (step == wave index, all waves kept); a
+    re-run with the same directory, wave size, slot count AND
+    ``fingerprint`` (the caller's hash of config + data identity —
+    ``LiquidSVM`` passes one) restores finished waves instead of
+    re-solving them — mid-fit fault tolerance for multi-hour cell sweeps.
+    A mismatched fingerprint means a different run left the directory:
+    its waves are ignored and re-solved.
+    """
+    from repro.train import checkpoint as ckpt_mod
+
+    if wave_size is None or wave_size >= n_slots:
+        wave_size = n_slots
+    assert wave_size > 0
+    if mesh is not None and axis_names is not None:
+        n_dev = int(np.prod([mesh.shape[a] for a in axis_names]))
+        assert wave_size % n_dev == 0, (
+            f"wave_size {wave_size} must divide over {n_dev} devices")
+    n_waves = -(-n_slots // wave_size)
+
+    done = -1
+    if ckpt_dir is not None:
+        latest = ckpt_mod.latest_step(ckpt_dir)
+        if latest is not None:
+            extra = ckpt_mod.peek_manifest(ckpt_dir, latest)["extra"]
+            if (extra.get("wave_size") == wave_size
+                    and extra.get("n_slots") == n_slots
+                    and extra.get("fingerprint") == fingerprint):
+                done = latest
+
+    outs = []
+    for w in range(n_waves):
+        lo = w * wave_size
+        if w <= done:                      # restored, not re-solved
+            man = ckpt_mod.peek_manifest(ckpt_dir, w)
+            target = {k: np.zeros(s, np.dtype(dt)) for k, s, dt in zip(
+                sorted(_WAVE_KEYS), man["shapes"], man["dtypes"])}
+            tree, _, _ = ckpt_mod.restore_checkpoint(ckpt_dir, target, step=w)
+            res = tuple(np.asarray(tree[k]) for k in _WAVE_KEYS)
+        else:
+            arrays = stage(lo, lo + wave_size)
+            res = train_cells(*[jnp.asarray(a) for a in arrays],
+                              lam_c, sub_c, task_c, cfg, n_lam, n_sub,
+                              mesh=mesh, axis_names=axis_names)
+            res = tuple(np.asarray(r) for r in res)
+            if ckpt_dir is not None:
+                ckpt_mod.save_checkpoint(
+                    ckpt_dir, w, dict(zip(_WAVE_KEYS, res)),
+                    extra={"wave": w, "wave_size": wave_size,
+                           "n_slots": n_slots, "fingerprint": fingerprint},
+                    keep_last=0)
+        outs.append(res)
+    return tuple(np.concatenate([o[i] for o in outs])[:n_slots]
+                 for i in range(len(_WAVE_KEYS)))
 
 
 def _cell_predict_local(xt_c, sv_c, coef_c, gamma_c, kernel: str):

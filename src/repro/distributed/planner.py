@@ -30,6 +30,41 @@ def _round_up(v: int, mult: int) -> int:
 
 
 @dataclasses.dataclass
+class RowGroups:
+    """Argsort-grouped rows for padded per-slot scatter/gather.
+
+    For m rows routed to slots: ``rows`` is the row ids sorted by slot
+    (stable, so ascending within a slot), ``slot`` the matching slot id
+    per sorted row and ``pos`` its position within that slot's padded
+    block.  One fancy-indexed assignment packs, a second unpacks — the
+    vectorized replacement for the per-row Python loops in both the
+    trainer's test phase and the serving engine:
+
+        packed[g.slot, g.pos] = x[g.rows]          # pack
+        out[g.rows] = dec[g.slot, g.pos]           # unpack
+    """
+    rows: np.ndarray     # (m,) int64
+    slot: np.ndarray     # (m,) int64
+    pos: np.ndarray      # (m,) int64
+    counts: np.ndarray   # (n_slots,) int64
+
+    @property
+    def m_max(self) -> int:
+        return max(int(self.counts.max()), 1) if self.counts.size else 1
+
+
+def group_rows(slot_of: np.ndarray, n_slots: int) -> RowGroups:
+    """Group row ids by destination slot (stable — ascending within slot)."""
+    slot_of = np.asarray(slot_of, np.int64)
+    counts = np.bincount(slot_of, minlength=n_slots).astype(np.int64)
+    order = np.argsort(slot_of, kind="stable")
+    starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+    slot_sorted = slot_of[order]
+    pos = np.arange(slot_of.shape[0], dtype=np.int64) - starts[slot_sorted]
+    return RowGroups(rows=order, slot=slot_sorted, pos=pos, counts=counts)
+
+
+@dataclasses.dataclass
 class PackedCells:
     order: np.ndarray          # (n_slots,) cell id per slot, -1 = empty slot
     slot_of_cell: np.ndarray   # (n_cells,)

@@ -1,0 +1,32 @@
+"""Streaming data pipeline: out-of-core ingestion for the cell machinery.
+
+The paper's headline claim is speed "for data sets of tens of millions of
+samples"; at that scale the data pipeline IS the system.  This package
+takes cell construction and training staging from "fits in one numpy
+broadcast" to "streams at any n":
+
+  dataset.py      — chunked dataset sources (in-memory, memmap, sharded
+                    npz) behind one ``iter_chunks``/``gather`` contract,
+                    plus streaming mean/std for ``Scaler``;
+  assign.py       — chunked nearest-center assignment (host GEMM form and
+                    a device path whose Pallas kernel keeps the center
+                    table resident in VMEM across row chunks), streaming
+                    Lloyd sweeps, and minibatch k-means;
+  cell_stream.py  — the two-pass streaming ``build_cells`` that emits a
+                    :class:`repro.cells.builder.CellPlan` bit-identical to
+                    the in-memory builder (which is the same core run over
+                    an in-memory source).
+
+Wave-scheduled training (bounded staging of the resulting cells) lives in
+``repro.distributed.cell_trainer.train_cells_waves`` /
+``repro.train.svm_trainer.LiquidSVM``.
+"""
+from repro.pipeline.dataset import (  # noqa: F401
+    ArraySource,
+    ChunkSource,
+    MemmapSource,
+    ScaledSource,
+    ShardedNpzSource,
+    as_source,
+    streaming_mean_std,
+)

@@ -1,0 +1,244 @@
+"""Chunked dataset sources: one contract for "x lives anywhere".
+
+Everything downstream of here (streaming cell construction, wave staging,
+scaler fitting) sees a :class:`ChunkSource`:
+
+  * ``iter_chunks(chunk_size)`` — yields ``(start, chunk)`` with ``chunk``
+    a float32 ``(rows, d)`` array, rows in dataset order, covering every
+    row exactly once.  Chunks never exceed ``chunk_size`` rows but MAY be
+    shorter (shard boundaries); per-row results must therefore never
+    depend on which chunk a row landed in;
+  * ``gather(ids)`` — the rows of ``ids`` IN THE GIVEN ORDER (cell
+    staging gathers padded index lists; center init gathers an unsorted
+    sample).  Bounded by O(len(ids)) host memory for memmap/npz sources.
+
+Sources:
+
+  ArraySource      — in-memory ndarray (the degenerate case; the in-memory
+                     cell builder is the streaming builder over this)
+  MemmapSource     — an on-disk ``.npy`` opened with ``mmap_mode="r"``:
+                     tens of millions of rows without ever holding x
+  ShardedNpzSource — an ordered list of ``.npz`` shards (the usual layout
+                     of exported feature dumps); shard headers are read
+                     without decompressing payloads
+  ScaledSource     — lazy ``(x - mean) / std`` view of another source, so
+                     cells are built on train-scaled features without a
+                     scaled copy ever existing
+
+``streaming_mean_std`` gives ``Scaler`` its out-of-core fit (f64
+accumulators, one pass).
+"""
+from __future__ import annotations
+
+import os
+import zipfile
+from typing import Iterator, Sequence, Tuple, Union
+
+import numpy as np
+
+DEFAULT_CHUNK = 65536
+
+
+class ChunkSource:
+    """Abstract chunked view of an (n, d) float dataset."""
+
+    @property
+    def n_rows(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def dim(self) -> int:
+        raise NotImplementedError
+
+    def iter_chunks(self, chunk_size: int = DEFAULT_CHUNK
+                    ) -> Iterator[Tuple[int, np.ndarray]]:
+        raise NotImplementedError
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    # convenience ----------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, int]:
+        return (self.n_rows, self.dim)
+
+    def materialize(self) -> np.ndarray:
+        """Full (n, d) f32 array — small-data escape hatch, O(n) memory."""
+        return self.gather(np.arange(self.n_rows, dtype=np.int64))
+
+
+class ArraySource(ChunkSource):
+    """In-memory ndarray behind the chunk contract."""
+
+    def __init__(self, x: np.ndarray):
+        x = np.asarray(x)
+        assert x.ndim == 2, x.shape
+        self._x = np.ascontiguousarray(x, np.float32)
+
+    @property
+    def n_rows(self) -> int:
+        return self._x.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._x.shape[1]
+
+    def iter_chunks(self, chunk_size: int = DEFAULT_CHUNK):
+        for lo in range(0, self.n_rows, chunk_size):
+            yield lo, self._x[lo:lo + chunk_size]
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        return self._x[np.asarray(ids, np.int64)]
+
+
+class MemmapSource(ChunkSource):
+    """An on-disk ``.npy`` file read through ``np.load(mmap_mode="r")``.
+
+    Chunks are materialized (and cast to f32) one at a time; the full
+    array never enters host memory.  ``np.lib.format.open_memmap`` is the
+    matching writer (see ``examples/bigdata_train.py``).
+    """
+
+    def __init__(self, path: Union[str, os.PathLike]):
+        self._path = os.fspath(path)
+        self._mm = np.load(self._path, mmap_mode="r")
+        assert self._mm.ndim == 2, self._mm.shape
+
+    @property
+    def n_rows(self) -> int:
+        return self._mm.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._mm.shape[1]
+
+    def iter_chunks(self, chunk_size: int = DEFAULT_CHUNK):
+        for lo in range(0, self.n_rows, chunk_size):
+            yield lo, np.asarray(self._mm[lo:lo + chunk_size], np.float32)
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        return np.asarray(self._mm[np.asarray(ids, np.int64)], np.float32)
+
+
+def _npz_member_shape(path: str, key: str):
+    """Read one member's (shape, dtype) from an npz WITHOUT its payload."""
+    with zipfile.ZipFile(path) as zf, zf.open(key + ".npy") as f:
+        version = np.lib.format.read_magic(f)
+        if version == (1, 0):
+            shape, _, dtype = np.lib.format.read_array_header_1_0(f)
+        else:
+            shape, _, dtype = np.lib.format.read_array_header_2_0(f)
+    return shape, dtype
+
+
+class ShardedNpzSource(ChunkSource):
+    """An ordered sequence of ``.npz`` shards, each holding ``key`` (n_i, d).
+
+    Row order is shard order; only headers are touched at construction, and
+    at most one decompressed shard is resident during iteration/gather.
+    """
+
+    def __init__(self, paths: Sequence[Union[str, os.PathLike]], key: str = "x"):
+        assert len(paths) > 0, "need at least one shard"
+        self._paths = [os.fspath(p) for p in paths]
+        self._key = key
+        shapes = [_npz_member_shape(p, key)[0] for p in self._paths]
+        assert all(len(s) == 2 for s in shapes), shapes
+        dims = {s[1] for s in shapes}
+        assert len(dims) == 1, f"shards disagree on dim: {sorted(dims)}"
+        self._dim = int(dims.pop())
+        self._starts = np.concatenate(
+            [[0], np.cumsum([s[0] for s in shapes])]).astype(np.int64)
+        self._cache: Tuple[int, np.ndarray] | None = None  # last shard
+
+    @property
+    def n_rows(self) -> int:
+        return int(self._starts[-1])
+
+    @property
+    def dim(self) -> int:
+        return self._dim
+
+    def _load(self, i: int) -> np.ndarray:
+        """One-shard cache: gathers with spatial locality (cell staging hits
+        the same shard repeatedly) decompress each shard once, not per call."""
+        if self._cache is not None and self._cache[0] == i:
+            return self._cache[1]
+        with np.load(self._paths[i]) as z:
+            shard = np.asarray(z[self._key], np.float32)
+        self._cache = (i, shard)
+        return shard
+
+    def iter_chunks(self, chunk_size: int = DEFAULT_CHUNK):
+        for i in range(len(self._paths)):
+            shard = self._load(i)
+            base = int(self._starts[i])
+            for lo in range(0, shard.shape[0], chunk_size):
+                yield base + lo, shard[lo:lo + chunk_size]
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        out = np.empty((ids.shape[0], self._dim), np.float32)
+        shard_of = np.searchsorted(self._starts, ids, side="right") - 1
+        for i in np.unique(shard_of):
+            sel = shard_of == i
+            out[sel] = self._load(int(i))[ids[sel] - self._starts[i]]
+        return out
+
+
+class ScaledSource(ChunkSource):
+    """Lazy ``(x - mean) / std`` view — train-scaled features on the fly."""
+
+    def __init__(self, base: ChunkSource, mean: np.ndarray, std: np.ndarray):
+        self._base = base
+        self._mean = np.asarray(mean, np.float32)
+        self._std = np.asarray(std, np.float32)
+
+    @property
+    def n_rows(self) -> int:
+        return self._base.n_rows
+
+    @property
+    def dim(self) -> int:
+        return self._base.dim
+
+    def _apply(self, x: np.ndarray) -> np.ndarray:
+        return ((x - self._mean) / self._std).astype(np.float32)
+
+    def iter_chunks(self, chunk_size: int = DEFAULT_CHUNK):
+        for lo, chunk in self._base.iter_chunks(chunk_size):
+            yield lo, self._apply(chunk)
+
+    def gather(self, ids: np.ndarray) -> np.ndarray:
+        return self._apply(self._base.gather(ids))
+
+
+def as_source(x) -> ChunkSource:
+    """Coerce ndarray / path / shard list / source into a ChunkSource."""
+    if isinstance(x, ChunkSource):
+        return x
+    if isinstance(x, np.ndarray):
+        return ArraySource(x)
+    if isinstance(x, (str, os.PathLike)):
+        return MemmapSource(x)
+    if isinstance(x, (list, tuple)):
+        return ShardedNpzSource(x)
+    raise TypeError(f"cannot make a ChunkSource from {type(x)!r}")
+
+
+def streaming_mean_std(source: ChunkSource, chunk_size: int = DEFAULT_CHUNK
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """One-pass per-feature mean/std (f64 accumulators), O(chunk) memory."""
+    d = source.dim
+    s = np.zeros(d, np.float64)
+    ss = np.zeros(d, np.float64)
+    n = 0
+    for _, chunk in source.iter_chunks(chunk_size):
+        c64 = chunk.astype(np.float64)
+        s += c64.sum(0)
+        ss += (c64 * c64).sum(0)
+        n += chunk.shape[0]
+    assert n > 0, "empty source"
+    mean = s / n
+    var = np.maximum(ss / n - mean * mean, 0.0)
+    return mean.astype(np.float32), np.sqrt(var).astype(np.float32)

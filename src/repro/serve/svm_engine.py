@@ -124,13 +124,15 @@ class SVMEngine:
 
     # ------------------------------------------------------------- ingestion
     def route(self, x: np.ndarray) -> np.ndarray:
-        """Nearest-center Voronoi cell ids for already-scaled queries."""
-        out = np.empty((x.shape[0],), np.int64)
-        for lo in range(0, x.shape[0], _ROUTE_CHUNK):
-            xs = x[lo:lo + _ROUTE_CHUNK]
-            d2 = ((xs[:, None, :] - self._centers[None, :, :]) ** 2).sum(-1)
-            out[lo:lo + _ROUTE_CHUNK] = d2.argmin(1)
-        return out
+        """Nearest-center Voronoi cell ids for already-scaled queries.
+
+        Same chunked GEMM-form helper the training plan uses
+        (``CellPlan.route``), so serve-time routing and the decomposition's
+        ownership rule cannot drift apart.
+        """
+        from repro.pipeline.assign import nearest_center
+        return nearest_center(x, self._centers,
+                              chunk_size=_ROUTE_CHUNK).astype(np.int64)
 
     def submit(self, x: np.ndarray) -> np.ndarray:
         """Enqueue queries (raw feature space); returns request ids."""

@@ -1,0 +1,219 @@
+"""Streaming data pipeline gates: source round-trips, bit-identical
+streaming cell construction, device-side assignment parity, minibatch
+k-means determinism, and wave-scheduled training equivalence."""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.cells.builder import build_cells
+from repro.data.scaling import Scaler
+from repro.pipeline import assign
+from repro.pipeline.cell_stream import build_cells_stream
+from repro.pipeline.dataset import (ArraySource, MemmapSource, ScaledSource,
+                                    ShardedNpzSource, as_source,
+                                    streaming_mean_std)
+
+PLAN_FIELDS = ("indices", "mask", "owner", "centers", "coarse_of")
+
+
+def _data(n=733, d=5, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def x():
+    return _data()
+
+
+@pytest.fixture(scope="module")
+def npy_path(tmp_path_factory, x):
+    p = tmp_path_factory.mktemp("pipe") / "x.npy"
+    np.save(p, x)
+    return os.fspath(p)
+
+
+@pytest.fixture(scope="module")
+def npz_paths(tmp_path_factory, x):
+    d = tmp_path_factory.mktemp("pipe_npz")
+    paths = []
+    for i, lo in enumerate(range(0, x.shape[0], 250)):
+        p = d / f"shard_{i}.npz"
+        np.savez(p, x=x[lo:lo + 250])
+        paths.append(os.fspath(p))
+    return paths
+
+
+class TestSources:
+    def test_memmap_round_trip(self, x, npy_path):
+        src = MemmapSource(npy_path)
+        assert src.shape == x.shape
+        got = np.concatenate([c for _, c in src.iter_chunks(97)])
+        np.testing.assert_array_equal(got, x)
+        ids = np.array([700, 3, 3, 12, 0], np.int64)    # unsorted + repeats
+        np.testing.assert_array_equal(src.gather(ids), x[ids])
+
+    def test_sharded_npz_round_trip(self, x, npz_paths):
+        src = ShardedNpzSource(npz_paths)
+        assert src.shape == x.shape
+        starts = [lo for lo, _ in src.iter_chunks(61)]
+        assert starts[0] == 0 and sorted(starts) == starts
+        got = np.concatenate([c for _, c in src.iter_chunks(61)])
+        np.testing.assert_array_equal(got, x)
+        ids = np.array([0, 501, 249, 250, 732], np.int64)  # cross-shard
+        np.testing.assert_array_equal(src.gather(ids), x[ids])
+
+    def test_scaled_source_matches_scaler(self, x):
+        sc = Scaler.fit(x)
+        src = ScaledSource(ArraySource(x), sc.mean, sc.std)
+        np.testing.assert_array_equal(src.materialize(), sc.transform(x))
+
+    def test_streaming_mean_std(self, x, npy_path):
+        mean, std = streaming_mean_std(MemmapSource(npy_path), chunk_size=90)
+        np.testing.assert_allclose(mean, x.mean(0), atol=1e-5)
+        np.testing.assert_allclose(std, x.std(0), atol=1e-5)
+        sc = Scaler.fit_stream(npy_path, chunk_size=90)
+        np.testing.assert_allclose(sc.mean, Scaler.fit(x).mean, atol=1e-5)
+
+    def test_as_source_coercions(self, x, npy_path, npz_paths):
+        assert isinstance(as_source(x), ArraySource)
+        assert isinstance(as_source(npy_path), MemmapSource)
+        assert isinstance(as_source(npz_paths), ShardedNpzSource)
+        src = as_source(x)
+        assert as_source(src) is src
+
+
+class TestStreamingBuilder:
+    """The tentpole gate: streaming plan == in-memory plan, bit for bit."""
+
+    @pytest.mark.parametrize("method", ["none", "random", "voronoi",
+                                        "overlap", "recursive", "coarse_fine"])
+    def test_bitwise_equal_to_in_memory(self, method, x, npy_path, npz_paths):
+        ref = build_cells(x, cell_size=120, method=method, seed=3,
+                          coarse_size=300)
+        for src, cs in ((MemmapSource(npy_path), 97),
+                        (ShardedNpzSource(npz_paths), 61)):
+            plan = build_cells_stream(src, cell_size=120, method=method,
+                                      seed=3, coarse_size=300, chunk_size=cs)
+            for f in PLAN_FIELDS:
+                a, b = getattr(ref, f), getattr(plan, f)
+                assert a.shape == b.shape, (method, f)
+                assert (a == b).all(), (method, f)
+
+    def test_chunk_size_invariance(self, x):
+        plans = [build_cells_stream(x, cell_size=100, method="voronoi",
+                                    seed=1, chunk_size=cs)
+                 for cs in (37, 256, 10_000)]
+        for p in plans[1:]:
+            for f in PLAN_FIELDS:
+                assert (getattr(plans[0], f) == getattr(p, f)).all(), f
+
+    def test_pad_to_respected(self, x):
+        plan = build_cells_stream(x, cell_size=100, method="voronoi",
+                                  seed=1, pad_to=256)
+        assert plan.k_max == 256
+
+
+class TestAssign:
+    def test_device_paths_match_host(self, x):
+        centers = _data(13, 5, seed=9)
+        ref = assign.nearest_center(x, centers, chunk_size=128)
+        np.testing.assert_array_equal(
+            ref, assign.assign_stream(x, centers, chunk_size=160,
+                                      backend="jax"))
+        np.testing.assert_array_equal(
+            ref, assign.assign_stream(x, centers, chunk_size=200,
+                                      backend="pallas"))
+
+    def test_top2_distinct_and_first_is_nearest(self, x):
+        centers = _data(11, 5, seed=8)
+        nn1, nn2 = assign.nearest_top2(x, centers, chunk_size=100)
+        assert (nn1 != nn2).all()
+        np.testing.assert_array_equal(nn1, assign.nearest_center(x, centers))
+
+    def test_lloyd_stream_chunk_invariant(self, x):
+        init = _data(9, 5, seed=7)
+        a = assign.lloyd_stream(x, init, iters=3, chunk_size=77)
+        b = assign.lloyd_stream(x, init, iters=3, chunk_size=733)
+        np.testing.assert_array_equal(a, b)
+
+    def test_minibatch_kmeans_seeded_determinism(self, x, npy_path):
+        a = assign.minibatch_kmeans(x, 8, iters=8, batch_size=128, seed=5)
+        b = assign.minibatch_kmeans(MemmapSource(npy_path), 8, iters=8,
+                                    batch_size=128, seed=5)
+        np.testing.assert_array_equal(a, b)     # source-independent too
+        c = assign.minibatch_kmeans(x, 8, iters=8, batch_size=128, seed=6)
+        assert not (a == c).all()
+        # centers actually cluster: inertia drops vs the initial sample
+        init = x[np.random.default_rng(5).choice(len(x), 8, replace=False)]
+        def inertia(cen):
+            d2 = assign._d2_chunk(x, np.asarray(cen, np.float32))
+            return float(d2.min(1).mean())
+        assert inertia(a) < inertia(init)
+
+
+class TestWaveTraining:
+    def _fit(self, wave, ckpt_dir=None, **kw):
+        from repro.data.synthetic import covtype_like, train_test_split
+        from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+        x, y = covtype_like(n=600, d=4, seed=0, label_noise=0.02, n_modes=3)
+        xtr, ytr, xte, yte = train_test_split(x, np.where(y == 0, -1, 1),
+                                              0.25, 0)
+        cfg = SVMTrainerConfig(n_folds=2, max_iters=150,
+                               cell_method="voronoi", cell_size=120,
+                               n_slots_per_wave=wave, **kw)
+        m = LiquidSVM(cfg).fit(xtr, ytr, ckpt_dir=ckpt_dir)
+        return m, xte
+
+    def test_wave_equals_single_wave(self):
+        m1, xte = self._fit(None)
+        m2, _ = self._fit(2)
+        assert m1.packed.n_slots > 2            # waves actually split
+        np.testing.assert_array_equal(m1.decision_function(xte),
+                                      m2.decision_function(xte))
+
+    def test_wave_checkpoint_resume(self, tmp_path):
+        ck = os.fspath(tmp_path / "waves")
+        m1, xte = self._fit(2, ckpt_dir=ck)
+        assert os.path.exists(os.path.join(ck, "latest"))
+        m2, _ = self._fit(2, ckpt_dir=ck)       # restores every wave
+        np.testing.assert_array_equal(m1.decision_function(xte),
+                                      m2.decision_function(xte))
+
+    def test_stale_checkpoint_rejected(self, tmp_path):
+        """A ckpt_dir left by a DIFFERENT run (other seed/config/data) must
+        be ignored, not silently restored into the new fit."""
+        ck = os.fspath(tmp_path / "waves")
+        self._fit(2, ckpt_dir=ck)                  # leaves seed-0 waves
+        m_resumed, xte = self._fit(2, ckpt_dir=ck, seed=1)
+        m_fresh, _ = self._fit(2, seed=1)          # no checkpoint at all
+        np.testing.assert_array_equal(m_resumed.decision_function(xte),
+                                      m_fresh.decision_function(xte))
+
+    def test_fit_from_memmap_source(self, tmp_path):
+        from repro.data.synthetic import covtype_like, train_test_split
+        from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+        x, y = covtype_like(n=500, d=4, seed=2, label_noise=0.02, n_modes=3)
+        xtr, ytr, xte, yte = train_test_split(x, np.where(y == 0, -1, 1),
+                                              0.25, 2)
+        p = tmp_path / "xtr.npy"
+        np.save(p, xtr)
+        cfg = SVMTrainerConfig(n_folds=2, max_iters=150,
+                               cell_method="voronoi", cell_size=120,
+                               n_slots_per_wave=2, chunk_size=128)
+        m = LiquidSVM(cfg).fit(os.fspath(p), ytr)
+        assert m.error(xte, yte) < 0.2
+        # container invariance: the memmap fit IS the ndarray fit, bitwise
+        m_arr = LiquidSVM(cfg).fit(xtr, ytr)
+        np.testing.assert_array_equal(m.decision_function(xte),
+                                      m_arr.decision_function(xte))
+        # engine hand-off keeps working from a source-fitted model
+        from repro.serve.svm_engine import SVMEngine
+        eng = SVMEngine(m.to_bank(), fused=False)
+        dec = eng.predict(xte[:16])
+        np.testing.assert_allclose(dec.reshape(16, -1),
+                                   m.decision_function(xte[:16])
+                                   .reshape(16, -1), atol=1e-5)
