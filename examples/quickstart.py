@@ -1,48 +1,85 @@
-"""Quickstart: the liquidSVM application cycle in a few lines.
+"""Quickstart: the staged liquidSVM application cycle in a few lines.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Mirrors the package's R demo (`mcSVM(Y ~ ., d$train)` on banana-mc):
-multiclass classification with fully integrated hyper-parameter selection,
-then quantile regression — no hyper-parameters supplied by the user.
+Mirrors the package's user surface (paper §2-3): scenario front-ends
+(`mcSVM`, `qtSVM`, `nplSVM`, `rocSVM`, ...) over one staged
+train -> select -> test cycle.  `train()` solves the fold x grid ONCE and
+retains the CV surface; `select()` is re-runnable with different criteria
+(argmin, Neyman-Pearson constraints, ROC fronts) at the cost of one
+targeted wave — never a refit; `test()` streams errors over arrays, memmap
+paths or any chunk source.
+
+The same cycle runs as separate processes through the CLI:
+
+    python -m repro.cli train  --data xtr.npy --labels ytr.npy \\
+        --model-dir run1 --scenario npl -S FOLDS=3 -S VORONOI=voronoi
+    python -m repro.cli select --model-dir run1 -S NPL_CONSTRAINT=0.01
+    python -m repro.cli test   --data xte.npy --labels yte.npy --model-dir run1
+
+after which a predict server cold-starts from `run1/bank` alone
+(see examples/serve_svm.py).
 """
 import numpy as np
 
+from repro.api import SVM, mcSVM, nplSVM, qtSVM, rocSVM
 from repro.data.synthetic import banana_mc, regression_1d, train_test_split
-from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
 
 
 def main():
-    # ---- multiclass classification (OvA, hinge solver, 5-fold CV) --------
+    # ---- multiclass classification (OvA, staged cycle) -------------------
     x, y = banana_mc(n=1600, n_classes=4, seed=0)
     xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
-    model = LiquidSVM(SVMTrainerConfig(scenario="ova", n_folds=3,
-                                       max_iters=400))
-    model.fit(xtr, ytr)
-    print(f"banana-mc  test error: {100 * model.error(xte, yte):.2f}% "
+    mc = mcSVM(xtr, ytr, FOLDS=3, MAX_ITERATIONS=400)
+    mc.train()                                   # fold x grid, surface kept
+    res = mc.test(xte, yte)                      # selects (argmin) + streams
+    print(f"mcSVM      test error: {100 * res.error:.2f}% "
           f"(4 classes, n={len(xtr)})")
 
     # ---- quantile regression (pinball solver, 3 quantiles) ---------------
     xq, yq = regression_1d(n=900, seed=1)
     xtr, ytr, xte, yte = train_test_split(xq, yq, 0.25, 1)
-    qm = LiquidSVM(SVMTrainerConfig(scenario="quantile",
-                                    taus=(0.1, 0.5, 0.9), n_folds=3,
-                                    max_iters=1500))
-    qm.fit(xtr, ytr)
-    pred = qm.predict(xte)                       # (m, 3)
+    qt = qtSVM(xtr, ytr, taus=(0.1, 0.5, 0.9), FOLDS=3,
+               MAX_ITERATIONS=1500)
+    qt.train()
+    pred = qt.select().predict(xte)              # (m, 3)
     cover = (yte[:, None] <= pred).mean(0)
-    print(f"quantile   coverage @ tau=0.1/0.5/0.9: "
+    print(f"qtSVM      coverage @ tau=0.1/0.5/0.9: "
           f"{cover[0]:.2f}/{cover[1]:.2f}/{cover[2]:.2f}")
 
-    # ---- cells: same API, two orders less kernel work ---------------------
-    big_x, big_y = banana_mc(n=4000, n_classes=2, seed=2)
+    # ---- re-runnable selection: NPL constraints + ROC front --------------
+    big_x, big_y = banana_mc(n=3000, n_classes=2, seed=2)
     xtr, ytr, xte, yte = train_test_split(big_x, np.where(big_y == 0, -1, 1),
                                           0.25, 2)
-    cm = LiquidSVM(SVMTrainerConfig(cell_method="voronoi", cell_size=500,
-                                    n_folds=3, max_iters=400))
-    cm.fit(xtr, ytr)
-    print(f"cells      test error: {100 * cm.error(xte, yte):.2f}% "
-          f"({cm.plan.n_cells} Voronoi cells of <=500)")
+    npl = nplSVM(xtr, ytr, constraint=0.05, FOLDS=3, MAX_ITERATIONS=400,
+                 VORONOI="voronoi", CELL_SIZE=500)
+    tr = npl.train()                             # ONE training sweep ...
+    for alpha in (0.1, 0.05, 0.01):              # ... many selections
+        sel = npl.select(alpha=alpha)
+        t = sel.test(xte, yte)
+        print(f"nplSVM     alpha={alpha:<5} validation FA="
+              f"{float(sel.extras['np_fa'][0, sel.default_sub]):.3f} "
+              f"test FA={t.details['false_alarm']:.3f} "
+              f"detection={t.details['detection']:.3f} "
+              f"(re-solved {sel.stats['columns_resolved']} of "
+              f"{sel.stats['grid_columns']} columns)")
+
+    # the ROC weight front needs ITS own weight grid -> its own session
+    roc = rocSVM(xtr, ytr, weight_steps=5, FOLDS=3, MAX_ITERATIONS=400,
+                 VORONOI="voronoi", CELL_SIZE=500)
+    roc.train()
+    front = np.asarray(roc.select().extras["roc_front"])[0]  # (S, 2)
+    pts = " ".join(f"({fa:.3f},{det:.3f})" for fa, det in front)
+    print(f"rocSVM     (FA, detection) front: {pts}")
+
+    # ---- low-level staged session + serving hand-off ----------------------
+    sess = SVM(xtr, ytr, scenario="binary", FOLDS=3, MAX_ITERATIONS=400,
+               VORONOI="voronoi", CELL_SIZE=500)
+    sess.train()
+    bank = sess.select().to_bank()               # -> serve.SVMEngine(bank)
+    print(f"bank       {bank.stats()['sv_live']} SVs over "
+          f"{bank.n_cells} cells "
+          f"({100 * bank.stats()['compaction']:.0f}% of raw rows kept)")
 
 
 if __name__ == "__main__":

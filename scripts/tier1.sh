@@ -1,14 +1,39 @@
 #!/usr/bin/env bash
 # Tier-1 verify gate — the exact command from ROADMAP.md, reproducible.
-#   ./scripts/tier1.sh            # full suite
+#   ./scripts/tier1.sh            # full suite + CLI smoke
 #   ./scripts/tier1.sh -m 'not slow'   # quick pass (extra args forwarded)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-# The serving path (model bank + cell-routed engine) and the streaming
-# pipeline (bitwise cell-plan parity, wave training) are part of the default
-# gate: when extra args filter the main run, still verify them explicitly.
+# The serving path (model bank + cell-routed engine), the streaming
+# pipeline (bitwise cell-plan parity, wave training) and the staged
+# train->select->test API are part of the default gate: when extra args
+# filter the main run, still verify them explicitly.
 if [ "$#" -gt 0 ]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
-    tests/test_serve_svm.py tests/test_pipeline.py
+    tests/test_serve_svm.py tests/test_pipeline.py tests/test_staged_api.py
 fi
+
+# CLI smoke: the staged cycle as three separate processes on tiny synthetic
+# data — train writes the surface, select re-picks under NPL, test streams.
+SMOKE=$(mktemp -d)
+trap 'rm -rf "$SMOKE"' EXIT
+PYTHONPATH=src python - "$SMOKE" <<'PY'
+import sys
+import numpy as np
+from repro.data.synthetic import covtype_like, train_test_split
+x, y = covtype_like(n=300, d=4, seed=0, label_noise=0.05, n_modes=3)
+xtr, ytr, xte, yte = train_test_split(x, np.where(y == 0, -1, 1), 0.25, 0)
+d = sys.argv[1]
+np.save(f"{d}/xtr.npy", xtr); np.save(f"{d}/ytr.npy", ytr)
+np.save(f"{d}/xte.npy", xte); np.save(f"{d}/yte.npy", yte)
+PY
+PYTHONPATH=src python -m repro.cli train --data "$SMOKE/xtr.npy" \
+  --labels "$SMOKE/ytr.npy" --model-dir "$SMOKE/model" --scenario npl \
+  -S FOLDS=2 -S MAX_ITERATIONS=150 -S ADAPTIVITY_CONTROL=1 \
+  -S WEIGHTS='0.5 1.0 2.0' > /dev/null
+PYTHONPATH=src python -m repro.cli select --model-dir "$SMOKE/model" \
+  -S NPL_CONSTRAINT=0.05 > /dev/null
+PYTHONPATH=src python -m repro.cli test --data "$SMOKE/xte.npy" \
+  --labels "$SMOKE/yte.npy" --model-dir "$SMOKE/model"
+echo "tier1: CLI smoke OK"

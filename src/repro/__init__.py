@@ -1,6 +1,11 @@
 """repro: liquidSVM (Steinwart & Thomann, 2017) as a multi-pod JAX framework.
 
 Layers:
+  repro.api          staged train->select->test sessions, scenario
+                     front-ends (mcSVM/lsSVM/qtSVM/exSVM/nplSVM/rocSVM),
+                     string-key config layer
+  repro.cli          `python -m repro.cli {train,select,test}` — the staged
+                     cycle as separate processes over persisted artifacts
   repro.core         solvers + CV + selection (the paper's contribution)
   repro.cells        working-set decomposition (random/Voronoi/recursive/overlap)
   repro.tasks        OvA/AvA/NP/quantile task creation

@@ -1,0 +1,39 @@
+"""Staged liquidSVM-style user surface: sessions, scenarios, config keys.
+
+Three layers, mirroring the package's bindings (paper §2-3):
+
+* :mod:`repro.api.session` — the staged cycle.  ``SVM(x, y, ...)`` with
+  ``train()`` -> :class:`TrainResult` (models + retained CV surface),
+  ``select(rule)`` -> :class:`SelectResult` (re-runnable selection: argmin /
+  npl / roc / quantile / expectile — only moved winners are re-solved),
+  ``test()`` -> :class:`TestResult` (streamed over any chunk source).  All
+  stage artifacts persist via ``save``/``load`` so the stages can run as
+  separate processes (``python -m repro.cli {train,select,test}``) and a
+  predict server cold-starts from the select output
+  (``SelectResult.to_bank()`` -> ``repro.serve.SVMEngine``).
+
+* :mod:`repro.api.scenarios` — front-ends ``mcSVM`` ``lsSVM`` ``qtSVM``
+  ``exSVM`` ``nplSVM`` ``rocSVM`` returning pre-configured sessions.
+
+* :mod:`repro.api.config` — the validated string-key config layer shared
+  by every entry point (keys are case-insensitive; values may be strings):
+
+  SCENARIO SOLVER KERNEL SCALE FOLDS FOLD_SCHEME GRID_CHOICE
+  ADAPTIVITY_CONTROL MAX_ITERATIONS TOLERANCE RANDOM_SEED VORONOI
+  (PARTITION_CHOICE) CELL_SIZE WEIGHTS MIN_WEIGHT MAX_WEIGHT WEIGHT_STEPS
+  TAUS WAVE_SLOTS CHUNK_SIZE NPL_CONSTRAINT NPL_CLASS DISPLAY THREADS
+
+  See ``repro.api.config.describe_keys()`` (or ``python -m repro.cli
+  train --help-keys``) for types, ranges and semantics.
+"""
+from repro.api.config import (ConfigError, apply_keys, available_keys,
+                              describe_keys, parse_keys, weight_grid)
+from repro.api.scenarios import exSVM, lsSVM, mcSVM, nplSVM, qtSVM, rocSVM
+from repro.api.session import (SVM, SelectResult, TestResult, TrainResult)
+
+__all__ = [
+    "SVM", "TrainResult", "SelectResult", "TestResult",
+    "mcSVM", "lsSVM", "qtSVM", "exSVM", "nplSVM", "rocSVM",
+    "ConfigError", "apply_keys", "parse_keys", "available_keys",
+    "describe_keys", "weight_grid",
+]

@@ -1,0 +1,234 @@
+"""Validated string-key configuration (liquidSVM's one config system).
+
+Every liquidSVM binding — R, Python, MATLAB, the command line — shares one
+set of string configuration keys (``d$train("FOLDS=3 KERNEL=GAUSS_RBF")``,
+``mcSVM(..., folds=3)``).  This module is that layer for the JAX port: a
+registry of typed, validated keys that map onto
+:class:`repro.train.svm_trainer.SVMTrainerConfig` fields or select-stage
+parameters.  Keys are case-insensitive; values arrive as Python values or
+as strings (the CLI's ``-S KEY=VALUE``).
+
+Train-stage keys
+  SCENARIO             str    binary|ova|ava|weighted|npsvm|quantile|expectile|ls
+  SOLVER               str    auto|hinge|ls|quantile|expectile
+  KERNEL               str    gauss_rbf|laplacian (the registered kernels)
+  SCALE                bool   train-statistics feature scaling (default on)
+  FOLDS                int    number of CV folds (>= 2)
+  FOLD_SCHEME          str    random|stratified|blocks
+  GRID_CHOICE          int    0|1|2 -> 10x10 | 15x15 | 20x20 grid
+  ADAPTIVITY_CONTROL   int    0|1|2 coarse-grid subsetting (paper App. C)
+  MAX_ITERATIONS       int    solver iteration cap
+  TOLERANCE            float  solver duality-gap tolerance
+  RANDOM_SEED          int    fold/cell PRNG seed
+  VORONOI              int|str cell decomposition: 0=none 1=random
+                       2-4=voronoi 5=overlap 6=recursive (or method names,
+                       incl. coarse_fine)
+  CELL_SIZE            int    max working-set size per cell
+  WEIGHTS              floats explicit hinge +1-class weight grid
+  MIN_WEIGHT /
+  MAX_WEIGHT /
+  WEIGHT_STEPS         float/float/int geometric weight grid (wSVM/rocSVM)
+  TAUS                 floats quantile/expectile levels
+  WAVE_SLOTS           int    packed slots solved per wave (memory bound)
+  CHUNK_SIZE           int    streaming-ingestion chunk rows
+
+Select-stage keys (consumed by ``select()``, not the trainer)
+  NPL_CONSTRAINT       float  Neyman-Pearson false-alarm budget alpha
+  NPL_CLASS            int    +-1: which class the constraint binds on
+
+Accepted for liquidSVM compatibility, no effect here
+  DISPLAY, THREADS
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.train.svm_trainer import SVMTrainerConfig
+
+_CELL_CODES = {0: "none", 1: "random", 2: "voronoi", 3: "voronoi",
+               4: "voronoi", 5: "overlap", 6: "recursive"}
+_CELL_NAMES = ("none", "random", "voronoi", "overlap", "recursive",
+               "coarse_fine")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigKey:
+    name: str
+    kind: str                       # int | float | bool | str | floats
+    doc: str
+    field: Optional[str] = None     # SVMTrainerConfig field
+    choices: Optional[Tuple] = None
+    lo: Optional[float] = None
+    hi: Optional[float] = None
+    select: bool = False            # select-stage parameter
+    noop: bool = False              # accepted (compat), ignored
+
+
+_KEYS: Dict[str, ConfigKey] = {k.name: k for k in [
+    ConfigKey("SCENARIO", "str", "learning scenario", field="scenario",
+              choices=("binary", "ova", "ava", "weighted", "npsvm",
+                       "quantile", "expectile", "ls")),
+    ConfigKey("SOLVER", "str", "solver override", field="solver",
+              choices=("auto", "hinge", "ls", "quantile", "expectile")),
+    ConfigKey("KERNEL", "str", "kernel name", field="kernel"),
+    ConfigKey("SCALE", "bool", "train-statistics scaling", field="scale"),
+    ConfigKey("FOLDS", "int", "CV folds", field="n_folds", lo=2, hi=64),
+    ConfigKey("FOLD_SCHEME", "str", "fold construction", field="fold_scheme",
+              choices=("random", "stratified", "blocks")),
+    ConfigKey("GRID_CHOICE", "int", "grid size preset", field="grid_choice",
+              lo=0, hi=2),
+    ConfigKey("ADAPTIVITY_CONTROL", "int", "coarse-grid level",
+              field="adaptivity_control", lo=0, hi=2),
+    ConfigKey("MAX_ITERATIONS", "int", "solver iteration cap",
+              field="max_iters", lo=1),
+    ConfigKey("TOLERANCE", "float", "solver tolerance", field="tol", lo=0.0),
+    ConfigKey("RANDOM_SEED", "int", "PRNG seed", field="seed"),
+    ConfigKey("VORONOI", "", "cell decomposition code/name"),
+    ConfigKey("PARTITION_CHOICE", "", "alias of VORONOI"),
+    ConfigKey("CELL_SIZE", "int", "max cell size", field="cell_size", lo=2),
+    ConfigKey("WEIGHTS", "floats", "explicit weight grid", field="weights"),
+    ConfigKey("MIN_WEIGHT", "float", "weight grid lower end", lo=0.0),
+    ConfigKey("MAX_WEIGHT", "float", "weight grid upper end", lo=0.0),
+    ConfigKey("WEIGHT_STEPS", "int", "weight grid size", lo=1),
+    ConfigKey("TAUS", "floats", "quantile/expectile levels", field="taus"),
+    ConfigKey("WAVE_SLOTS", "int", "slots per training wave",
+              field="n_slots_per_wave", lo=1),
+    ConfigKey("CHUNK_SIZE", "int", "streaming chunk rows",
+              field="chunk_size", lo=1),
+    ConfigKey("NPL_CONSTRAINT", "float", "NP false-alarm budget",
+              select=True, lo=0.0, hi=1.0),
+    ConfigKey("NPL_CLASS", "int", "NP constrained class", select=True,
+              choices=(-1, 1)),
+    ConfigKey("DISPLAY", "int", "verbosity (compat; ignored)", noop=True),
+    ConfigKey("THREADS", "int", "thread count (compat; ignored)", noop=True),
+]}
+
+_SELECT_NAMES = {"NPL_CONSTRAINT": "alpha", "NPL_CLASS": "npl_class"}
+
+
+class ConfigError(ValueError):
+    """A config key or value failed validation."""
+
+
+def available_keys() -> Tuple[str, ...]:
+    return tuple(sorted(_KEYS))
+
+
+def describe_keys() -> str:
+    """Human-readable key table (the CLI's ``--help-keys``)."""
+    rows = []
+    for name in sorted(_KEYS):
+        k = _KEYS[name]
+        kind = k.kind or "int|str"
+        extra = " (select stage)" if k.select else \
+            " (ignored)" if k.noop else ""
+        rows.append(f"  {name:<20} {kind:<7} {k.doc}{extra}")
+    return "\n".join(rows)
+
+
+def _coerce(key: ConfigKey, raw: Any) -> Any:
+    kind = key.kind
+    try:
+        if kind == "int":
+            v: Any = int(raw)
+        elif kind == "float":
+            v = float(raw)
+        elif kind == "bool":
+            v = (raw.strip().lower() in ("1", "true", "yes", "on")
+                 if isinstance(raw, str) else bool(raw))
+        elif kind == "floats":
+            if isinstance(raw, str):
+                v = tuple(float(p) for p in raw.replace(",", " ").split())
+            else:
+                v = tuple(float(p) for p in np.atleast_1d(raw))
+        elif kind == "str":
+            v = str(raw).lower()
+        else:                       # VORONOI: int code or method name
+            s = str(raw).lower()
+            if s in _CELL_NAMES:
+                return s
+            v = _CELL_CODES.get(int(s))
+            if v is None:
+                raise ValueError(s)
+            return v
+    except (TypeError, ValueError):
+        raise ConfigError(
+            f"{key.name}: cannot parse {raw!r} as {kind or 'int|str'}")
+    if key.choices is not None and v not in key.choices:
+        raise ConfigError(f"{key.name}: {v!r} not in {key.choices}")
+    if key.lo is not None and v < key.lo:
+        raise ConfigError(f"{key.name}: {v!r} below minimum {key.lo}")
+    if key.hi is not None and v > key.hi:
+        raise ConfigError(f"{key.name}: {v!r} above maximum {key.hi}")
+    return v
+
+
+def parse_keys(pairs: Dict[str, Any]) -> Dict[str, Any]:
+    """Normalize/validate a {key: value} mapping to canonical upper keys."""
+    out: Dict[str, Any] = {}
+    for name, raw in pairs.items():
+        canon = name.upper()
+        if canon == "PARTITION_CHOICE":
+            canon = "VORONOI"
+        if canon not in _KEYS:
+            raise ConfigError(f"unknown config key {name!r}; known keys:\n"
+                              + describe_keys())
+        out[canon] = _coerce(_KEYS[canon], raw)
+    return out
+
+
+def apply_keys(base: SVMTrainerConfig, pairs: Dict[str, Any]
+               ) -> Tuple[SVMTrainerConfig, Dict[str, Any]]:
+    """Apply string keys onto a trainer config.
+
+    Returns ``(config, select_params)`` — the select-stage keys
+    (NPL_CONSTRAINT/NPL_CLASS) are routed to ``select()`` rather than the
+    trainer.  MIN_WEIGHT/MAX_WEIGHT/WEIGHT_STEPS expand to a geometric
+    weight grid (overridden by an explicit WEIGHTS).
+    """
+    keys = parse_keys(pairs)
+    fields: Dict[str, Any] = {}
+    select_params: Dict[str, Any] = {}
+    w_lo = w_hi = w_steps = None
+    for name, v in keys.items():
+        k = _KEYS[name]
+        if k.noop:
+            continue
+        if name == "VORONOI":
+            fields["cell_method"] = v
+        elif name == "MIN_WEIGHT":
+            w_lo = v
+        elif name == "MAX_WEIGHT":
+            w_hi = v
+        elif name == "WEIGHT_STEPS":
+            w_steps = v
+        elif k.select:
+            select_params[_SELECT_NAMES[name]] = v
+        else:
+            fields[k.field] = v
+    if w_steps is not None or w_lo is not None or w_hi is not None:
+        w_lo = 1.0 / 9.0 if w_lo is None else w_lo
+        w_hi = 9.0 if w_hi is None else w_hi
+        w_steps = 5 if w_steps is None else w_steps
+        if "weights" not in fields:
+            fields["weights"] = weight_grid(w_lo, w_hi, w_steps)
+    cfg = dataclasses.replace(base, **fields)
+    if cfg.kernel not in _registered_kernels():
+        raise ConfigError(f"KERNEL: {cfg.kernel!r} not registered "
+                          f"({_registered_kernels()})")
+    return cfg, select_params
+
+
+def weight_grid(lo: float, hi: float, steps: int) -> Tuple[float, ...]:
+    """Geometric class-weight grid (the wSVM/rocSVM weight axis)."""
+    if steps == 1:
+        return (float(lo),)
+    return tuple(float(v) for v in np.geomspace(lo, hi, steps))
+
+
+def _registered_kernels() -> Tuple[str, ...]:
+    from repro.core import kernel_fns
+    return tuple(sorted(kernel_fns._REGISTRY))

@@ -1,0 +1,217 @@
+"""liquidSVM-style command line: the staged cycle as separate processes.
+
+The package ships ``svm-train`` / ``svm-select`` / ``svm-test`` binaries
+that communicate through files, so selection can be re-run (new NPL
+constraint, ROC front, plain argmin) without repeating the expensive
+training sweep.  This is the same cycle over the staged session API:
+
+    python -m repro.cli train  --data xtr.npy --labels ytr.npy \\
+        --model-dir run1 --scenario binary -S FOLDS=3 -S VORONOI=voronoi
+    python -m repro.cli select --model-dir run1 --rule npl -S NPL_CONSTRAINT=0.01
+    python -m repro.cli select --model-dir run1 --rule roc      # no retrain
+    python -m repro.cli test   --data xte.npy --labels yte.npy --model-dir run1
+
+Artifacts under ``--model-dir`` (all ``repro.train.checkpoint`` step dirs):
+
+    train/   TrainResult  — cell models + retained CV surface
+    select/  SelectResult — final models, rule extras, stats
+    bank/    ModelBank    — compacted serving bank; a predict server
+             cold-starts from it alone:
+             ``SVMEngine(ModelBank.load(f"{model_dir}/bank"))``
+
+``--data`` accepts an ``.npy`` file (opened as a memmap — training and
+testing stream, the array is never resident) or a comma-separated list of
+``.npz`` shards; ``--labels`` is an ``.npy`` vector.  ``-S KEY=VALUE``
+sets any string config key (``--help-keys`` lists them).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+from typing import List, Optional
+
+import numpy as np
+
+# scenario aliases: front-end names -> trainer scenarios (+ default rule)
+_SCENARIOS = {
+    "binary": "binary", "ova": "ova", "ava": "ava", "mc": "ova",
+    "weighted": "weighted", "roc": "weighted", "npl": "npsvm",
+    "npsvm": "npsvm", "quantile": "quantile", "qt": "quantile",
+    "expectile": "expectile", "ex": "expectile", "ls": "ls",
+}
+_SCENARIO_RULES = {"roc": "roc", "npl": "npl", "npsvm": "npl"}
+
+
+def _load_data(spec: str):
+    """'.npy' path (memmap-streamed) or comma-separated '.npz' shards."""
+    from repro.pipeline.dataset import as_source
+    if "," in spec:
+        return as_source([p for p in spec.split(",") if p])
+    return as_source(spec)
+
+
+def _parse_sets(pairs: Optional[List[str]]) -> dict:
+    out = {}
+    for p in pairs or []:
+        if "=" not in p:
+            raise SystemExit(f"-S expects KEY=VALUE, got {p!r}")
+        k, v = p.split("=", 1)
+        out[k] = v
+    return out
+
+
+def _emit(payload: dict) -> None:
+    json.dump(payload, sys.stdout, indent=2, default=float)
+    sys.stdout.write("\n")
+
+
+# ------------------------------------------------------------------ train
+def cmd_train(args) -> int:
+    from repro.api.config import apply_keys
+    from repro.api.session import SVM
+    from repro.train.svm_trainer import SVMTrainerConfig
+
+    from repro.api.config import weight_grid
+
+    scenario = _SCENARIOS[args.scenario]
+    cfg, select_params = apply_keys(
+        SVMTrainerConfig(scenario=scenario), _parse_sets(args.set))
+    if cfg.weights == (1.0,):
+        # npl/roc are weight-sweep scenarios: without an explicit
+        # WEIGHTS/MIN_WEIGHT/... key, give them the front-ends' default
+        # grids rather than a degenerate single-weight axis
+        if args.scenario == "npl" or scenario == "npsvm":
+            cfg = dataclasses.replace(cfg, weights=weight_grid(0.25, 4.0, 5))
+        elif args.scenario == "roc":
+            cfg = dataclasses.replace(cfg,
+                                      weights=weight_grid(1.0 / 9.0, 9.0, 9))
+    x = _load_data(args.data)
+    y = np.load(args.labels)
+
+    sess = SVM(x, y, config=cfg,
+               select_rule=_SCENARIO_RULES.get(args.scenario),
+               select_kwargs=select_params)
+    ckpt = os.path.join(args.model_dir, "waves") if args.resumable else None
+    tr = sess.train(ckpt_dir=ckpt)
+    tr.save(os.path.join(args.model_dir, "train"))
+    # stage hand-off for select: the scenario's default rule + key params
+    with open(os.path.join(args.model_dir, "session.json"), "w") as f:
+        json.dump({"select_rule": sess.select_rule,
+                   "select_kwargs": sess.select_kwargs}, f)
+    _emit({"stage": "train", "n": tr.n, "d": tr.d,
+           "cells": tr.plan.n_cells, "slots": tr.packed.n_slots,
+           "grid": {"gammas": int(tr.gammas_cells.shape[1]),
+                    "lambdas": int(tr.lambdas.shape[0]),
+                    "tasks": int(tr.tasks.n_tasks),
+                    "sub": int(tr.gamma.shape[2])},
+           "model_dir": args.model_dir})
+    return 0
+
+
+# ----------------------------------------------------------------- select
+def cmd_select(args) -> int:
+    from repro.api.config import parse_keys
+    from repro.api.session import TrainResult
+
+    tr = TrainResult.load(os.path.join(args.model_dir, "train"))
+    rule, kwargs = None, {}
+    sess_path = os.path.join(args.model_dir, "session.json")
+    if os.path.exists(sess_path):
+        with open(sess_path) as f:
+            saved = json.load(f)
+        rule, kwargs = saved.get("select_rule"), saved.get("select_kwargs", {})
+    if args.rule:
+        rule = args.rule
+    keys = parse_keys(_parse_sets(args.set))
+    if "NPL_CONSTRAINT" in keys:
+        kwargs["alpha"] = keys.pop("NPL_CONSTRAINT")
+    if "NPL_CLASS" in keys:
+        kwargs["npl_class"] = keys.pop("NPL_CLASS")
+    if keys:
+        raise SystemExit(f"select only takes NPL_CONSTRAINT/NPL_CLASS keys, "
+                         f"got {sorted(keys)}")
+
+    sel = tr.select(rule, **kwargs)
+    # the staged cell rows already live in train/ next door — reference,
+    # don't re-write, the O(n·d) arrays on every re-selection
+    sel.save(os.path.join(args.model_dir, "select"),
+             train_ref=os.path.join("..", "train"))
+    bank = sel.to_bank()
+    bank.save(os.path.join(args.model_dir, "bank"))
+    payload = {"stage": "select", "rule": sel.rule, "stats": sel.stats,
+               "bank": bank.stats(), "model_dir": args.model_dir}
+    for k in ("np_fa", "np_det", "np_weight_idx", "roc_front"):
+        if k in sel.extras:
+            payload[k] = np.asarray(sel.extras[k]).tolist()
+    _emit(payload)
+    return 0
+
+
+# ------------------------------------------------------------------- test
+def cmd_test(args) -> int:
+    from repro.api.session import SelectResult
+
+    sel = SelectResult.load(os.path.join(args.model_dir, "select"))
+    x = _load_data(args.data)
+    y = np.load(args.labels)
+    res = sel.test(x, y, chunk_size=args.chunk_size)
+    _emit({"stage": "test", "rule": sel.rule, "error": res.error,
+           "n": res.n, **res.details})
+    return 0
+
+
+# ------------------------------------------------------------------- main
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.cli",
+        description="staged liquidSVM cycle: train -> select -> test")
+    sub = p.add_subparsers(dest="cmd", required=True)
+
+    tp = sub.add_parser("train", help="solve the fold x grid, keep the "
+                                      "CV surface")
+    tp.add_argument("--data", required=True,
+                    help=".npy path (memmap-streamed) or .npz shard list")
+    tp.add_argument("--labels", required=True, help=".npy label vector")
+    tp.add_argument("--model-dir", required=True)
+    tp.add_argument("--scenario", default="binary",
+                    choices=sorted(_SCENARIOS))
+    tp.add_argument("-S", "--set", action="append", metavar="KEY=VALUE",
+                    help="string config key (repeatable); --help-keys lists")
+    tp.add_argument("--resumable", action="store_true",
+                    help="per-wave checkpointing under <model-dir>/waves")
+    tp.set_defaults(fn=cmd_train)
+
+    sp = sub.add_parser("select", help="(re-)pick hyper-parameters over the "
+                                       "retained surface; writes the bank")
+    sp.add_argument("--model-dir", required=True)
+    sp.add_argument("--rule", default=None,
+                    help="argmin|npl|roc|quantile|expectile "
+                         "(default: the trained scenario's rule)")
+    sp.add_argument("-S", "--set", action="append", metavar="KEY=VALUE",
+                    help="NPL_CONSTRAINT / NPL_CLASS")
+    sp.set_defaults(fn=cmd_select)
+
+    ep = sub.add_parser("test", help="stream the scenario error")
+    ep.add_argument("--data", required=True)
+    ep.add_argument("--labels", required=True)
+    ep.add_argument("--model-dir", required=True)
+    ep.add_argument("--chunk-size", type=int, default=None)
+    ep.set_defaults(fn=cmd_test)
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if "--help-keys" in argv:
+        from repro.api.config import describe_keys
+        print(describe_keys())
+        return 0
+    args = _build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -76,6 +76,11 @@ class CVConfig:
     cache_d2: bool = True           # hoist the gamma-independent D² out of
                                     # the gamma scan (False: recompute the
                                     # full Gram per gamma — the baseline)
+    keep_surface: bool = False      # retain the full validation surface
+                                    # (loss + hinge FA/detection counts) per
+                                    # grid point — the staged select() phase
+                                    # re-runs selection rules over it without
+                                    # retraining (repro.api.session)
     taus: Tuple[float, ...] = (0.5,)       # quantile/expectile levels (sub axis)
     weights: Tuple[float, ...] = (1.0,)    # hinge +1-class weight grid (sub axis)
 
@@ -95,6 +100,9 @@ class CVSelected(NamedTuple):
     weight: Array       # (n_tasks, n_sub)
     val_loss: Array     # (n_tasks, n_sub) best mean validation loss
     val_grid: Array     # (n_gamma, n_tasks, n_lam, n_sub) full CV surface
+    fa_grid: Array      # (n_gamma, n_tasks, n_lam, n_sub) validation false-
+                        # alarm COUNTS (hinge + keep_surface only, else 0)
+    det_grid: Array     # (n_gamma, n_tasks, n_lam, n_sub) detection counts
 
 
 def make_fold_masks(
@@ -217,6 +225,7 @@ def cv_cell(
     use_d2 = cfg.cache_d2 and spec.factors_through_d2
     want_bf16 = cfg.gram_dtype == "bf16" and cfg.solver in ("hinge", "quantile")
     gram_dtype = "bf16" if want_bf16 else "f32"
+    track_rates = cfg.keep_surface and cfg.solver == "hinge"
     # ONE D² for the whole gamma scan: the O(n²d) MXU cross term is hoisted
     # out of the lax.scan; each scan step replays only the O(n²) epilogue.
     cg = kernel_fns.CachedGram.build(x, name=cfg.kernel) if use_d2 else None
@@ -252,10 +261,22 @@ def cv_cell(
                                    n_eff_cols, cfg, c0_f, l_est)
             f_val = k_full @ coefs
             vl = _val_losses(f_val, y_cols, va_cols, cfg, sub_c)
-            return vl, coefs
+            if track_rates:
+                # validation-fold confusion counts per column: every valid
+                # sample sits in exactly ONE validation fold, so summing the
+                # per-fold counts gives exact whole-set validation rates —
+                # the NP/ROC selection rules read these, never the train set
+                pred_pos = (f_val > 0) & (va_cols > 0)
+                fa = jnp.sum((pred_pos & (y_cols < 0)).astype(jnp.float32), 0)
+                det = jnp.sum((pred_pos & (y_cols > 0)).astype(jnp.float32), 0)
+            else:
+                fa = det = jnp.zeros_like(vl)
+            return vl, fa, det, coefs
 
-        vl, coefs = jax.vmap(per_fold)(train_folds, val_folds, c0_all)
+        vl, fa, det, coefs = jax.vmap(per_fold)(train_folds, val_folds, c0_all)
         vl_mean = jnp.mean(vl, axis=0)                                  # (P,)
+        fa_tls = jnp.sum(fa, axis=0).reshape(n_tasks, n_lam, n_sub)
+        det_tls = jnp.sum(det, axis=0).reshape(n_tasks, n_lam, n_sub)
 
         # streaming selection: best lambda for this gamma, per (task, sub)
         vl_tls = vl_mean.reshape(n_tasks, n_lam, n_sub)
@@ -271,7 +292,7 @@ def cv_cell(
         best_g = jnp.where(improved, gamma, best_g)
         best_l = jnp.where(improved, lam_c[flat_cols.reshape(-1)].reshape(n_tasks, n_sub), best_l)
         carry = (best_val, best_cfs, best_g, best_l, coefs)             # warm start
-        return carry, vl_tls
+        return carry, (vl_tls, fa_tls, det_tls)
 
     init = (
         jnp.full((n_tasks, n_sub), jnp.inf, jnp.float32),
@@ -280,7 +301,8 @@ def cv_cell(
         jnp.zeros((n_tasks, n_sub), jnp.float32),
         jnp.zeros((cfg.n_folds, n, p), jnp.float32),
     )
-    (best_val, best_cfs, best_g, best_l, _), vl_all = jax.lax.scan(per_gamma, init, gammas)
+    (best_val, best_cfs, best_g, best_l, _), (vl_all, fa_all, det_all) = \
+        jax.lax.scan(per_gamma, init, gammas)
 
     sub_grid = sub_c[:n_sub]
     if cfg.solver in ("quantile", "expectile"):
@@ -291,4 +313,61 @@ def cv_cell(
         weight = jnp.broadcast_to(sub_grid[None, :], (n_tasks, n_sub))
 
     return CVSelected(coefs=best_cfs, gamma=best_g, lam=best_l, tau=tau,
-                      weight=weight, val_loss=best_val, val_grid=vl_all)
+                      weight=weight, val_loss=best_val, val_grid=vl_all,
+                      fa_grid=fa_all, det_grid=det_all)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def solve_columns_at(
+    x: Array,              # (n, d) padded cell
+    y_tasks: Array,        # (n_tasks, n)
+    task_mask: Array,      # (n_tasks, n)
+    mask: Array,           # (n,)
+    gamma: Array,          # scalar — ONE gamma for every requested column
+    lam_cols: Array,       # (P',) per-column lambda VALUES
+    sub_cols: Array,       # (P',) per-column tau / class weight
+    task_cols: Array,      # (P',) per-column task index
+    fold_key: Array,
+    cfg: CVConfig,
+) -> Array:
+    """Targeted re-solve: the given columns at one gamma, all folds, fold-
+    averaged — the select() phase's "one targeted wave".
+
+    Changing the selection rule over a retained surface only moves a handful
+    of (task, sub) winners to new (gamma, lambda) coordinates; this solves
+    exactly those columns (one Gram, one batched box-QP per distinct gamma)
+    instead of re-running the full fold x grid sweep.  ``fold_key`` must be
+    the cell's training key so the CV folds — and hence the model the
+    surface scored — are reproduced exactly.  Solves start from c0 = 0 (the
+    train-phase warm start across the gamma scan is not replayed), which
+    converges to the same box-QP optimum within ``cfg.tol``.
+    """
+    y_strat = y_tasks[0] if cfg.solver == "hinge" else None
+    val_folds = make_fold_masks(fold_key, mask, cfg.n_folds, cfg.fold_scheme,
+                                y_strat)
+    train_folds = (~val_folds) & (mask > 0)[None, :]          # (k, n)
+    y_cols = y_tasks[task_cols].T                              # (n, P')
+    colmask = task_mask[task_cols].T * mask[:, None]           # (n, P')
+
+    spec = kernel_fns.get_spec(cfg.kernel)
+    k_full = spec.fn(x, x, gamma)
+    if cfg.gram_dtype == "bf16" and cfg.solver in ("hinge", "quantile"):
+        k_full = k_full.astype(jnp.bfloat16)
+    needs_l = cfg.solver in ("hinge", "quantile")
+    l_shared = (qp.power_iteration_l(k_full)
+                if (needs_l and cfg.shared_lipschitz) else None)
+    c0 = jnp.zeros((x.shape[0], lam_cols.shape[0]), jnp.float32)
+
+    def per_fold(tr_mask):
+        tr_cols = tr_mask.astype(jnp.float32)[:, None] * colmask
+        n_eff_cols = jnp.sum(tr_cols, axis=0)
+        if needs_l and not cfg.shared_lipschitz:
+            mt = tr_mask.astype(jnp.float32)
+            l_est = qp.power_iteration_l(k_full * mt[:, None] * mt[None, :])
+        else:
+            l_est = l_shared
+        return _solve_columns(k_full, y_cols, tr_cols, lam_cols, sub_cols,
+                              n_eff_cols, cfg, c0, l_est)
+
+    coefs = jax.vmap(per_fold)(train_folds)                    # (folds, n, P')
+    return jnp.mean(coefs, axis=0)                             # (n, P')

@@ -1,14 +1,48 @@
-"""Selection-phase helpers (liquidSVM §2).
+"""Selection phase (liquidSVM §2): pluggable rules over the retained surface.
 
-The heavy lifting (streaming argmin over the grid) is fused into
-``repro.core.cv.cv_cell``; here live the model-combination policies and
-NP-mode (Neyman-Pearson) selection, which picks per-task weights under a
-false-alarm constraint instead of plain argmin.
+liquidSVM separates ``svm-train`` (solve the full fold x grid) from
+``svm-select`` (pick hyper-parameters) so that selection can be re-run with
+a different criterion — plain CV-loss argmin, a Neyman-Pearson false-alarm
+constraint, an ROC weight front — WITHOUT retraining.  The staged API
+(``repro.api.session``) reproduces that split: training retains, per cell,
+
+  loss (G, T, L, S)  mean validation loss at every grid point
+  fa   (G, T, L, S)  validation false-alarm COUNTS   (hinge only)
+  det  (G, T, L, S)  validation detection COUNTS     (hinge only)
+
+(G = per-cell gamma grid, T = tasks, L = lambdas, S = sub axis: class
+weights or quantile/expectile taus).  A :class:`SelectionRule` maps that
+surface to per-(task, sub) winning grid coordinates; the session layer then
+re-solves ONLY the winners that moved off the train-time argmin (whose
+models are already cached) — one targeted wave, not a refit.
+
+Counts, not rates, are retained so multi-cell aggregation is exact: every
+valid sample lands in exactly one validation fold of its one owning cell,
+so summing counts over cells reproduces whole-training-set validation
+rates (the fix for the old train-set-rate NPL selection, which was
+optimistic versus paper §2).
+
+Registered rules (``get_rule`` / ``available_rules``):
+
+  argmin                — CV-loss argmin per (task, sub); matches the fused
+                          fit bitwise (zero columns re-solved)
+  quantile / expectile  — aliases of argmin (selection is already per tau)
+  npl                   — per (task, weight): best detection among grid
+                          points whose validation false-alarm rate is
+                          <= alpha (fallback: smallest false alarm), plus
+                          the NP weight pick over the sub axis
+  roc                   — argmin winners per weight + the aggregated
+                          (false alarm, detection) front over the weight
+                          grid, sorted along the false-alarm axis
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Callable, Dict, Tuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -34,3 +68,191 @@ def np_select_weight(false_alarm: Array, detection: Array, alpha: float) -> Arra
     best_ok = jnp.argmax(det_masked)
     fallback = jnp.argmin(false_alarm)
     return jnp.where(jnp.any(ok), best_ok, fallback)
+
+
+# --------------------------------------------------------------- surface
+@dataclasses.dataclass(frozen=True)
+class Surface:
+    """The per-cell validation surface a trained session retains.
+
+    Leading axis C is the packed SLOT axis (padding slots are all-zero and
+    select harmlessly); ``neg``/``pos`` are per-(slot, task) class totals
+    over valid samples, the denominators for the count grids.
+    """
+    loss: np.ndarray      # (C, G, T, L, S) mean validation loss
+    fa: np.ndarray        # (C, G, T, L, S) validation false-alarm counts
+    det: np.ndarray       # (C, G, T, L, S) validation detection counts
+    neg: np.ndarray       # (C, T) negative-class valid-sample totals
+    pos: np.ndarray       # (C, T) positive-class valid-sample totals
+    gammas: np.ndarray    # (C, G) per-cell gamma grids (values)
+    lambdas: np.ndarray   # (L,) shared lambda grid (values)
+
+    @property
+    def grid_columns(self) -> int:
+        """Total solvable columns in the full sweep: C*G*T*L*S."""
+        return int(np.prod(self.loss.shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectContext:
+    """Scenario knobs a rule may consult (the select-stage config keys)."""
+    scenario: str = "binary"
+    weights: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.ones(1, np.float32))
+    taus: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.full(1, 0.5, np.float32))
+    alpha: float = 0.05       # NPL false-alarm budget
+    npl_class: int = -1       # class the false-alarm constraint binds on
+
+
+@dataclasses.dataclass
+class RuleResult:
+    """Winning grid coordinates per (slot, task, sub) + rule extras."""
+    g_idx: np.ndarray     # (C, T, S) gamma index into the per-cell grid
+    l_idx: np.ndarray     # (C, T, S) lambda index
+    extras: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+
+SelectionRule = Callable[[Surface, SelectContext], RuleResult]
+
+_RULES: Dict[str, SelectionRule] = {}
+
+
+def register_rule(name: str):
+    """Decorator: register a selection rule under a string key."""
+    def deco(fn: SelectionRule) -> SelectionRule:
+        _RULES[name] = fn
+        return fn
+    return deco
+
+
+def get_rule(name: str) -> SelectionRule:
+    if name not in _RULES:
+        raise KeyError(f"unknown selection rule {name!r}; "
+                       f"known: {available_rules()}")
+    return _RULES[name]
+
+
+def available_rules() -> Tuple[str, ...]:
+    return tuple(sorted(_RULES))
+
+
+# ---------------------------------------------------------------- helpers
+def _flat_gl(grid: np.ndarray) -> np.ndarray:
+    """(C, G, T, L, S) -> (C, T, S, G*L), gamma-major like the train scan."""
+    c, g, t, l, s = grid.shape
+    return grid.transpose(0, 2, 4, 1, 3).reshape(c, t, s, g * l)
+
+
+def _unflat_gl(idx: np.ndarray, n_lam: int):
+    return idx // n_lam, idx % n_lam
+
+
+def argmin_winners(loss: np.ndarray):
+    """First-occurrence flat argmin over (gamma, lambda), per (slot, t, s).
+
+    Matches the train-time streaming selection exactly: the scan keeps the
+    FIRST strict improvement with gamma as the outer loop and lambda inner,
+    which is precisely C-order first-occurrence argmin over (G, L).
+    """
+    n_lam = loss.shape[3]
+    idx = _flat_gl(loss).argmin(axis=-1)            # (C, T, S)
+    return _unflat_gl(idx, n_lam)
+
+
+def _constrained_rates(surface: Surface, ctx: SelectContext):
+    """Count grids + totals oriented so 'fa' is the constrained class's
+    error and 'det' the other class's hit rate (npl_class=-1: the stored
+    orientation; npl_class=+1: alarms are +1 samples predicted -1)."""
+    neg = surface.neg[:, None, :, None, None]       # (C, 1, T, 1, 1)
+    pos = surface.pos[:, None, :, None, None]
+    if ctx.npl_class == -1:
+        return surface.fa, surface.det, neg, pos
+    if ctx.npl_class == 1:
+        return pos - surface.det, neg - surface.fa, pos, neg
+    raise ValueError(f"npl_class must be +-1, got {ctx.npl_class}")
+
+
+def _global_rates_at(cnt: np.ndarray, tot: np.ndarray,
+                     g_idx: np.ndarray, l_idx: np.ndarray):
+    """Aggregate count grids at the winners into whole-set rates (T, S)."""
+    c_ax = np.arange(cnt.shape[0])[:, None, None]
+    t_ax = np.arange(cnt.shape[2])[None, :, None]
+    s_ax = np.arange(cnt.shape[4])[None, None, :]
+    picked = cnt[c_ax, g_idx, t_ax, l_idx, s_ax]    # (C, T, S)
+    denom = np.maximum(tot[:, 0, :, 0, 0].sum(0), 1.0)       # (T,)
+    return picked.sum(0) / denom[:, None]           # (T, S)
+
+
+# ------------------------------------------------------------------ rules
+@register_rule("argmin")
+def rule_argmin(surface: Surface, ctx: SelectContext) -> RuleResult:
+    g_idx, l_idx = argmin_winners(surface.loss)
+    return RuleResult(g_idx=g_idx, l_idx=l_idx)
+
+
+# per-tau selection is already the argmin semantics; registered under the
+# scenario names so front-ends can say select("quantile") explicitly
+_RULES["quantile"] = rule_argmin
+_RULES["expectile"] = rule_argmin
+
+
+@register_rule("npl")
+def rule_npl(surface: Surface, ctx: SelectContext) -> RuleResult:
+    """Neyman-Pearson: constrained (gamma, lambda) pick per (task, weight).
+
+    Per cell and (task, weight) column: among grid points whose validation
+    false-alarm rate (on the constrained class) meets ``ctx.alpha``, take
+    the best detection; if no point qualifies, fall back to the smallest
+    false alarm.  Extras carry the EXACT whole-set validation rates at the
+    winners (count aggregation over cells) and the NP weight pick per task.
+    """
+    fa_cnt, det_cnt, fa_tot, det_tot = _constrained_rates(surface, ctx)
+    fa_rate = fa_cnt / np.maximum(fa_tot, 1.0)
+    det_rate = det_cnt / np.maximum(det_tot, 1.0)
+
+    n_lam = surface.loss.shape[3]
+    fa_f = _flat_gl(fa_rate)
+    det_f = _flat_gl(det_rate)
+    ok = fa_f <= ctx.alpha
+    score = np.where(ok, det_f, -np.inf)
+    best_ok = score.argmax(axis=-1)                  # first max in scan order
+    fallback = fa_f.argmin(axis=-1)
+    idx = np.where(ok.any(axis=-1), best_ok, fallback)
+    g_idx, l_idx = _unflat_gl(idx, n_lam)
+
+    np_fa = _global_rates_at(fa_cnt, fa_tot, g_idx, l_idx)      # (T, S)
+    np_det = _global_rates_at(det_cnt, det_tot, g_idx, l_idx)
+    w_idx = np.asarray([int(np_select_weight(jnp.asarray(np_fa[t]),
+                                             jnp.asarray(np_det[t]),
+                                             ctx.alpha))
+                        for t in range(np_fa.shape[0])], np.int32)
+    return RuleResult(g_idx=g_idx, l_idx=l_idx,
+                      extras={"np_fa": np_fa, "np_det": np_det,
+                              "np_weight_idx": w_idx,
+                              "alpha": np.float32(ctx.alpha),
+                              "npl_class": np.int32(ctx.npl_class)})
+
+
+@register_rule("roc")
+def rule_roc(surface: Surface, ctx: SelectContext) -> RuleResult:
+    """ROC mode: one working point per class weight, whole front emitted.
+
+    Winners are the per-(task, weight) CV-loss argmins — identical to the
+    models the train phase cached, so this rule re-solves NOTHING — and the
+    extras carry the full (false alarm, detection) front over the weight
+    grid, aggregated from the retained validation counts and sorted along
+    the false-alarm axis (``roc_front[t, i] = (fa, det)`` of the i-th
+    working point).
+    """
+    g_idx, l_idx = argmin_winners(surface.loss)
+    fa_cnt, det_cnt, fa_tot, det_tot = _constrained_rates(surface, ctx)
+    roc_fa = _global_rates_at(fa_cnt, fa_tot, g_idx, l_idx)     # (T, S)
+    roc_det = _global_rates_at(det_cnt, det_tot, g_idx, l_idx)
+    order = np.argsort(roc_fa, axis=1, kind="stable")           # (T, S)
+    front = np.stack([np.take_along_axis(roc_fa, order, 1),
+                      np.take_along_axis(roc_det, order, 1)], axis=-1)
+    return RuleResult(g_idx=g_idx, l_idx=l_idx,
+                      extras={"roc_fa": roc_fa, "roc_det": roc_det,
+                              "roc_order": order.astype(np.int32),
+                              "roc_front": front})

@@ -55,7 +55,10 @@ def _cell_train_local(x_c, y_c, tmask_c, mask_c, gammas_c, key_c,
                          lam_c, sub_c, task_c, key_c, cfg,
                          n_lam=n_lam, n_sub=n_sub)
     combined = select.combine_fold_models(sel.coefs)      # (n, T, S)
-    return combined, sel.gamma, sel.lam, sel.tau, sel.val_loss
+    out = (combined, sel.gamma, sel.lam, sel.tau, sel.val_loss)
+    if cfg.keep_surface:
+        out = out + (sel.val_grid, sel.fa_grid, sel.det_grid)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "n_lam", "n_sub", "mesh", "axis_names"))
@@ -83,7 +86,7 @@ def train_cells(
     shard = _shard_map(
         vbody, mesh=mesh,
         in_specs=(spec, spec, spec, spec, spec, spec),
-        out_specs=(spec, spec, spec, spec, spec),
+        out_specs=(spec,) * len(wave_keys(cfg)),
         **_CHECK_KWARGS,
     )
     return shard(x_cells, y_cells, tmask_cells, mask_cells, gammas_cells, keys)
@@ -91,6 +94,19 @@ def train_cells(
 
 # ------------------------------------------------------------------ waves
 _WAVE_KEYS = ("coefs", "gamma", "lam", "tau", "val")
+_SURFACE_KEYS = ("surf_loss", "surf_fa", "surf_det")
+
+
+def wave_keys(cfg: cv_mod.CVConfig) -> Tuple[str, ...]:
+    """Names (in output order) of the arrays one wave produces.
+
+    With ``cfg.keep_surface`` the per-cell validation surface — loss plus
+    hinge FA/detection counts over the whole (gamma, task, lambda, sub)
+    grid — rides along; it is O(slots · grid), tiny next to the coefs, and
+    is what makes the staged ``select()`` phase re-runnable without
+    retraining.
+    """
+    return _WAVE_KEYS + (_SURFACE_KEYS if cfg.keep_surface else ())
 
 
 def train_cells_waves(
@@ -125,6 +141,7 @@ def train_cells_waves(
     """
     from repro.train import checkpoint as ckpt_mod
 
+    keys_out = wave_keys(cfg)
     if wave_size is None or wave_size >= n_slots:
         wave_size = n_slots
     assert wave_size > 0
@@ -150,9 +167,9 @@ def train_cells_waves(
         if w <= done:                      # restored, not re-solved
             man = ckpt_mod.peek_manifest(ckpt_dir, w)
             target = {k: np.zeros(s, np.dtype(dt)) for k, s, dt in zip(
-                sorted(_WAVE_KEYS), man["shapes"], man["dtypes"])}
+                sorted(keys_out), man["shapes"], man["dtypes"])}
             tree, _, _ = ckpt_mod.restore_checkpoint(ckpt_dir, target, step=w)
-            res = tuple(np.asarray(tree[k]) for k in _WAVE_KEYS)
+            res = tuple(np.asarray(tree[k]) for k in keys_out)
         else:
             arrays = stage(lo, lo + wave_size)
             res = train_cells(*[jnp.asarray(a) for a in arrays],
@@ -161,13 +178,13 @@ def train_cells_waves(
             res = tuple(np.asarray(r) for r in res)
             if ckpt_dir is not None:
                 ckpt_mod.save_checkpoint(
-                    ckpt_dir, w, dict(zip(_WAVE_KEYS, res)),
+                    ckpt_dir, w, dict(zip(keys_out, res)),
                     extra={"wave": w, "wave_size": wave_size,
                            "n_slots": n_slots, "fingerprint": fingerprint},
                     keep_last=0)
         outs.append(res)
     return tuple(np.concatenate([o[i] for o in outs])[:n_slots]
-                 for i in range(len(_WAVE_KEYS)))
+                 for i in range(len(keys_out)))
 
 
 def _cell_predict_local(xt_c, sv_c, coef_c, gamma_c, kernel: str):

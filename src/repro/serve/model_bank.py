@@ -86,6 +86,9 @@ class ModelBank:
     n_sub: int = 1
     scenario: str = "binary"
     raw_sv_total: int = 0     # pre-compaction SV rows (for stats)
+    default_sub: int = 0      # sub column label combination reads by default
+                              # (the select stage's NP weight pick rides
+                              # along into serving)
 
     # ------------------------------------------------------------ properties
     @property
@@ -135,6 +138,7 @@ class ModelBank:
         classes: Optional[np.ndarray] = None,
         pairs: Optional[np.ndarray] = None,
         scenario: str = "binary",
+        default_sub: int = 0,
         pad_multiple: int = 8,
     ) -> "ModelBank":
         """Compact a trained cell batch into a bank.
@@ -197,6 +201,7 @@ class ModelBank:
                    else np.asarray(pairs, np.int32)),
             kernel=kernel, n_tasks=t_count, n_sub=s_count, scenario=scenario,
             raw_sv_total=int((mask_cells > 0).sum()),
+            default_sub=int(default_sub),
         )
 
     @classmethod
@@ -231,7 +236,8 @@ class ModelBank:
             lam=z, tau=z, val_loss=z, kernel=self.kernel)
 
     # --------------------------------------------------------- serialization
-    _META_KEYS = ("kernel", "n_tasks", "n_sub", "scenario", "raw_sv_total")
+    _META_KEYS = ("kernel", "n_tasks", "n_sub", "scenario", "raw_sv_total",
+                  "default_sub")
 
     def save(self, ckpt_dir: str, step: int = 0) -> str:
         """Atomic checkpoint write; a server cold-starts from this alone."""
@@ -244,16 +250,12 @@ class ModelBank:
 
     @classmethod
     def load(cls, ckpt_dir: str, step: Optional[int] = None) -> "ModelBank":
-        manifest = ckpt_mod.peek_manifest(ckpt_dir, step)
-        extra = manifest["extra"]
+        extra = ckpt_mod.peek_manifest(ckpt_dir, step)["extra"]
         if extra.get("format") != "svm_model_bank_v1":
             raise ValueError(f"{ckpt_dir} is not a model-bank checkpoint "
                              f"(format={extra.get('format')!r})")
-        target = {}
-        for path, dt in zip(manifest["paths"], manifest["dtypes"]):
-            key = path.strip("[]'\"")
-            target[key] = jnp.zeros((), dtype=np.dtype(dt))
-        tree, _, extra = ckpt_mod.restore_checkpoint(ckpt_dir, target, step=step)
-        arrays = {k: np.asarray(v) for k, v in tree.items()}
-        meta = {k: extra[k] for k in cls._META_KEYS}
+        arrays, extra = ckpt_mod.restore_self_describing(ckpt_dir, step)
+        # field defaults cover banks written before a meta key existed
+        defaults = {f.name: f.default for f in dataclasses.fields(cls)}
+        meta = {k: extra.get(k, defaults[k]) for k in cls._META_KEYS}
         return cls(**arrays, **meta)

@@ -257,7 +257,12 @@ class SVMEngine:
             results.update(self.step())
         return np.stack([results[int(i)] for i in ids])
 
-    def predict_label(self, x: np.ndarray, sub: int = 0) -> np.ndarray:
+    def predict_label(self, x: np.ndarray,
+                      sub: Optional[int] = None) -> np.ndarray:
+        """Scenario labels; ``sub=None`` reads the bank's default column
+        (the select stage's NP weight pick for npsvm banks)."""
+        if sub is None:
+            sub = self.bank.default_sub
         return combine_decisions(self.predict(x), self.bank.scenario,
                                  classes=self.bank.classes,
                                  pairs=self.bank.pairs, sub=sub)

@@ -4,13 +4,14 @@ A task is a view of the working set with its own +-1 labels (or targets)
 and sample mask; tasks and cells compose freely: CV runs per (cell, task).
 
 Scenarios (mirroring the package's pre-defined learning scenarios):
-  binary     — one task, labels +-1                          (lsSVM/svm)
+  binary     — one task, labels +-1                          (svm, hinge)
   ova        — one task per class: class c vs rest           (mcSVM OvA)
   ava        — one task per unordered pair (a, b); samples of other
                classes masked out                            (mcSVM AvA)
-  weighted   — binary with a grid of class weights w         (wSVM / npSVM)
+  weighted   — binary with a grid of class weights w         (wSVM / rocSVM)
   quantile   — regression; tau grid, selection PER TAU       (qtSVM)
   expectile  — regression; tau grid, selection PER TAU       (exSVM)
+  ls         — least-squares regression, one task            (lsSVM)
 
 Static shapes: labels (n_tasks, n) f32 with 0 = excluded-from-task.
 """
@@ -82,6 +83,12 @@ def make_tasks(
                        -np.ones((1, 2), np.int32), np.asarray(taus, np.float32),
                        np.array([1.0], np.float32))
 
+    if scenario == "ls":
+        labels = np.asarray(y, np.float32)[None, :]
+        return TaskSet(scenario, labels, ones.copy(), np.array([]),
+                       -np.ones((1, 2), np.int32), np.array([0.5], np.float32),
+                       np.array([1.0], np.float32))
+
     raise ValueError(f"unknown scenario {scenario!r}")
 
 
@@ -126,4 +133,6 @@ def combine_decisions(dec: np.ndarray, scenario: str,
                            np.asarray(classes))
     if scenario in ("quantile", "expectile"):
         return dec[:, 0, :]
+    if scenario == "ls":
+        return dec[:, 0, 0]
     raise ValueError(f"unknown scenario {scenario!r}")

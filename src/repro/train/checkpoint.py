@@ -123,6 +123,24 @@ def peek_manifest(ckpt_dir: str, step: Optional[int] = None) -> Dict[str, Any]:
     return manifest
 
 
+def restore_self_describing(ckpt_dir: str, step: Optional[int] = None
+                            ) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    """Restore a FLAT-dict checkpoint with the target built from its own
+    manifest — for consumers that have nothing but the directory (model
+    banks, stage artifacts).  Returns ``({key: np.ndarray}, extra)``.
+
+    Only valid for checkpoints whose tree was a flat ``{str: array}`` dict
+    (every stage artifact in this repo); the manifest path strings are the
+    dict keys.
+    """
+    manifest = peek_manifest(ckpt_dir, step)
+    target = {}
+    for path, dt in zip(manifest["paths"], manifest["dtypes"]):
+        target[path.strip("[]'\"")] = np.zeros((), dtype=np.dtype(dt))
+    tree, _, extra = restore_checkpoint(ckpt_dir, target, step=step)
+    return {k: np.asarray(v) for k, v in tree.items()}, extra
+
+
 def restore_checkpoint(ckpt_dir: str, target: PyTree,
                        step: Optional[int] = None,
                        shardings: Optional[PyTree] = None

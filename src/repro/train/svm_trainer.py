@@ -1,43 +1,42 @@
-"""The full liquidSVM application cycle: train -> select -> test, composing
-tasks x cells x CV-grid, with optional mesh sharding of the cell axis.
+"""The full liquidSVM application cycle: train -> select -> test.
 
-This is the top-level estimator the examples and benchmarks use — the JAX
-equivalent of the package's `mcSVM(Y ~ ., d$train, ...)` entry points.
+The staged machinery lives in :mod:`repro.api.session` (``SVM`` sessions
+producing persistable ``TrainResult`` / ``SelectResult`` / ``TestResult``
+stage artifacts, mirroring the package's ``svm-train`` / ``svm-select`` /
+``svm-test`` binaries); scenario front-ends (``mcSVM``, ``qtSVM``,
+``nplSVM``, ``rocSVM``, ...) and the string-key config layer live in
+:mod:`repro.api`; ``python -m repro.cli`` drives the stages as separate
+processes.  This module keeps the estimator-style entry point:
+
+:class:`LiquidSVM` is now a thin shim — ``fit()`` is exactly
+``SVM.train()`` followed by ``select()`` (the CV-loss argmin rule, or the
+validation-surface Neyman-Pearson rule for ``scenario="npsvm"``), and the
+test-phase methods delegate to the resulting ``SelectResult``.  Everything
+``fit`` used to expose (``coefs``, ``gamma``, ``plan``, ``np_fa``, ...)
+is still populated, and under the argmin rule the decisions are
+bitwise-identical to the old fused implementation (selection reuses the
+exact streaming-argmin models the train stage cached).
 
 Ingestion is streaming end-to-end: ``fit`` takes an in-memory array OR any
 ``repro.pipeline`` chunk source (memmap ``.npy`` path, npz shard list,
-custom ``ChunkSource``).  Scaling statistics, cell construction and
-per-wave training staging all run chunk-by-chunk, so the transient footprint
-of a fit is O(wave · cell) — only the resulting support-vector tables (the
-model itself) scale with n.  ``n_slots_per_wave`` bounds how many packed
-cell slots are staged and solved per launch; ``ckpt_dir`` makes the wave
-loop resumable (see ``distributed.cell_trainer.train_cells_waves``).
+custom ``ChunkSource``); the transient footprint of a fit is
+O(wave · cell).  ``n_slots_per_wave`` bounds how many packed cell slots
+are staged and solved per launch; ``ckpt_dir`` makes the wave loop
+resumable (see ``distributed.cell_trainer.train_cells_waves``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
-
-from repro.cells.builder import CellPlan
-from repro.core import cv as cv_mod
-from repro.core import grids, kernel_fns
-from repro.data.scaling import Scaler
-from repro.distributed.cell_trainer import predict_cells, train_cells_waves
-from repro.distributed.planner import (PackedCells, group_rows, pack_cells)
-from repro.pipeline.cell_stream import build_cells_stream
-from repro.pipeline.dataset import ArraySource, ChunkSource, ScaledSource, as_source
-from repro.tasks.builder import TaskSet, combine_decisions, make_tasks
 
 
 @dataclasses.dataclass(frozen=True)
 class SVMTrainerConfig:
     scenario: str = "binary"        # binary | ova | ava | weighted | npsvm |
-                                    # quantile | expectile
+                                    # quantile | expectile | ls
     solver: str = "auto"            # auto: hinge for classification, else ls/quantile/expectile
     kernel: str = "gauss_rbf"
     cell_method: str = "none"       # none | random | voronoi | overlap | recursive | coarse_fine
@@ -52,6 +51,7 @@ class SVMTrainerConfig:
     tol: float = 1e-3
     max_iters: int = 1000
     seed: int = 0
+    scale: bool = True              # train-statistics feature scaling
     n_slots_per_wave: Optional[int] = None   # None: all slots in one wave
     chunk_size: int = 65536                  # streaming chunk rows
 
@@ -60,10 +60,21 @@ class SVMTrainerConfig:
             return self.solver
         return {"binary": "hinge", "ova": "hinge", "ava": "hinge",
                 "weighted": "hinge", "npsvm": "hinge", "quantile": "quantile",
-                "expectile": "expectile"}[self.scenario]
+                "expectile": "expectile", "ls": "ls"}[self.scenario]
 
 
 class LiquidSVM:
+    """Fused-cycle estimator (back-compat shim over the staged API).
+
+    .. deprecated::
+        ``LiquidSVM.fit`` now runs ``repro.api.SVM.train()`` +
+        ``select()`` internally; prefer the staged session API
+        (:mod:`repro.api`) — it keeps the train artifact so selection can
+        be re-run under a different rule (NPL constraints, ROC fronts)
+        without retraining, and each stage can persist/reload across
+        processes (``python -m repro.cli``).
+    """
+
     def __init__(self, config: SVMTrainerConfig = SVMTrainerConfig(),
                  mesh: Optional[Mesh] = None,
                  mesh_axes: Optional[Tuple[str, ...]] = None):
@@ -77,235 +88,53 @@ class LiquidSVM:
             ckpt_dir: Optional[str] = None) -> "LiquidSVM":
         """Fit from an (n, d) array or any chunk source (see module doc).
 
+        Equivalent to ``SVM.train()`` + ``select("argmin")`` (scenario
+        ``npsvm``: the ``"npl"`` rule, whose false-alarm/detection rates
+        come from the retained VALIDATION surface, not the train set).
         ``ckpt_dir``: per-wave checkpointing/resume of the cell solves.
         """
+        from repro.api.session import SVM
+
         cfg = self.config
+        sess = SVM(x, y, config=cfg, mesh=self.mesh,
+                   mesh_axes=self.mesh_axes)
+        tr = sess.train(ckpt_dir=ckpt_dir)
+        rule = "npl" if cfg.scenario == "npsvm" else "argmin"
+        sel = sess.select(rule)
+        self.session, self.train_result, self.select_result = sess, tr, sel
 
-        # one scaling path for every container: the same data fits the same
-        # model whether it arrives as an ndarray, a memmap path or shards
-        raw_src: ChunkSource = as_source(x)
-        self.scaler = Scaler.fit_stream(raw_src, cfg.chunk_size)
-        if isinstance(raw_src, ArraySource):     # in-memory: scale once
-            xs_src: ChunkSource = ArraySource(
-                self.scaler.transform(raw_src.materialize()))
-        else:                                    # out-of-core: scale lazily
-            xs_src = ScaledSource(raw_src, self.scaler.mean, self.scaler.std)
-        n, d = xs_src.shape
-
-        scenario = "weighted" if cfg.scenario in ("weighted", "npsvm") \
-            else cfg.scenario
-        self.tasks: TaskSet = make_tasks(y, scenario, taus=cfg.taus,
-                                         weights=cfg.weights)
-
-        n_dev = 1
-        if self.mesh is not None and self.mesh_axes is not None:
-            n_dev = int(np.prod([self.mesh.shape[a] for a in self.mesh_axes]))
-        self.plan: CellPlan = build_cells_stream(
-            xs_src, cell_size=cfg.cell_size, method=cfg.cell_method,
-            seed=cfg.seed, chunk_size=cfg.chunk_size)
-        self.packed: PackedCells = pack_cells(self.plan, n_dev)
-
-        k = self.plan.k_max
-        n_slots = self.packed.n_slots
-        t_count = self.tasks.n_tasks
-        cv_cfg = cv_mod.CVConfig(
-            solver=cfg.resolve_solver(), kernel=cfg.kernel, n_folds=cfg.n_folds,
-            fold_scheme=cfg.fold_scheme, tol=cfg.tol, max_iters=cfg.max_iters,
-            taus=cfg.taus, weights=cfg.weights)
-
-        base_grid = grids.liquid_grid(n=k, dim=d, median_dist=1.0,
-                                      grid_choice=cfg.grid_choice,
-                                      cell_size=cfg.cell_size)
-        if cfg.adaptivity_control > 0:
-            base_grid = grids.adaptive_subgrid(base_grid, cfg.adaptivity_control)
-        n_gamma = len(base_grid.gammas)
-        keys_all = np.asarray(
-            jax.random.split(jax.random.PRNGKey(cfg.seed), n_slots))
-
-        # the model itself: per-slot SV tables (to_bank() compacts further).
-        # stage() fills these as a side effect so the source is read ONCE;
-        # slots of checkpoint-restored waves are back-filled afterwards.
-        x_cells = np.zeros((n_slots, k, d), np.float32)
-        mask_cells = np.zeros((n_slots, k), np.float32)
-        staged = np.zeros(n_slots, bool)
-
-        def stage(lo: int, hi: int):
-            """Host arrays for slots [lo, hi) ONLY — O(wave) staging.
-
-            Slots past n_slots (wave padding) stay empty: zero masks, unit
-            gammas, zero keys — the same shape the planner's -1 slots get.
-            """
-            w = hi - lo
-            x_w = np.zeros((w, k, d), np.float32)
-            mask_w = np.zeros((w, k), np.float32)
-            y_w = np.zeros((w, t_count, k), np.float32)
-            tmask_w = np.zeros((w, t_count, k), np.float32)
-            gam_w = np.ones((w, n_gamma), np.float32)
-            keys_w = np.zeros((w,) + keys_all.shape[1:], keys_all.dtype)
-            keys_w[: max(min(hi, n_slots) - lo, 0)] = keys_all[lo:hi]
-            for j, s in enumerate(range(lo, min(hi, n_slots))):
-                staged[s] = True
-                cid = self.packed.order[s]
-                if cid < 0:
-                    continue
-                ids = self.plan.indices[cid]
-                m = self.plan.mask[cid]
-                x_w[j] = xs_src.gather(ids)
-                x_cells[s], mask_cells[s] = x_w[j], m
-                mask_w[j] = m
-                y_w[j] = self.tasks.labels[:, ids] * m[None, :]
-                tmask_w[j] = self.tasks.task_mask[:, ids] * m[None, :]
-                # per-cell adaptive gamma endpoints (paper: grid scaled per cell)
-                med = float(kernel_fns.median_heuristic(jnp.asarray(x_w[j]),
-                                                        jnp.asarray(m)))
-                g = grids.liquid_grid(n=int(m.sum()), dim=d, median_dist=med,
-                                      grid_choice=cfg.grid_choice,
-                                      cell_size=cfg.cell_size)
-                if cfg.adaptivity_control > 0:
-                    g = grids.adaptive_subgrid(g, cfg.adaptivity_control)
-                gam_w[j] = np.asarray(g.gammas, np.float32)
-            return x_w, y_w, tmask_w, mask_w, gam_w, keys_w
-
-        lam_c, sub_c, task_c, n_lam, n_sub = cv_mod.grid_columns(
-            base_grid, cv_cfg, t_count)
-
-        coefs, gamma, lam, tau, val = train_cells_waves(
-            stage, n_slots, cfg.n_slots_per_wave,
-            lam_c, sub_c, task_c, cv_cfg, n_lam, n_sub,
-            mesh=self.mesh, axis_names=self.mesh_axes, ckpt_dir=ckpt_dir,
-            fingerprint=self._fit_fingerprint(cv_cfg, n, d))
-
-        for s in np.flatnonzero(~staged):   # waves restored from checkpoint
-            cid = self.packed.order[s]
-            if cid >= 0:
-                x_cells[s] = xs_src.gather(self.plan.indices[cid])
-                mask_cells[s] = self.plan.mask[cid]
-
-        self.cv_cfg = cv_cfg
-        self.x_cells, self.mask_cells = x_cells, mask_cells
-        self.coefs = np.asarray(coefs)      # (n_slots, k, T, S)
-        self.gamma = np.asarray(gamma)      # (n_slots, T, S)
-        self.lam, self.tau = np.asarray(lam), np.asarray(tau)
-        self.val_loss = np.asarray(val)
-        self._fitted = True
-
+        # legacy attribute surface (everything the fused fit used to set)
+        self.scaler, self.tasks = tr.scaler, tr.tasks
+        self.plan, self.packed, self.cv_cfg = tr.plan, tr.packed, tr.cv_cfg
+        self.x_cells, self.mask_cells = tr.x_cells, tr.mask_cells
+        self.coefs, self.gamma = sel.coefs, sel.gamma
+        self.lam, self.tau = sel.lam, sel.tau
+        self.val_loss = sel.val_loss
         if cfg.scenario == "npsvm":
-            # Neyman-Pearson selection over the weight grid: best detection
-            # among weights whose (training-data) false alarm <= alpha —
-            # decisions streamed chunk-by-chunk over the train source
-            from repro.core.select import np_select_weight
-            yv = np.asarray(y, np.float32)
-            n_w = len(cfg.weights)
-            fa_cnt = np.zeros(n_w, np.int64)
-            det_cnt = np.zeros(n_w, np.int64)
-            neg_tot = pos_tot = 0
-            for lo, chunk in raw_src.iter_chunks(cfg.chunk_size):
-                dec = self.decision_function(chunk)      # (m, 1, n_weights)
-                yc = yv[lo:lo + chunk.shape[0]]
-                neg, pos = yc < 0, yc > 0
-                fa_cnt += (dec[neg, 0, :] > 0).sum(0)
-                det_cnt += (dec[pos, 0, :] > 0).sum(0)
-                neg_tot += int(neg.sum())
-                pos_tot += int(pos.sum())
-            fa = fa_cnt / max(neg_tot, 1)
-            det = det_cnt / max(pos_tot, 1)
-            self.np_fa, self.np_det = fa, det
-            self.np_weight_idx = int(np_select_weight(
-                jnp.asarray(fa), jnp.asarray(det), cfg.np_alpha))
+            self.np_fa = np.asarray(sel.extras["np_fa"])[0]
+            self.np_det = np.asarray(sel.extras["np_det"])[0]
+            self.np_weight_idx = sel.default_sub
+        self._fitted = True
         return self
-
-    def _fit_fingerprint(self, cv_cfg, n: int, d: int) -> str:
-        """Identity of this fit for wave-checkpoint resume: config, data
-        layout (cell plan) and labels — a stale ckpt_dir from a different
-        run must be rejected, not silently restored."""
-        import hashlib
-        h = hashlib.blake2b(digest_size=16)
-        h.update(repr(self.config).encode())
-        h.update(repr(cv_cfg).encode())
-        h.update(np.int64([n, d]).tobytes())
-        h.update(self.plan.indices.tobytes())
-        h.update(self.plan.mask.tobytes())
-        h.update(self.plan.centers.tobytes())
-        h.update(np.ascontiguousarray(self.tasks.labels).tobytes())
-        return h.hexdigest()
 
     # ------------------------------------------------------------- serving
     def to_bank(self, drop_tol: float | None = 0.0, dtype: str = "f32",
                 dedup: bool = True):
-        """Compact the fitted cell models into a serving ModelBank.
-
-        The bank carries the Voronoi routing centers (empty padding slots
-        pushed beyond any real point) and the train-set scaling, so
-        ``SVMEngine(model.to_bank())`` serves raw-feature queries with the
-        same routing the estimator uses.
-        """
+        """Compact the fitted cell models into a serving ModelBank."""
         assert self._fitted
-        from repro.serve.model_bank import _FAR, ModelBank
-        n_slots = self.packed.n_slots
-        d = self.x_cells.shape[2]
-        centers = np.full((n_slots, d), _FAR, np.float32)
-        for s, cid in enumerate(self.packed.order):
-            if cid >= 0:
-                centers[s] = self.plan.centers[cid]
-        return ModelBank.from_cells(
-            self.x_cells, self.mask_cells, self.coefs, self.gamma, centers,
-            kernel=self.config.kernel, drop_tol=drop_tol, dtype=dtype,
-            dedup=dedup,
-            feat_mean=self.scaler.mean.astype(np.float32),
-            feat_std=self.scaler.std.astype(np.float32),
-            classes=self.tasks.classes, pairs=self.tasks.pairs,
-            scenario=self.config.scenario)
+        return self.select_result.to_bank(drop_tol=drop_tol, dtype=dtype,
+                                          dedup=dedup)
 
     # ------------------------------------------------------------- test
     def decision_function(self, x_test: np.ndarray) -> np.ndarray:
-        """(m, d) -> (m, T, S) via Voronoi routing to owning cells.
-
-        Pack/scatter is argsort-grouped (``planner.group_rows``) — two
-        fancy-indexed assignments, no per-row Python loops.
-        """
+        """(m, d) -> (m, T, S) via Voronoi routing to owning cells."""
         assert self._fitted
-        xt = self.scaler.transform(np.asarray(x_test, np.float32))
-        cell_of = self.plan.route(xt)                       # (m,) cell ids
-        slot_of = self.packed.slot_of_cell[cell_of]         # (m,) slots
-        n_slots = self.packed.n_slots
-        g = group_rows(slot_of, n_slots)
-        # bucket the padded row count so repeated chunked calls (npsvm
-        # selection, streamed evaluation) hit one compiled shape, and the
-        # extra all-zero rows are computed-then-dropped (row-independent)
-        m_pad = -(-g.m_max // 8) * 8
-        xt_cells = np.zeros((n_slots, m_pad, xt.shape[1]), np.float32)
-        xt_cells[g.slot, g.pos] = xt[g.rows]
-
-        dec = np.asarray(predict_cells(
-            jnp.asarray(xt_cells), jnp.asarray(self.x_cells),
-            jnp.asarray(self.coefs), jnp.asarray(self.gamma),
-            kernel=self.config.kernel,
-            mesh=self.mesh, axis_names=self.mesh_axes))     # (slots, m_max, T, S)
-
-        out = np.zeros((xt.shape[0],) + dec.shape[2:], np.float32)
-        out[g.rows] = dec[g.slot, g.pos]
-        return out
+        return self.select_result.decision_function(x_test)
 
     def predict(self, x_test: np.ndarray) -> np.ndarray:
-        dec = self.decision_function(x_test)
-        sc = self.config.scenario
-        sub = self.np_weight_idx if sc == "npsvm" else 0
-        return combine_decisions(dec, sc, classes=self.tasks.classes,
-                                 pairs=self.tasks.pairs, sub=sub)
+        assert self._fitted
+        return self.select_result.predict(x_test)
 
     def error(self, x_test: np.ndarray, y_test: np.ndarray) -> float:
-        pred = self.predict(x_test)
-        sc = self.config.scenario
-        if sc in ("binary", "weighted", "npsvm"):
-            return float((pred != np.sign(y_test)).mean())
-        if sc in ("ova", "ava"):
-            return float((pred != y_test).mean())
-        if sc == "quantile":
-            taus = np.asarray(self.config.taus)
-            r = y_test[:, None] - pred
-            return float(np.where(r >= 0, taus * r, (taus - 1) * r).mean())
-        if sc == "expectile":
-            taus = np.asarray(self.config.taus)
-            r = y_test[:, None] - pred
-            return float(np.where(r >= 0, taus * r * r, (1 - taus) * r * r).mean())
-        raise ValueError(sc)
+        assert self._fitted
+        return float(self.select_result.test(x_test, y_test).error)

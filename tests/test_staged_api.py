@@ -1,0 +1,329 @@
+"""Staged train->select->test API (liquidSVM's three-binary cycle).
+
+The contract under test (ISSUE 4 acceptance):
+
+  * staged-vs-fused parity: ``SVM.train() -> select("argmin") -> test()``
+    is BITWISE-identical to the fused ``LiquidSVM.fit`` path per scenario;
+  * re-selection on one cached ``TrainResult`` (npl -> roc -> argmin)
+    changes winners without re-solving the grid: the solver touches only
+    the moved columns (count << full sweep), and coming back to argmin
+    reuses the cached models bitwise;
+  * NPL selection reads VALIDATION false-alarm/detection rates from the
+    retained surface (counts aggregate exactly over cells/folds);
+  * stage artifacts round-trip through checkpoints, and the CLI's
+    train/select/test artifacts cold-start an ``SVMEngine``.
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import SVM, ConfigError, mcSVM, qtSVM, rocSVM
+from repro.api.config import apply_keys, parse_keys, weight_grid
+from repro.api.session import SelectResult, TrainResult
+from repro.data.synthetic import banana_mc, covtype_like, regression_1d, train_test_split
+from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+
+
+def _binary_data(n=400, seed=0):
+    x, y = covtype_like(n=n, d=4, seed=seed, label_noise=0.05, n_modes=3)
+    return train_test_split(x, np.where(y == 0, -1, 1), 0.25, seed)
+
+
+@pytest.fixture(scope="module")
+def weighted_session():
+    """One weighted-scenario train shared by every re-selection test."""
+    xtr, ytr, xte, yte = _binary_data(n=500, seed=0)
+    cfg = SVMTrainerConfig(scenario="weighted", weights=(0.5, 1.0, 2.0),
+                           n_folds=2, max_iters=150, adaptivity_control=1)
+    sess = SVM(xtr, ytr, config=cfg)
+    sess.train()
+    return sess, (xtr, ytr, xte, yte)
+
+
+class TestStagedFusedParity:
+    """train -> select(argmin) -> test == the fused fit, bitwise."""
+
+    def _check(self, cfg, xtr, ytr, xte, yte):
+        fused = LiquidSVM(cfg).fit(xtr, ytr)
+        sess = SVM(xtr, ytr, config=cfg)
+        sess.train()
+        sel = sess.select("argmin")
+        np.testing.assert_array_equal(sel.coefs, fused.coefs)
+        np.testing.assert_array_equal(sel.gamma, fused.gamma)
+        np.testing.assert_array_equal(sel.decision_function(xte),
+                                      fused.decision_function(xte))
+        assert sess.test(xte, yte).error == fused.error(xte, yte)
+        assert sel.stats["columns_resolved"] == 0
+
+    def test_binary(self):
+        xtr, ytr, xte, yte = _binary_data(seed=1)
+        self._check(SVMTrainerConfig(n_folds=2, max_iters=150,
+                                     adaptivity_control=1),
+                    xtr, ytr, xte, yte)
+
+    def test_ova_cells(self):
+        x, y = banana_mc(n=500, n_classes=3, seed=2)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 2)
+        self._check(SVMTrainerConfig(scenario="ova", n_folds=2,
+                                     max_iters=200, adaptivity_control=1,
+                                     cell_method="voronoi", cell_size=150),
+                    xtr, ytr, xte, yte)
+
+    def test_quantile(self):
+        x, y = regression_1d(n=250, seed=3)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 3)
+        self._check(SVMTrainerConfig(scenario="quantile", taus=(0.1, 0.9),
+                                     n_folds=2, max_iters=400,
+                                     adaptivity_control=1),
+                    xtr, ytr, xte, yte)
+
+
+class TestReselection:
+    """New rules on a cached TrainResult: one targeted wave, not a refit."""
+
+    def test_npl_moves_winners_with_few_solves(self, weighted_session):
+        sess, _ = weighted_session
+        sel_arg = sess.select("argmin")
+        sel_npl = sess.select("npl", alpha=0.02)
+        st = sel_npl.stats
+        assert st["winners_moved"] > 0          # the rule actually differs
+        assert st["columns_resolved"] == st["winners_moved"]
+        # solver invocations << the full fold x grid sweep
+        assert st["columns_resolved"] <= 0.1 * st["grid_columns"]
+        # untouched columns keep the cached models bitwise
+        moved = (sel_npl.gamma != sel_arg.gamma) | (sel_npl.lam != sel_arg.lam)
+        same = ~moved
+        np.testing.assert_array_equal(
+            np.moveaxis(sel_npl.coefs, 1, -1)[same],
+            np.moveaxis(sel_arg.coefs, 1, -1)[same])
+        assert moved.sum() == st["winners_moved"]
+
+    def test_npl_rates_come_from_validation_surface(self, weighted_session):
+        sess, _ = weighted_session
+        tr = sess.train_result
+        sel = sess.select("npl", alpha=0.02)
+        fa, det = np.asarray(sel.extras["np_fa"]), np.asarray(sel.extras["np_det"])
+        assert fa.shape == det.shape == tr.gamma.shape[1:]    # (T, S)
+        assert ((0 <= fa) & (fa <= 1)).all() and ((0 <= det) & (det <= 1)).all()
+        # counts on the surface are bounded by the per-cell class totals
+        neg, pos = tr.class_counts()
+        assert (tr.surf_fa <= neg[:, None, :, None, None] + 1e-6).all()
+        assert (tr.surf_det <= pos[:, None, :, None, None] + 1e-6).all()
+        # the weight pick honors the constraint when any weight meets it
+        widx = int(sel.extras["np_weight_idx"][0])
+        if (fa[0] <= 0.02).any():
+            assert fa[0, widx] <= 0.02
+        else:
+            assert widx == int(fa[0].argmin())
+
+    def test_roc_front_without_solves(self, weighted_session):
+        sess, _ = weighted_session
+        sel = sess.select("roc")
+        assert sel.stats["columns_resolved"] == 0     # argmin winners cached
+        front = np.asarray(sel.extras["roc_front"])   # (T, S, 2)
+        t, s = sel.gamma.shape[1:]
+        assert front.shape == (t, s, 2)
+        assert (np.diff(front[0, :, 0]) >= 0).all()   # sorted along FA
+        assert ((0 <= front) & (front <= 1)).all()
+
+    def test_argmin_returns_to_cache_bitwise(self, weighted_session):
+        sess, _ = weighted_session
+        sess.select("npl", alpha=0.02)                # perturb
+        sel = sess.select("argmin")
+        assert sel.stats["columns_resolved"] == 0
+        np.testing.assert_array_equal(sel.coefs, sess.train_result.coefs)
+        # and the argmin val_loss is the surface at the argmin winners
+        np.testing.assert_allclose(
+            sel.val_loss, sess.train_result.val_loss, rtol=0, atol=0)
+
+
+class TestSurface:
+    def test_val_loss_is_surface_min(self, weighted_session):
+        sess, _ = weighted_session
+        tr = sess.train_result
+        # streaming selection == min over the retained surface
+        np.testing.assert_allclose(
+            tr.val_loss, tr.surf_loss.min(axis=(1, 3)), atol=0)
+
+
+class TestPersistenceAndStreaming:
+    def test_train_result_roundtrip_reselect(self, weighted_session, tmp_path):
+        sess, _ = weighted_session
+        tr = sess.train_result
+        tr.save(str(tmp_path / "train"))
+        tr2 = TrainResult.load(str(tmp_path / "train"))
+        a = tr.select("npl", alpha=0.02)
+        b = tr2.select("npl", alpha=0.02)
+        np.testing.assert_array_equal(a.coefs, b.coefs)
+        np.testing.assert_array_equal(a.gamma, b.gamma)
+        assert a.stats == b.stats
+
+    def test_select_result_roundtrip_and_bank(self, weighted_session, tmp_path):
+        from repro.serve.svm_engine import SVMEngine
+        sess, (_, _, xte, yte) = weighted_session
+        sel = sess.select("npl", alpha=0.02)
+        sel.save(str(tmp_path / "select"))
+        sel2 = SelectResult.load(str(tmp_path / "select"))
+        np.testing.assert_array_equal(sel2.decision_function(xte),
+                                      sel.decision_function(xte))
+        assert sel2.default_sub == sel.default_sub
+        eng = SVMEngine(sel2.to_bank())
+        np.testing.assert_array_equal(eng.predict_label(xte), sel.predict(xte))
+
+    def test_streamed_test_matches_in_memory(self, weighted_session, tmp_path):
+        sess, (_, _, xte, yte) = weighted_session
+        sel = sess.select("argmin")
+        ref = sel.test(xte, yte)
+        np.save(tmp_path / "xte.npy", xte)
+        via_mmap = sel.test(str(tmp_path / "xte.npy"), yte)
+        chunked = sel.test(xte, yte, chunk_size=32)
+        assert via_mmap.error == ref.error        # classification: exact
+        assert chunked.error == ref.error
+        assert via_mmap.n == ref.n == len(xte)
+
+
+class TestCLI:
+    def test_cycle_cold_starts_engine(self, tmp_path, capsys):
+        from repro import cli
+        from repro.serve.model_bank import ModelBank
+        from repro.serve.svm_engine import SVMEngine
+
+        xtr, ytr, xte, yte = _binary_data(n=300, seed=4)
+        for name, arr in [("xtr", xtr), ("ytr", ytr), ("xte", xte),
+                          ("yte", yte)]:
+            np.save(tmp_path / f"{name}.npy", arr)
+        md = str(tmp_path / "model")
+        common = ["-S", "FOLDS=2", "-S", "MAX_ITERATIONS=150",
+                  "-S", "ADAPTIVITY_CONTROL=1"]
+        assert cli.main(["train", "--data", str(tmp_path / "xtr.npy"),
+                         "--labels", str(tmp_path / "ytr.npy"),
+                         "--model-dir", md, "--scenario", "npl",
+                         "-S", "WEIGHTS=0.5 1.0 2.0"] + common) == 0
+        out_train = json.loads(capsys.readouterr().out)
+        assert out_train["stage"] == "train" and out_train["slots"] >= 1
+
+        assert cli.main(["select", "--model-dir", md,
+                         "-S", "NPL_CONSTRAINT=0.05"]) == 0
+        out_sel = json.loads(capsys.readouterr().out)
+        assert out_sel["rule"] == "npl"
+        assert out_sel["stats"]["columns_resolved"] \
+            <= out_sel["stats"]["grid_columns"]
+        # select/ references the cells in train/ instead of re-writing the
+        # O(n*d) staged rows on every re-selection
+        with open(f"{md}/select/step_00000000/manifest.json") as f:
+            sel_paths = " ".join(json.load(f)["paths"])
+        assert "x_cells" not in sel_paths
+
+        assert cli.main(["test", "--data", str(tmp_path / "xte.npy"),
+                         "--labels", str(tmp_path / "yte.npy"),
+                         "--model-dir", md]) == 0
+        out_test = json.loads(capsys.readouterr().out)
+        assert out_test["n"] == len(xte) and out_test["error"] < 0.25
+
+        # re-select under a different rule: no retrain, new bank
+        assert cli.main(["select", "--model-dir", md, "--rule", "roc"]) == 0
+        out_roc = json.loads(capsys.readouterr().out)
+        assert out_roc["stats"]["columns_resolved"] == 0
+        assert "roc_front" in out_roc
+
+        # a predict server cold-starts from the select output alone
+        sel = SelectResult.load(f"{md}/select")
+        eng = SVMEngine(ModelBank.load(f"{md}/bank"))
+        np.testing.assert_array_equal(eng.predict_label(xte),
+                                      sel.predict(xte))
+
+    def test_weight_sweep_scenarios_get_default_grids(self, tmp_path, capsys):
+        """`--scenario roc` without WEIGHTS must not degenerate to S=1."""
+        from repro import cli
+        xtr, ytr, _, _ = _binary_data(n=200, seed=9)
+        np.save(tmp_path / "x.npy", xtr)
+        np.save(tmp_path / "y.npy", ytr)
+        assert cli.main(["train", "--data", str(tmp_path / "x.npy"),
+                         "--labels", str(tmp_path / "y.npy"),
+                         "--model-dir", str(tmp_path / "m"),
+                         "--scenario", "roc", "-S", "FOLDS=2",
+                         "-S", "MAX_ITERATIONS=100",
+                         "-S", "ADAPTIVITY_CONTROL=2"]) == 0
+        out = json.loads(capsys.readouterr().out)
+        assert out["grid"]["sub"] == 9           # the rocSVM default grid
+
+
+class TestConfigKeys:
+    def test_coercion_and_mapping(self):
+        cfg, sel = apply_keys(SVMTrainerConfig(), {
+            "folds": "3", "Kernel": "gauss_rbf", "VORONOI": "6",
+            "cell_size": "250", "NPL_CONSTRAINT": "0.01", "npl_class": "1",
+            "max_iterations": 200, "THREADS": 8})
+        assert cfg.n_folds == 3 and cfg.cell_method == "recursive"
+        assert cfg.cell_size == 250 and cfg.max_iters == 200
+        assert sel == {"alpha": 0.01, "npl_class": 1}
+
+    def test_weight_grid_keys(self):
+        cfg, _ = apply_keys(SVMTrainerConfig(), {
+            "MIN_WEIGHT": 0.5, "MAX_WEIGHT": 2.0, "WEIGHT_STEPS": 3})
+        np.testing.assert_allclose(cfg.weights, (0.5, 1.0, 2.0))
+        assert weight_grid(1.0, 1.0, 1) == (1.0,)
+
+    def test_validation_errors(self):
+        with pytest.raises(ConfigError, match="unknown config key"):
+            parse_keys({"FOLDZ": 3})
+        with pytest.raises(ConfigError, match="below minimum"):
+            parse_keys({"FOLDS": 1})
+        with pytest.raises(ConfigError, match="not in"):
+            parse_keys({"FOLD_SCHEME": "sorted"})
+        with pytest.raises(ConfigError, match="cannot parse"):
+            parse_keys({"FOLDS": "three"})
+        with pytest.raises(ConfigError, match="KERNEL"):
+            apply_keys(SVMTrainerConfig(), {"KERNEL": "cubic"})
+
+    def test_session_accepts_string_keys(self):
+        sess = SVM(np.zeros((4, 2), np.float32), np.ones(4), FOLDS=3,
+                   NPL_CONSTRAINT=0.1)
+        assert sess.config.n_folds == 3
+        assert sess.select_kwargs == {"alpha": 0.1}
+
+
+class TestScenarioFrontEnds:
+    def test_mcSVM_cycle(self):
+        x, y = banana_mc(n=400, n_classes=3, seed=5)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 5)
+        sess = mcSVM(xtr, ytr, FOLDS=2, MAX_ITERATIONS=200,
+                     ADAPTIVITY_CONTROL=1)
+        sess.train()
+        assert sess.test(xte, yte).error < 0.25
+
+    def test_qtSVM_cycle(self):
+        x, y = regression_1d(n=250, seed=6)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 6)
+        sess = qtSVM(xtr, ytr, taus=(0.1, 0.9), FOLDS=2,
+                     MAX_ITERATIONS=600, ADAPTIVITY_CONTROL=1)
+        sess.train()
+        sel = sess.select()                      # defaults to the "quantile" rule
+        assert sel.rule == "quantile"
+        pred = sel.predict(xte)                  # (m, 2)
+        cover = (yte[:, None] <= pred).mean(0)
+        assert cover[0] < cover[1]
+
+    def test_lsSVM_cycle(self):
+        from repro.api import lsSVM
+        x, y = regression_1d(n=250, seed=8)
+        xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 8)
+        sess = lsSVM(xtr, ytr, FOLDS=2, ADAPTIVITY_CONTROL=1)
+        sess.train()
+        res = sess.test(xte, yte)                # mse
+        assert res.error < 2.0 * float(np.var(yte))
+        assert sess.select_result.predict(xte).shape == (len(xte),)
+
+    def test_rocSVM_front(self):
+        xtr, ytr, _, _ = _binary_data(n=300, seed=7)
+        sess = rocSVM(xtr, ytr, weight_steps=3, FOLDS=2,
+                      MAX_ITERATIONS=150, ADAPTIVITY_CONTROL=1)
+        sess.train()
+        sel = sess.select()
+        assert sel.rule == "roc"
+        front = np.asarray(sel.extras["roc_front"])
+        assert front.shape == (1, 3, 2)
+        assert (np.diff(front[0, :, 0]) >= 0).all()
