@@ -19,6 +19,17 @@ A second row measures the multi-gamma sweep: replaying ``n_sweep`` gammas
 over the engine's cached wave D² (epilogue-only) vs re-running full
 prediction per gamma.
 
+Two more rows cover the async serving path:
+
+  * ``async``  — the same waved workload through the double-buffered
+    begin/finish pipeline (routing/packing of wave w+1 overlaps the device
+    work of wave w) vs the strictly synchronous submit+step loop;
+  * ``deadline`` — the latency-bounded stepper over a bursty arrival trace
+    (``engine.run(deadline_ms=...)``), reporting per-wave occupancy and the
+    request-age histogram the engine records (``wave_stats``).
+
+Both land in ``BENCH_serve.json`` under ``async`` / ``latency``.
+
 ``PYTHONPATH=src python -m benchmarks.serve_throughput`` — quick mode by
 default (REPRO_BENCH_FULL=1 for larger shapes); always writes
 BENCH_serve.json at the repo root so the perf trajectory is recorded.
@@ -71,6 +82,41 @@ def _engine_runner(bank, queries, wave):
             eng.submit(queries[lo:lo + wave])
             res = eng.step()
         return res
+
+    return run
+
+
+def _async_runner(bank, queries, wave):
+    """Double-buffered serving: wave w in flight while w+1 is admitted."""
+
+    def run():
+        eng = SVMEngine(bank, fused=False)
+        res = {}
+        for lo in range(0, queries.shape[0], wave):
+            eng.submit(queries[lo:lo + wave])
+            if eng.in_flight:
+                res.update(eng.finish_step())
+            eng.begin_step()
+        res.update(eng.finish_step())
+        return res
+
+    return run
+
+
+def _deadline_runner(bank, queries, deadline_ms):
+    """Latency-bounded stepper over a bursty trace; returns the engine."""
+    rng = np.random.default_rng(0)
+    bursts = []
+    lo = 0
+    while lo < queries.shape[0]:
+        m = int(rng.integers(8, 64))
+        bursts.append(queries[lo:lo + m])
+        lo += m
+
+    def run():
+        eng = SVMEngine(bank, fused=False, deadline_ms=deadline_ms)
+        eng.run(iter(bursts))
+        return eng
 
     return run
 
@@ -136,6 +182,20 @@ def run(report: Report) -> None:
     t_sweep_cached = timeit(sweep_cached, repeats=3)
     t_sweep_naive = timeit(sweep_naive, repeats=3)
 
+    # async admission: double-buffered begin/finish vs synchronous steps
+    async_run = _async_runner(compact, queries, wave)
+    async_run()                                 # warmup
+    t_async = timeit(async_run, repeats=3 if QUICK else 5)
+    async_rps = n_req / t_async
+
+    # latency-bounded stepper over a bursty trace
+    deadline_ms = 2.0
+    dl_run = _deadline_runner(compact, queries, deadline_ms)
+    dl_run()                                    # warmup
+    t_deadline = timeit(dl_run, repeats=3)
+    dl_eng = dl_run()
+    dl_stats = dl_eng.stats()
+
     stats = compact.stats()
     report.add("serve", f"c{n_cells}_k{k}_d{d}_p{t_count * s_count}",
                t_engine, engine_rps=round(engine_rps),
@@ -144,6 +204,13 @@ def run(report: Report) -> None:
     report.add("serve", f"gamma_sweep_{n_sweep}", t_sweep_cached,
                sweep_naive_s=round(t_sweep_naive, 4),
                speedup=round(t_sweep_naive / max(t_sweep_cached, 1e-9), 2))
+    report.add("serve", "async_admission", t_async,
+               async_rps=round(async_rps), sync_rps=round(engine_rps),
+               speedup=round(async_rps / max(engine_rps, 1e-9), 2))
+    report.add("serve", f"deadline_{deadline_ms}ms", t_deadline,
+               waves=dl_stats.get("waves", 0),
+               occupancy=round(dl_stats.get("occupancy_mean", 0.0), 3),
+               age_ms_max=round(dl_stats.get("age_ms_max", 0.0), 3))
 
     payload = {
         "benchmark": "serve_throughput",
@@ -161,6 +228,15 @@ def run(report: Report) -> None:
                         "cached_d2_s": t_sweep_cached,
                         "per_gamma_full_s": t_sweep_naive,
                         "speedup": t_sweep_naive / max(t_sweep_cached, 1e-9)},
+        "async": {"async_rps": async_rps,
+                  "sync_rps": engine_rps,
+                  "speedup": async_rps / max(engine_rps, 1e-9)},
+        "latency": {"deadline_ms": deadline_ms,
+                    "trace_s": t_deadline,
+                    "waves": dl_stats.get("waves", 0),
+                    "occupancy_mean": dl_stats.get("occupancy_mean"),
+                    "age_ms_max": dl_stats.get("age_ms_max"),
+                    "age_hist": dl_stats.get("age_hist")},
     }
     with open(OUT_PATH, "w") as f:
         json.dump(payload, f, indent=2)

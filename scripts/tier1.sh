@@ -5,13 +5,18 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
-# The serving path (model bank + cell-routed engine), the streaming
+# The serving path (model bank + cell-routed engine), the async/overlap
+# serving conformance suite, the ChunkSource contract, the streaming
 # pipeline (bitwise cell-plan parity, wave training) and the staged
 # train->select->test API are part of the default gate: when extra args
-# filter the main run, still verify them explicitly.
+# filter the main run, still verify them explicitly (quick hypothesis
+# profiles only — the large profiles carry the slow marker).
 if [ "$#" -gt 0 ]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
-    tests/test_serve_svm.py tests/test_pipeline.py tests/test_staged_api.py
+    -m 'not slow' \
+    tests/test_serve_svm.py tests/test_serve_async.py \
+    tests/test_sources_contract.py tests/test_pipeline.py \
+    tests/test_staged_api.py
 fi
 
 # CLI smoke: the staged cycle as three separate processes on tiny synthetic
@@ -36,4 +41,16 @@ PYTHONPATH=src python -m repro.cli select --model-dir "$SMOKE/model" \
   -S NPL_CONSTRAINT=0.05 > /dev/null
 PYTHONPATH=src python -m repro.cli test --data "$SMOKE/xte.npy" \
   --labels "$SMOKE/yte.npy" --model-dir "$SMOKE/model"
+# serve: cold-start the async engine from bank/ alone, latency-bounded
+PYTHONPATH=src python -m repro.cli serve --data "$SMOKE/xte.npy" \
+  --model-dir "$SMOKE/model" --wave 16 -S DEADLINE_MS=5 \
+  --out "$SMOKE/pred.npy" > /dev/null
+PYTHONPATH=src python - "$SMOKE" <<'PY'
+import sys
+import numpy as np
+pred = np.load(f"{sys.argv[1]}/pred.npy")
+yte = np.load(f"{sys.argv[1]}/yte.npy")
+assert pred.shape == yte.shape, (pred.shape, yte.shape)
+assert (pred == np.sign(yte)).mean() > 0.5, "serve predictions degenerate"
+PY
 echo "tier1: CLI smoke OK"

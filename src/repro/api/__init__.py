@@ -21,13 +21,15 @@ Three layers, mirroring the package's bindings (paper §2-3):
   SCENARIO SOLVER KERNEL SCALE FOLDS FOLD_SCHEME GRID_CHOICE
   ADAPTIVITY_CONTROL MAX_ITERATIONS TOLERANCE RANDOM_SEED VORONOI
   (PARTITION_CHOICE) CELL_SIZE WEIGHTS MIN_WEIGHT MAX_WEIGHT WEIGHT_STEPS
-  TAUS WAVE_SLOTS CHUNK_SIZE NPL_CONSTRAINT NPL_CLASS DISPLAY THREADS
+  TAUS WAVE_SLOTS CHUNK_SIZE NPL_CONSTRAINT NPL_CLASS SERVE_OVERLAP
+  DEADLINE_MS DISPLAY THREADS
 
   See ``repro.api.config.describe_keys()`` (or ``python -m repro.cli
   train --help-keys``) for types, ranges and semantics.
 """
 from repro.api.config import (ConfigError, apply_keys, available_keys,
-                              describe_keys, parse_keys, weight_grid)
+                              describe_keys, parse_keys, split_serve_keys,
+                              weight_grid)
 from repro.api.scenarios import exSVM, lsSVM, mcSVM, nplSVM, qtSVM, rocSVM
 from repro.api.session import (SVM, SelectResult, TestResult, TrainResult)
 
@@ -35,5 +37,5 @@ __all__ = [
     "SVM", "TrainResult", "SelectResult", "TestResult",
     "mcSVM", "lsSVM", "qtSVM", "exSVM", "nplSVM", "rocSVM",
     "ConfigError", "apply_keys", "parse_keys", "available_keys",
-    "describe_keys", "weight_grid",
+    "describe_keys", "split_serve_keys", "weight_grid",
 ]

@@ -36,6 +36,17 @@ Select-stage keys (consumed by ``select()``, not the trainer)
   NPL_CONSTRAINT       float  Neyman-Pearson false-alarm budget alpha
   NPL_CLASS            int    +-1: which class the constraint binds on
 
+Serve-stage keys (consumed by the serving engine — ``SVM(...).engine()``
+and ``python -m repro.cli serve`` — never the trainer; split off with
+:func:`split_serve_keys`)
+  SERVE_OVERLAP        bool   route each request to its 2 nearest cells
+                       and blend decisions with distance-softmax weights.
+                       Defaults to the bank's recorded routing mode
+                       (overlap for VORONOI=5 fits, else exact 1-NN).
+  DEADLINE_MS          float  latency bound for the async stepper: a wave
+                       launches when it fills OR the oldest queued
+                       request reaches this age.
+
 Accepted for liquidSVM compatibility, no effect here
   DISPLAY, THREADS
 """
@@ -64,6 +75,7 @@ class ConfigKey:
     lo: Optional[float] = None
     hi: Optional[float] = None
     select: bool = False            # select-stage parameter
+    serve: bool = False             # serve-stage (engine) parameter
     noop: bool = False              # accepted (compat), ignored
 
 
@@ -102,11 +114,16 @@ _KEYS: Dict[str, ConfigKey] = {k.name: k for k in [
               select=True, lo=0.0, hi=1.0),
     ConfigKey("NPL_CLASS", "int", "NP constrained class", select=True,
               choices=(-1, 1)),
+    ConfigKey("SERVE_OVERLAP", "bool", "blend the 2 nearest cells' decisions",
+              serve=True),
+    ConfigKey("DEADLINE_MS", "float", "async-stepper latency bound",
+              serve=True, lo=0.0),
     ConfigKey("DISPLAY", "int", "verbosity (compat; ignored)", noop=True),
     ConfigKey("THREADS", "int", "thread count (compat; ignored)", noop=True),
 ]}
 
 _SELECT_NAMES = {"NPL_CONSTRAINT": "alpha", "NPL_CLASS": "npl_class"}
+_SERVE_NAMES = {"SERVE_OVERLAP": "overlap", "DEADLINE_MS": "deadline_ms"}
 
 
 class ConfigError(ValueError):
@@ -124,6 +141,7 @@ def describe_keys() -> str:
         k = _KEYS[name]
         kind = k.kind or "int|str"
         extra = " (select stage)" if k.select else \
+            " (serve stage)" if k.serve else \
             " (ignored)" if k.noop else ""
         rows.append(f"  {name:<20} {kind:<7} {k.doc}{extra}")
     return "\n".join(rows)
@@ -166,6 +184,27 @@ def _coerce(key: ConfigKey, raw: Any) -> Any:
     return v
 
 
+def split_serve_keys(pairs: Dict[str, Any]
+                     ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Partition raw key pairs into (non-serve pairs, engine kwargs).
+
+    Serve-stage keys (SERVE_OVERLAP, DEADLINE_MS) configure the
+    :class:`repro.serve.SVMEngine`, not the trainer: callers that accept
+    mixed string keys (the session front door, ``cli serve``) split them
+    off here — validated/coerced — before ``apply_keys`` sees the rest.
+    """
+    rest: Dict[str, Any] = {}
+    serve: Dict[str, Any] = {}
+    for name, raw in pairs.items():
+        canon = str(name).upper()
+        k = _KEYS.get(canon)
+        if k is not None and k.serve:
+            serve[_SERVE_NAMES[canon]] = _coerce(k, raw)
+        else:
+            rest[name] = raw
+    return rest, serve
+
+
 def parse_keys(pairs: Dict[str, Any]) -> Dict[str, Any]:
     """Normalize/validate a {key: value} mapping to canonical upper keys."""
     out: Dict[str, Any] = {}
@@ -197,6 +236,11 @@ def apply_keys(base: SVMTrainerConfig, pairs: Dict[str, Any]
         k = _KEYS[name]
         if k.noop:
             continue
+        if k.serve:
+            raise ConfigError(
+                f"{name} is a serve-stage key — it configures the engine, "
+                f"not the trainer (use SVM(...).engine(), `cli serve`, or "
+                f"split_serve_keys)")
         if name == "VORONOI":
             fields["cell_method"] = v
         elif name == "MIN_WEIGHT":

@@ -20,7 +20,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.api.config import apply_keys, weight_grid
+from repro.api.config import apply_keys, split_serve_keys, weight_grid
 from repro.api.session import SVM
 from repro.train.svm_trainer import SVMTrainerConfig
 
@@ -30,10 +30,11 @@ def _session(scenario: str, x, y, keys: dict,
              select_kwargs: Optional[dict] = None,
              **cfg_fields) -> SVM:
     base = SVMTrainerConfig(scenario=scenario, **cfg_fields)
+    keys, serve_kw = split_serve_keys(keys)
     cfg, key_select = apply_keys(base, keys)
     merged = {**key_select, **(select_kwargs or {})}
     return SVM(x, y, config=cfg, select_rule=select_rule,
-               select_kwargs=merged)
+               select_kwargs=merged, serve_kwargs=serve_kw)
 
 
 def mcSVM(x, y, mc_type: str = "OvA", **keys) -> SVM:

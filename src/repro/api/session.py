@@ -407,7 +407,12 @@ class SelectResult:
     # ----------------------------------------------------------- serving
     def to_bank(self, drop_tol: float | None = 0.0, dtype: str = "f32",
                 dedup: bool = True):
-        """Compact into a serving ModelBank (cold-starts ``SVMEngine``)."""
+        """Compact into a serving ModelBank (cold-starts ``SVMEngine``).
+
+        A ``VORONOI=5`` (overlap) fit records ``routing="overlap"`` in the
+        bank, so the engine blends the 2 nearest cells' decisions by
+        default — the 2-cell ownership the models were trained on.
+        """
         from repro.serve.model_bank import _FAR, ModelBank
         n_slots = self.packed.n_slots
         d = self.x_cells.shape[2]
@@ -415,6 +420,8 @@ class SelectResult:
         for s, cid in enumerate(self.packed.order):
             if cid >= 0:
                 centers[s] = self.plan.centers[cid]
+        routing = "overlap" if self.config.cell_method == "overlap" \
+            else "nearest"
         return ModelBank.from_cells(
             self.x_cells, self.mask_cells, self.coefs, self.gamma, centers,
             kernel=self.config.kernel, drop_tol=drop_tol, dtype=dtype,
@@ -422,7 +429,8 @@ class SelectResult:
             feat_mean=np.asarray(self.scaler.mean, np.float32),
             feat_std=np.asarray(self.scaler.std, np.float32),
             classes=self.tasks.classes, pairs=self.tasks.pairs,
-            scenario=self.config.scenario, default_sub=self.default_sub)
+            scenario=self.config.scenario, default_sub=self.default_sub,
+            routing=routing)
 
     # ------------------------------------------------------ persistence
     _ARRAYS = ("x_cells", "mask_cells", "coefs", "gamma", "lam", "tau",
@@ -484,17 +492,22 @@ class SVM:
                  mesh_axes: Optional[Tuple[str, ...]] = None,
                  select_rule: Optional[str] = None,
                  select_kwargs: Optional[dict] = None,
+                 serve_kwargs: Optional[dict] = None,
                  **config_keys):
         cfg = config or SVMTrainerConfig()
         sel_kw = dict(select_kwargs or {})
+        srv_kw = dict(serve_kwargs or {})
         if config_keys:
-            from repro.api.config import apply_keys
+            from repro.api.config import apply_keys, split_serve_keys
+            config_keys, key_srv = split_serve_keys(config_keys)
+            srv_kw = {**key_srv, **srv_kw}
             cfg, key_sel = apply_keys(cfg, config_keys)
             sel_kw.update(key_sel)
         self.config = cfg
         self.mesh, self.mesh_axes = mesh, mesh_axes
         self.select_rule = select_rule
         self.select_kwargs = sel_kw
+        self.serve_kwargs = srv_kw
         self._x, self._y = x, y
         self.train_result: Optional[TrainResult] = None
         self.select_result: Optional[SelectResult] = None
@@ -676,3 +689,18 @@ class SVM:
         if self.select_result is None:
             self.select()
         return self.select_result.test(x_test, y_test, chunk_size=chunk_size)
+
+    # ------------------------------------------------------------- serve
+    def engine(self, **engine_kwargs):
+        """Compact the selection into a bank and build an ``SVMEngine``.
+
+        Serve-stage string keys given at session construction
+        (``SERVE_OVERLAP``, ``DEADLINE_MS``) carry through here; explicit
+        ``engine_kwargs`` win.  Selects with the session default rule first
+        if ``select()`` has not been called.
+        """
+        if self.select_result is None:
+            self.select()
+        from repro.serve.svm_engine import SVMEngine
+        return SVMEngine(self.select_result.to_bank(),
+                         **{**self.serve_kwargs, **engine_kwargs})

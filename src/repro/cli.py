@@ -10,6 +10,8 @@ training sweep.  This is the same cycle over the staged session API:
     python -m repro.cli select --model-dir run1 --rule npl -S NPL_CONSTRAINT=0.01
     python -m repro.cli select --model-dir run1 --rule roc      # no retrain
     python -m repro.cli test   --data xte.npy --labels yte.npy --model-dir run1
+    python -m repro.cli serve  --data xq.npy --model-dir run1 \\
+        -S DEADLINE_MS=5 --out pred.npy     # async engine from bank/ alone
 
 Artifacts under ``--model-dir`` (all ``repro.train.checkpoint`` step dirs):
 
@@ -163,6 +165,50 @@ def cmd_test(args) -> int:
     return 0
 
 
+# ------------------------------------------------------------------ serve
+def cmd_serve(args) -> int:
+    """Cold-start the engine from ``bank/`` and serve ``--data`` through
+    the latency-bounded async stepper.
+
+    The bank's recorded routing mode (overlap for VORONOI=5 fits) applies
+    unless overridden with ``-S SERVE_OVERLAP=...``; ``-S DEADLINE_MS=...``
+    bounds queueing latency.  ``--out`` writes predicted labels as .npy.
+    """
+    from repro.api.config import split_serve_keys
+    from repro.serve.model_bank import ModelBank
+    from repro.serve.svm_engine import SVMEngine
+    from repro.tasks.builder import combine_decisions
+    import time as _time
+
+    leftover, serve_kw = split_serve_keys(_parse_sets(args.set))
+    if leftover:
+        raise SystemExit(f"serve only takes SERVE_OVERLAP/DEADLINE_MS keys, "
+                         f"got {sorted(leftover)}")
+    bank = ModelBank.load(os.path.join(args.model_dir, "bank"))
+    eng = SVMEngine(bank, **serve_kw)
+    src = _load_data(args.data)
+
+    t0 = _time.time()
+    results = eng.run(chunk for _, chunk in src.iter_chunks(args.wave))
+    dt = _time.time() - t0
+    dec = (np.stack([results[i] for i in sorted(results)]) if results
+           else np.zeros((0, bank.n_tasks, bank.n_sub), np.float32))
+    pred = combine_decisions(dec, bank.scenario, classes=bank.classes,
+                             pairs=bank.pairs, sub=bank.default_sub)
+    if args.out:
+        np.save(args.out, pred)
+    stats = eng.stats()
+    _emit({"stage": "serve", "n": int(src.n_rows),
+           "rps": src.n_rows / max(dt, 1e-9),
+           "routing": stats["routing"],
+           "deadline_ms": serve_kw.get("deadline_ms"),
+           "waves": stats.get("waves", 0),
+           "occupancy_mean": stats.get("occupancy_mean"),
+           "age_ms_max": stats.get("age_ms_max"),
+           "out": args.out, "model_dir": args.model_dir})
+    return 0
+
+
 # ------------------------------------------------------------------- main
 def _build_parser() -> argparse.ArgumentParser:
     p = argparse.ArgumentParser(
@@ -200,6 +246,18 @@ def _build_parser() -> argparse.ArgumentParser:
     ep.add_argument("--model-dir", required=True)
     ep.add_argument("--chunk-size", type=int, default=None)
     ep.set_defaults(fn=cmd_test)
+
+    vp = sub.add_parser("serve", help="cold-start the engine from bank/ and "
+                                      "serve --data (async, latency-bounded)")
+    vp.add_argument("--data", required=True)
+    vp.add_argument("--model-dir", required=True)
+    vp.add_argument("--wave", type=int, default=256,
+                    help="arrival burst size fed to the stepper")
+    vp.add_argument("--out", default=None,
+                    help="write predicted labels to this .npy")
+    vp.add_argument("-S", "--set", action="append", metavar="KEY=VALUE",
+                    help="SERVE_OVERLAP / DEADLINE_MS")
+    vp.set_defaults(fn=cmd_serve)
     return p
 
 

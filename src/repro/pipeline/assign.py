@@ -72,36 +72,70 @@ def nearest_center(x: np.ndarray, centers: np.ndarray,
 
 def _top2_chunk(chunk: np.ndarray, centers: np.ndarray,
                 cnorm: Optional[np.ndarray] = None
-                ) -> Tuple[np.ndarray, np.ndarray]:
+                ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """THE two-nearest rule (argmin, mask, argmin) — single implementation
-    shared by every overlap-cells consumer so tie-breaking cannot drift."""
+    shared by every overlap-cells consumer so tie-breaking cannot drift.
+
+    Returns ``(nn1, nn2, d1, d2)`` with the two squared distances.
+    Tie-breaking is ``argmin``'s: the LOWEST center index wins, so an
+    exactly equidistant row (duplicated centers included) deterministically
+    gets ``nn1 < nn2`` with ``d1 == d2`` — the serving engine's overlap
+    router and the overlap cell builder both inherit this rule from here.
+    """
     d2 = _d2_chunk(chunk, centers, cnorm)
+    rows = np.arange(chunk.shape[0])
     a1 = d2.argmin(1)
-    d2[np.arange(chunk.shape[0]), a1] = np.inf
-    return a1.astype(np.int32), d2.argmin(1).astype(np.int32)
+    dist1 = d2[rows, a1].copy()
+    d2[rows, a1] = np.inf
+    a2 = d2.argmin(1)
+    dist2 = d2[rows, a2].copy()
+    return (a1.astype(np.int32), a2.astype(np.int32),
+            dist1.astype(np.float32), dist2.astype(np.float32))
 
 
 def nearest_top2(x: np.ndarray, centers: np.ndarray,
                  chunk_size: int = DEFAULT_CHUNK
                  ) -> Tuple[np.ndarray, np.ndarray]:
     """Two nearest center ids per row (overlap cells), chunked, int32."""
+    nn1, nn2, _, _ = assign_top2_stream(np.asarray(x, np.float32),
+                                        np.asarray(centers, np.float32),
+                                        chunk_size)
+    return nn1, nn2
+
+
+def nearest_top2_dists(x: np.ndarray, centers: np.ndarray,
+                       chunk_size: int = DEFAULT_CHUNK
+                       ) -> Tuple[np.ndarray, np.ndarray,
+                                  np.ndarray, np.ndarray]:
+    """``(nn1, nn2, d1, d2)`` per row — ids AND squared distances.
+
+    The serving engine's overlap router consumes this (the distances feed
+    the blend weights); it is the same ``_top2_chunk`` core the overlap
+    cell builder uses, so serve-time routing cannot drift from the
+    decomposition's 2-cell ownership rule.
+    """
     return assign_top2_stream(np.asarray(x, np.float32),
                               np.asarray(centers, np.float32), chunk_size)
 
 
 def assign_top2_stream(source, centers: np.ndarray,
                        chunk_size: int = DEFAULT_CHUNK
-                       ) -> Tuple[np.ndarray, np.ndarray]:
-    """(nn1, nn2) per row over a whole chunk source (overlap ownership)."""
+                       ) -> Tuple[np.ndarray, np.ndarray,
+                                  np.ndarray, np.ndarray]:
+    """(nn1, nn2, d1, d2) per row over a whole chunk source (overlap
+    ownership + the squared distances of the pair)."""
     src = as_source(source)
     centers = np.asarray(centers, np.float32)
     cnorm = center_norms(centers)
     nn1 = np.empty(src.n_rows, np.int32)
     nn2 = np.empty(src.n_rows, np.int32)
+    d1 = np.empty(src.n_rows, np.float32)
+    d2 = np.empty(src.n_rows, np.float32)
     for lo, chunk in src.iter_chunks(chunk_size):
         hi = lo + chunk.shape[0]
-        nn1[lo:hi], nn2[lo:hi] = _top2_chunk(chunk, centers, cnorm)
-    return nn1, nn2
+        nn1[lo:hi], nn2[lo:hi], d1[lo:hi], d2[lo:hi] = \
+            _top2_chunk(chunk, centers, cnorm)
+    return nn1, nn2, d1, d2
 
 
 def assign_stream(source, centers: np.ndarray,

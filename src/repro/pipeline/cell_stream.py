@@ -190,8 +190,8 @@ def _build_spatial(src: ChunkSource, cell_size: int, method: str,
     # pass 1: ownership (+ 2nd-nearest for overlap) and member counts —
     # the same shared assignment helpers every other consumer routes through
     if method == "overlap":
-        owner, nn2 = assign_mod.assign_top2_stream(src, route_centers,
-                                                   chunk_size)
+        owner, nn2, _, _ = assign_mod.assign_top2_stream(src, route_centers,
+                                                         chunk_size)
     else:
         owner = assign_mod.assign_stream(src, route_centers, chunk_size)
         nn2 = None

@@ -89,6 +89,9 @@ class ModelBank:
     default_sub: int = 0      # sub column label combination reads by default
                               # (the select stage's NP weight pick rides
                               # along into serving)
+    routing: str = "nearest"  # "nearest" (1-NN) | "overlap" (voronoi=5
+                              # banks: route to the 2 nearest centers and
+                              # blend decisions; the engine reads this)
 
     # ------------------------------------------------------------ properties
     @property
@@ -117,6 +120,7 @@ class ModelBank:
             "compaction": live / max(int(self.raw_sv_total), 1),
             "bytes": self.nbytes,
             "dtype": str(self.sv.dtype),
+            "routing": self.routing,
         }
 
     # ---------------------------------------------------------- construction
@@ -139,6 +143,7 @@ class ModelBank:
         pairs: Optional[np.ndarray] = None,
         scenario: str = "binary",
         default_sub: int = 0,
+        routing: str = "nearest",
         pad_multiple: int = 8,
     ) -> "ModelBank":
         """Compact a trained cell batch into a bank.
@@ -183,6 +188,8 @@ class ModelBank:
             coefs = np.asarray(jnp.asarray(coefs).astype(jnp.bfloat16))
         elif dtype != "f32":
             raise ValueError(f"dtype must be f32|bf16, got {dtype!r}")
+        if routing not in ("nearest", "overlap"):
+            raise ValueError(f"routing must be nearest|overlap, got {routing!r}")
 
         if feat_mean is None:
             feat_mean = np.zeros((d,), np.float32)
@@ -201,7 +208,7 @@ class ModelBank:
                    else np.asarray(pairs, np.int32)),
             kernel=kernel, n_tasks=t_count, n_sub=s_count, scenario=scenario,
             raw_sv_total=int((mask_cells > 0).sum()),
-            default_sub=int(default_sub),
+            default_sub=int(default_sub), routing=routing,
         )
 
     @classmethod
@@ -237,7 +244,7 @@ class ModelBank:
 
     # --------------------------------------------------------- serialization
     _META_KEYS = ("kernel", "n_tasks", "n_sub", "scenario", "raw_sv_total",
-                  "default_sub")
+                  "default_sub", "routing")
 
     def save(self, ckpt_dir: str, step: int = 0) -> str:
         """Atomic checkpoint write; a server cold-starts from this alone."""

@@ -1,9 +1,9 @@
-"""Cell-routed SVM serving engine: micro-batched prediction over a model bank.
+"""Cell-routed SVM serving engine: overlap routing, async admission, deadlines.
 
 The paper's test phase at serving scale.  Every query is Voronoi-routed
-host-side to its owning cell (the same nearest-center rule the training
-decomposition uses), requests accumulate per cell, and each ``step()``
-drains the queues with ONE batched launch over all active cells:
+host-side (the same nearest-center rule the training decomposition uses),
+requests accumulate per cell, and each launch drains the queues with ONE
+batched launch over all active cells:
 
   * :func:`repro.distributed.planner.plan_wave` turns the ragged per-cell
     queue depths into a static launch layout — hot cells are chunked into
@@ -13,11 +13,35 @@ drains the queues with ONE batched launch over all active cells:
     kernel for the whole wave; Gram tiles never touch HBM); elsewhere it is
     the batched distance-cache path;
   * the wave's gamma-independent cross-D² is kept as a persistent
-    :class:`CachedGram`-style cache keyed by the routed batch: re-evaluating
-    the same wave under new gammas/coefficients (multi-gamma sweeps, task
-    A/B coefficient swaps, quantile re-levels) replays only the O(m·k) VPU
-    epilogue — the PR-1 distance-cache contract extended across requests.
-    ``cache_dtype="bf16"`` halves the resident cache (see ``CachedGram``).
+    :class:`CachedGram`-style cache keyed by the routed batch
+    (``cache_dtype="bf16"`` halves it); ``sweep_gammas`` replays only the
+    VPU epilogue.
+
+Three serving behaviours layer on top of the batched launch:
+
+  * **overlap routing** — banks built from ``voronoi=5`` (overlap) models
+    were TRAINED on 2-cell ownership; serving them 1-NN throws half the
+    training signal away.  With ``routing="overlap"`` each request is
+    routed to its 2 nearest centers via the SAME
+    ``pipeline.assign._top2_chunk`` core the cell builder uses (tie-breaks
+    cannot drift) and the two cells' decision blocks are blended with
+    distance-softmax weights (:func:`blend_weights`; exactly (0.5, 0.5) for
+    equidistant rows, exactly (1, 0) when no second cell is reachable —
+    and the engine falls back to exact 1-NN when the bank says
+    ``routing="nearest"`` or has fewer than two cells);
+  * **async admission** — ``begin_step()`` snapshots the admission queues
+    into one wave and DISPATCHES it without blocking; ``submit()`` stays
+    legal while the wave is in flight (a double-buffered queue pair, the
+    PR-3 wave-prefetch pattern), so host-side routing/packing of wave w+1
+    overlaps the device work of wave w; ``finish_step()`` collects.
+    ``step()`` is the synchronous begin+finish pair and is bitwise
+    identical to the old strictly-synchronous engine;
+  * **latency-bounded stepping** — :meth:`run` drives an arrival stream
+    and launches when the queued rows would fill a bucketed wave OR the
+    oldest queued request's age crosses ``deadline_ms``; every launch
+    records occupancy and a request-age histogram (``wave_stats``,
+    aggregated by ``stats()`` and exported by
+    ``benchmarks/serve_throughput.py`` into ``BENCH_serve.json``).
 
 Slots are LPT-ordered by :func:`plan_wave`, so sharding the slot axis over a
 mesh (as ``distributed.cell_trainer`` does for training) inherits balanced
@@ -26,9 +50,11 @@ waves; this engine runs the single-host slice of that story.
 from __future__ import annotations
 
 import collections
+import dataclasses
 import functools
 import hashlib
-from typing import Dict, List, Optional, Tuple
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,12 +64,48 @@ from repro.distributed.planner import WavePlan, plan_wave
 from repro.kernels import runtime
 from repro.kernels.kernel_matrix import ops as km_ops
 from repro.kernels.svm_predict import ops as sp_ops
+from repro.pipeline.assign import nearest_center, nearest_top2_dists
 from repro.serve.model_bank import ModelBank
 from repro.tasks.builder import combine_decisions
 
 Array = jax.Array
 
 _ROUTE_CHUNK = 4096
+
+# request-age histogram bucket upper edges (ms); the last bucket is open
+AGE_BUCKETS_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0)
+
+
+def blend_weights(d1: np.ndarray, d2: np.ndarray
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Distance-softmax blend weights for a request's two nearest cells.
+
+    ``softmax(-d²)`` over the pair, computed stably from the non-negative
+    gap: ``w1 = 1 / (1 + exp(-(d2 - d1)))``, ``w2 = 1 - w1`` (f32).  An
+    exactly equidistant row gets exactly ``(0.5, 0.5)``; a second cell far
+    enough that the gap underflows ``exp`` gets exactly ``(1.0, 0.0)`` —
+    the engine then enqueues a single part, which is also how padding-slot
+    ``_FAR`` centers drop out of blending.
+    """
+    delta = np.asarray(d2, np.float32) - np.asarray(d1, np.float32)
+    w1 = (np.float32(1.0) / (np.float32(1.0) + np.exp(-delta))).astype(
+        np.float32)
+    return w1, np.float32(1.0) - w1
+
+
+@dataclasses.dataclass
+class _Request:
+    """Blend state of one submitted request.
+
+    Parts arrive from (possibly different) waves in any order; the blend
+    ``sum_p w_p * vals[p]`` is evaluated in FIXED part order once every
+    part landed, so completion numerics are independent of the
+    async/sync interleaving that served the parts.
+    """
+    weights: Tuple[np.float32, ...]
+    vals: List[Optional[np.ndarray]]
+    ts: float
+    left: int
 
 
 @functools.partial(jax.jit, static_argnames=("kernel",))
@@ -89,7 +151,13 @@ def _sweep_cells(d2: Array, sweep_gammas: Array, coefs: Array,
 
 
 class SVMEngine:
-    """Serve micro-batched queries against a compacted :class:`ModelBank`."""
+    """Serve micro-batched queries against a compacted :class:`ModelBank`.
+
+    ``overlap=None`` reads the bank's recorded routing mode (set by
+    ``SelectResult.to_bank()`` for ``VORONOI=5`` fits); ``deadline_ms``
+    is the default latency bound for :meth:`run`; ``clock`` is injectable
+    for deterministic deadline tests.
+    """
 
     def __init__(
         self,
@@ -100,6 +168,10 @@ class SVMEngine:
         row_bucket: int = 8,
         slot_bucket: int = 4,
         max_cached_d2: int = 8,
+        overlap: Optional[bool] = None,
+        deadline_ms: Optional[float] = None,
+        fill_rows: Optional[int] = None,
+        clock: Callable[[], float] = time.monotonic,
     ):
         if cache_dtype not in ("f32", "bf16"):
             raise ValueError(f"cache_dtype must be f32|bf16, got {cache_dtype!r}")
@@ -109,18 +181,33 @@ class SVMEngine:
         self.row_bucket = row_bucket
         self.slot_bucket = slot_bucket
         self.max_cached_d2 = max_cached_d2
+        # 1-NN fallback is EXACT: a bank built with voronoi<5 records
+        # routing="nearest", and blending needs a second center to exist
+        want = (bank.routing == "overlap") if overlap is None else bool(overlap)
+        self.overlap = want and bank.n_cells >= 2
+        self.deadline_ms = deadline_ms
+        # "m_pad fills": one bucketed wave's worth of rows triggers a launch
+        self.fill_rows = (row_bucket * slot_bucket if fill_rows is None
+                          else int(fill_rows))
+        self._clock = clock
 
         self._sv, self._coefs = bank.cell_arrays_f32()
         self._gammas = jnp.asarray(bank.gammas, jnp.float32)
         self._centers = np.asarray(bank.centers, np.float32)
 
-        self._queues: List[List[Tuple[int, np.ndarray]]] = [
+        # admission buffer: per-cell (rid, part, row); begin_step snapshots
+        # it into a wave and swaps in a fresh buffer (double buffering)
+        self._queues: List[List[Tuple[int, int, np.ndarray]]] = [
             [] for _ in range(bank.n_cells)]
+        self._reqs: Dict[int, _Request] = {}
+        self._inflight: Optional[Tuple[WavePlan, List[List[Tuple[int, int]]],
+                                       Array]] = None
         self._next_id = 0
         self._d2_cache: "collections.OrderedDict[bytes, Array]" = \
             collections.OrderedDict()
         self._last_wave: Optional[dict] = None
         self.counters = collections.Counter()
+        self.wave_stats: List[dict] = []
 
     # ------------------------------------------------------------- ingestion
     def route(self, x: np.ndarray) -> np.ndarray:
@@ -130,66 +217,209 @@ class SVMEngine:
         (``CellPlan.route``), so serve-time routing and the decomposition's
         ownership rule cannot drift apart.
         """
-        from repro.pipeline.assign import nearest_center
         return nearest_center(x, self._centers,
                               chunk_size=_ROUTE_CHUNK).astype(np.int64)
 
-    def submit(self, x: np.ndarray) -> np.ndarray:
-        """Enqueue queries (raw feature space); returns request ids."""
+    def route_top2(self, x: np.ndarray
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Two nearest cells + blend weights for already-scaled queries.
+
+        ``pipeline.assign.nearest_top2_dists`` — the overlap cell builder's
+        ``_top2_chunk`` core, not a reimplementation — so the serve-time
+        pair (tie-breaking included) matches the 2-cell training ownership.
+        """
+        c1, c2, d1, d2 = nearest_top2_dists(x, self._centers,
+                                            chunk_size=_ROUTE_CHUNK)
+        w1, w2 = blend_weights(d1, d2)
+        return c1.astype(np.int64), c2.astype(np.int64), w1, w2
+
+    def submit(self, x: np.ndarray, now: Optional[float] = None) -> np.ndarray:
+        """Enqueue queries (raw feature space); returns request ids.
+
+        Legal at ANY time, including while a wave is in flight — admission
+        lands in the fresh queue buffer and is consumed by the next
+        ``begin_step()``.  Overlap banks enqueue up to two weighted parts
+        per request; parts are merged at completion (``finish_step``).
+        """
         x = np.asarray(x, np.float32)
         if x.ndim == 1:
             x = x[None, :]
         xs = (x - self.bank.feat_mean) / self.bank.feat_std
-        cells = self.route(xs)
-        ids = np.arange(self._next_id, self._next_id + x.shape[0], dtype=np.int64)
+        ids = np.arange(self._next_id, self._next_id + x.shape[0],
+                        dtype=np.int64)
         self._next_id += x.shape[0]
-        for i, c in enumerate(cells):
-            self._queues[int(c)].append((int(ids[i]), xs[i]))
+        ts = float(self._clock()) if now is None else float(now)
+        if self.overlap:
+            c1, c2, w1, w2 = self.route_top2(xs)
+            for i, rid in enumerate(map(int, ids)):
+                parts = [(int(c1[i]), np.float32(w1[i]))]
+                if w2[i] > 0.0:          # unreachable 2nd cell: single part
+                    parts.append((int(c2[i]), np.float32(w2[i])))
+                self._reqs[rid] = _Request(
+                    weights=tuple(w for _, w in parts),
+                    vals=[None] * len(parts), ts=ts, left=len(parts))
+                for p, (c, _) in enumerate(parts):
+                    self._queues[c].append((rid, p, xs[i]))
+        else:
+            cells = self.route(xs)
+            for i, rid in enumerate(map(int, ids)):
+                self._reqs[rid] = _Request(weights=(np.float32(1.0),),
+                                           vals=[None], ts=ts, left=1)
+                self._queues[int(cells[i])].append((rid, 0, xs[i]))
         self.counters["submitted"] += x.shape[0]
         return ids
 
     @property
     def pending(self) -> int:
+        """Queued launch rows (overlap requests count once per part)."""
         return sum(len(q) for q in self._queues)
 
-    # -------------------------------------------------------------- the step
-    def step(self) -> Dict[int, np.ndarray]:
-        """Drain pending queues with one batched launch.
+    @property
+    def in_flight(self) -> bool:
+        return self._inflight is not None
 
-        Returns {request_id: (n_tasks, n_sub) decision block}.
+    def oldest_age_ms(self, now: Optional[float] = None) -> float:
+        """Age of the oldest QUEUED (not yet launched) request, ms."""
+        now = float(self._clock()) if now is None else float(now)
+        ts = [self._reqs[rid].ts for q in self._queues for (rid, _, _) in q]
+        return 0.0 if not ts else (now - min(ts)) * 1e3
+
+    # -------------------------------------------------------------- the step
+    def begin_step(self) -> bool:
+        """Snapshot the admission queues into one wave and DISPATCH it.
+
+        Non-blocking: the batched launch is left in flight on the device
+        and a fresh admission buffer is swapped in, so routing/packing of
+        the next wave (and any amount of ``submit()`` traffic) overlaps
+        the device work.  Returns False when nothing was queued.
         """
+        if self._inflight is not None:
+            raise RuntimeError(
+                "a wave is already in flight - call finish_step() first")
         counts = np.asarray([len(q) for q in self._queues], np.int64)
         plan = plan_wave(counts, row_bucket=self.row_bucket,
                          slot_bucket=self.slot_bucket)
         if plan.n_requests == 0:
-            return {}
+            return False
+        queues, self._queues = self._queues, [
+            [] for _ in range(self.bank.n_cells)]
         d = self._centers.shape[1]
         xt = np.zeros((plan.n_slots, plan.m_pad, d), np.float32)
-        slot_ids: List[List[int]] = []
+        slot_entries: List[List[Tuple[int, int]]] = []
+        now = float(self._clock())
+        ages: List[float] = []
         for s in range(plan.n_slots):
             cid, off, take = (int(plan.slot_cell[s]), int(plan.slot_off[s]),
                               int(plan.slot_take[s]))
-            ids_s = []
+            entries: List[Tuple[int, int]] = []
             if cid >= 0:
-                for r, (rid, row) in enumerate(self._queues[cid][off:off + take]):
+                for r, (rid, part, row) in enumerate(queues[cid][off:off + take]):
                     xt[s, r] = row
-                    ids_s.append(rid)
-            slot_ids.append(ids_s)
+                    entries.append((rid, part))
+                    ages.append((now - self._reqs[rid].ts) * 1e3)
+            slot_entries.append(entries)
 
         cell_idx = np.maximum(plan.slot_cell, 0)     # padding slots: ignored rows
-        dec = np.asarray(self._evaluate(jnp.asarray(xt),
-                                        jnp.asarray(cell_idx), plan))
-
-        results: Dict[int, np.ndarray] = {}
-        t, s_count = self.bank.n_tasks, self.bank.n_sub
-        for s, ids_s in enumerate(slot_ids):
-            for r, rid in enumerate(ids_s):
-                results[rid] = dec[s, r].reshape(t, s_count)
-        for q in self._queues:
-            q.clear()                                # plan consumed everything
+        dec = self._evaluate(jnp.asarray(xt), jnp.asarray(cell_idx), plan)
+        self._inflight = (plan, slot_entries, dec)
+        self._record_wave(plan, ages)
         self.counters["steps"] += 1
-        self.counters["served"] += plan.n_requests
+        return True
+
+    def finish_step(self) -> Dict[int, np.ndarray]:
+        """Collect the in-flight wave (blocking).
+
+        Returns ``{request_id: (n_tasks, n_sub) decision block}`` for every
+        request COMPLETED by this wave — an overlap request whose second
+        part is still queued stays pending and is returned by the wave that
+        serves its last part.  Blending (``sum_p w_p * part_p``) happens
+        here, in fixed part order, in f32.
+        """
+        if self._inflight is None:
+            return {}
+        plan, slot_entries, dec = self._inflight
+        self._inflight = None
+        dec = np.asarray(dec)
+        t, s_count = self.bank.n_tasks, self.bank.n_sub
+        results: Dict[int, np.ndarray] = {}
+        for s, entries in enumerate(slot_entries):
+            for r, (rid, part) in enumerate(entries):
+                req = self._reqs[rid]
+                req.vals[part] = dec[s, r].reshape(t, s_count)
+                req.left -= 1
+                if req.left == 0:
+                    out = req.weights[0] * req.vals[0]
+                    for p in range(1, len(req.vals)):
+                        out = out + req.weights[p] * req.vals[p]
+                    results[rid] = out
+                    del self._reqs[rid]
+        self.counters["served"] += len(results)
+        self.counters["served_rows"] += plan.n_requests
+        # counted here, with served_rows, so stats() ratios stay consistent
+        # while a wave is in flight
         self.counters["launched_rows"] += plan.n_slots * plan.m_pad
+        return results
+
+    def step(self) -> Dict[int, np.ndarray]:
+        """Synchronous drain: dispatch (unless a wave is already in flight)
+        and collect.  Bitwise-identical to the pre-async engine."""
+        if self._inflight is None:
+            self.begin_step()
+        return self.finish_step()
+
+    def _record_wave(self, plan: WavePlan, ages: List[float]) -> None:
+        a = np.asarray(ages, np.float64)
+        hist = np.bincount(np.searchsorted(AGE_BUCKETS_MS, a, side="right"),
+                           minlength=len(AGE_BUCKETS_MS) + 1)
+        self.wave_stats.append({
+            "n_rows": plan.n_requests,
+            "n_slots": plan.n_slots,
+            "m_pad": plan.m_pad,
+            "occupancy": plan.n_requests / max(plan.n_slots * plan.m_pad, 1),
+            "oldest_ms": float(a.max()) if a.size else 0.0,
+            "age_ms_mean": float(a.mean()) if a.size else 0.0,
+            "age_hist": hist.tolist(),
+        })
+
+    # -------------------------------------------------- latency-bounded run
+    def should_launch(self, deadline_ms: Optional[float] = None,
+                      now: Optional[float] = None) -> bool:
+        """The launch policy: queued rows fill a bucketed wave, OR the
+        oldest queued request's age crosses the deadline."""
+        rows = self.pending
+        if rows == 0:
+            return False
+        if rows >= self.fill_rows:
+            return True
+        deadline_ms = self.deadline_ms if deadline_ms is None else deadline_ms
+        return (deadline_ms is not None
+                and self.oldest_age_ms(now) >= deadline_ms)
+
+    def run(self, traffic: Iterable[Optional[np.ndarray]],
+            deadline_ms: Optional[float] = None) -> Dict[int, np.ndarray]:
+        """Latency-bounded async serving over an arrival stream.
+
+        ``traffic`` yields request batches ((m, d) raw-feature arrays);
+        yield ``None`` or an empty batch as an idle tick so the deadline
+        can force a partially-filled launch.  Launches follow
+        :meth:`should_launch`; each one is dispatched right after the
+        PREVIOUS wave is collected, so admission and host routing/packing
+        overlap device work.  Exhausting ``traffic`` drains everything.
+        Returns ``{request_id: blended (n_tasks, n_sub) decision block}``
+        for every submitted request.
+        """
+        results: Dict[int, np.ndarray] = {}
+        for batch in traffic:
+            if batch is not None and np.size(batch):
+                self.submit(batch)
+            if self.should_launch(deadline_ms):
+                if self._inflight is not None:
+                    results.update(self.finish_step())
+                self.begin_step()
+        if self._inflight is not None:
+            results.update(self.finish_step())
+        while self.pending:
+            results.update(self.step())
         return results
 
     def _evaluate(self, xt: Array, cell_idx: Array, plan: WavePlan) -> Array:
@@ -253,8 +483,11 @@ class SVMEngine:
         """(m, d) -> (m, n_tasks, n_sub): submit + drain, original order."""
         ids = self.submit(x)
         results: Dict[int, np.ndarray] = {}
-        while self.pending:
+        while self.pending or self._inflight is not None:
             results.update(self.step())
+        if ids.size == 0:
+            return np.zeros((0, self.bank.n_tasks, self.bank.n_sub),
+                            np.float32)
         return np.stack([results[int(i)] for i in ids])
 
     def predict_label(self, x: np.ndarray,
@@ -269,9 +502,19 @@ class SVMEngine:
 
     def stats(self) -> dict:
         out = dict(self.counters)
-        out["pad_fraction"] = 1.0 - (out.get("served", 0)
-                                     / max(out.get("launched_rows", 0), 1))
+        out["routing"] = "overlap" if self.overlap else "nearest"
+        launched = out.get("launched_rows", 0)
+        out["pad_fraction"] = (1.0 - out.get("served_rows", 0) / launched
+                               if launched else 0.0)
         out["cached_d2_waves"] = len(self._d2_cache)
         out["cached_d2_bytes"] = int(sum(a.size * a.dtype.itemsize
                                          for a in self._d2_cache.values()))
+        out["waves"] = len(self.wave_stats)
+        if self.wave_stats:
+            out["occupancy_mean"] = float(
+                np.mean([w["occupancy"] for w in self.wave_stats]))
+            out["age_ms_max"] = float(
+                max(w["oldest_ms"] for w in self.wave_stats))
+            out["age_hist"] = np.sum(
+                [w["age_hist"] for w in self.wave_stats], axis=0).tolist()
         return out

@@ -1,0 +1,394 @@
+"""Property-based conformance suite for the async, overlap-routed engine.
+
+Blended decisions and async interleavings are where silent wrongness
+hides, so the engine's serving contract is pinned by randomized
+properties rather than a handful of fixed examples:
+
+  * **async ≡ sync** — draining the same request batches through the
+    double-buffered begin/finish pipeline (admission while a wave is in
+    flight) is BITWISE identical to the strictly synchronous
+    submit+step() drain: interleaving admission with device work must
+    change neither wave composition nor numerics;
+  * **overlap blending** — the engine's 2-cell blended decision equals
+    the explicit two-cell reference (per-cell
+    ``ModelBank.cell_model().decision_function`` weighted by
+    :func:`blend_weights`) to f32 tolerance, and is EXACT (bitwise, at
+    the padded launch shapes) when the two cells are equidistant;
+  * **conservation** — across arbitrary legal interleavings of
+    submit / begin_step / finish_step / step / run, every submitted
+    request id is returned exactly once: none dropped, none double-served;
+  * **tie-breaking** — ``_top2_chunk``'s documented rule (lowest center
+    index wins; shared by the overlap cell builder and the engine's
+    router) at exactly-equidistant rows, duplicated centers included;
+  * **deadline stepper** — with an injected clock, ``run`` launches a
+    partially-filled wave exactly when the oldest queued request crosses
+    ``deadline_ms``, and fills trigger without a deadline.
+
+Strategies draw a seed (plus small structural knobs) and derive the
+request interleavings, batch sizes and deadlines from ``np.random``
+— this keeps the suite running under ``tests/_hypothesis_compat``'s
+fallback on bare interpreters.  Quick profiles run in tier-1; the large
+profiles are marked ``slow``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.pipeline.assign import _top2_chunk, nearest_top2, nearest_top2_dists
+from repro.serve.model_bank import ModelBank
+from repro.serve.svm_engine import SVMEngine, blend_weights
+
+QUICK_EXAMPLES = 8
+SLOW_EXAMPLES = 40
+
+_BANKS: dict = {}
+
+
+def _bank(seed: int, n_cells: int = 3, t_count: int = 2, s_count: int = 1,
+          routing: str = "overlap"):
+    """Small bank + clustered query pool (cached: few jit shapes, fast draws)."""
+    key = (seed, n_cells, t_count, s_count, routing)
+    if key not in _BANKS:
+        k, d = 16, 4
+        rng = np.random.default_rng(seed)
+        centers = rng.normal(size=(n_cells, d)).astype(np.float32) * 4.0
+        sv = (centers[:, None, :]
+              + rng.normal(size=(n_cells, k, d))).astype(np.float32)
+        coefs = rng.normal(size=(n_cells, k, t_count, s_count)).astype(np.float32)
+        gamma = rng.uniform(0.5, 3.0,
+                            size=(n_cells, t_count, s_count)).astype(np.float32)
+        mask = np.ones((n_cells, k), np.float32)
+        bank = ModelBank.from_cells(sv, mask, coefs, gamma, centers,
+                                    routing=routing)
+        pool = (centers[rng.integers(0, n_cells, 64)]
+                + rng.normal(size=(64, d)) * 1.5).astype(np.float32)
+        _BANKS[key] = (bank, pool)
+    return _BANKS[key]
+
+
+def _batches(rng: np.random.Generator, pool: np.ndarray, n_batches: int):
+    """Random request batches drawn (with replacement) from the query pool."""
+    out = []
+    for _ in range(n_batches):
+        m = int(rng.integers(1, 13))
+        out.append(pool[rng.integers(0, pool.shape[0], m)])
+    return out
+
+
+def _sync_drain(eng: SVMEngine, batches):
+    results = {}
+    for b in batches:
+        eng.submit(b)
+        results.update(eng.step())
+    return results
+
+
+def _async_drain(eng: SVMEngine, batches):
+    """Double-buffered pipeline: wave i is in flight while batch i+1 is
+    routed and admitted — same per-wave request sets as the sync drain."""
+    results = {}
+    for i, b in enumerate(batches):
+        eng.submit(b)
+        if i > 0:
+            results.update(eng.finish_step())   # collect wave i-1 ...
+        eng.begin_step()                        # ... dispatch wave i
+    results.update(eng.finish_step())
+    return results
+
+
+def _assert_same_results(got: dict, want: dict, exact: bool = True):
+    assert sorted(got) == sorted(want)
+    for rid in want:
+        if exact:
+            np.testing.assert_array_equal(got[rid], want[rid])
+        else:
+            np.testing.assert_allclose(got[rid], want[rid], atol=1e-5)
+
+
+class TestAsyncConformance:
+    """(a) async drain is bitwise-identical to the synchronous drain."""
+
+    @settings(max_examples=QUICK_EXAMPLES, deadline=None)
+    @given(seed=st.integers(0, 2 ** 20), overlap=st.booleans())
+    def test_async_bitwise_equals_sync_drain(self, seed, overlap):
+        bank, pool = _bank(seed % 3)
+        rng = np.random.default_rng(seed)
+        batches = _batches(rng, pool, int(rng.integers(1, 5)))
+        sync = _sync_drain(SVMEngine(bank, fused=False, overlap=overlap),
+                           batches)
+        awf = _async_drain(SVMEngine(bank, fused=False, overlap=overlap),
+                           batches)
+        _assert_same_results(awf, sync, exact=True)
+
+    @settings(max_examples=QUICK_EXAMPLES, deadline=None)
+    @given(seed=st.integers(0, 2 ** 20))
+    def test_submit_while_in_flight_is_not_lost_or_reordered(self, seed):
+        """Admission DURING an in-flight wave lands in the next wave and
+        serves with the same numerics as a fresh engine serving it alone."""
+        bank, pool = _bank(seed % 3)
+        rng = np.random.default_rng(seed)
+        b0, b1 = _batches(rng, pool, 2)
+        eng = SVMEngine(bank, fused=False)
+        ids0 = eng.submit(b0)
+        eng.begin_step()
+        ids1 = eng.submit(b1)          # legal mid-flight
+        first = eng.finish_step()
+        assert set(first) == set(int(i) for i in ids0)
+        second = eng.step()
+        assert set(second) == set(int(i) for i in ids1)
+        # wave composition for b1 matches a fresh sync engine's first wave
+        ref_eng = SVMEngine(bank, fused=False)
+        ref_ids = ref_eng.submit(b1)
+        ref = ref_eng.step()
+        for rid, ref_rid in zip(map(int, ids1), map(int, ref_ids)):
+            np.testing.assert_array_equal(second[rid], ref[ref_rid])
+
+    @pytest.mark.slow
+    @settings(max_examples=SLOW_EXAMPLES, deadline=None)
+    @given(seed=st.integers(0, 2 ** 24), overlap=st.booleans())
+    def test_async_bitwise_equals_sync_drain_large_profile(self, seed, overlap):
+        bank, pool = _bank(seed % 3)
+        rng = np.random.default_rng(seed)
+        batches = _batches(rng, pool, int(rng.integers(1, 7)))
+        sync = _sync_drain(SVMEngine(bank, fused=False, overlap=overlap),
+                           batches)
+        awf = _async_drain(SVMEngine(bank, fused=False, overlap=overlap),
+                           batches)
+        _assert_same_results(awf, sync, exact=True)
+
+
+class TestOverlapBlending:
+    """(b) overlap blending equals the explicit two-cell reference."""
+
+    @settings(max_examples=QUICK_EXAMPLES, deadline=None)
+    @given(seed=st.integers(0, 2 ** 20))
+    def test_blend_matches_two_cell_decision_function(self, seed):
+        bank, pool = _bank(seed % 3)
+        rng = np.random.default_rng(seed)
+        q = pool[rng.integers(0, pool.shape[0], int(rng.integers(2, 16)))]
+        eng = SVMEngine(bank, fused=False)
+        assert eng.overlap                     # bank records routing=overlap
+        dec = eng.predict(q)
+        c1, c2, d1, d2 = nearest_top2_dists(q, np.asarray(bank.centers))
+        w1, w2 = blend_weights(d1, d2)
+        for i in range(q.shape[0]):
+            a = np.asarray(bank.cell_model(int(c1[i]))
+                           .decision_function(jnp.asarray(q[i:i + 1])))[0]
+            b = np.asarray(bank.cell_model(int(c2[i]))
+                           .decision_function(jnp.asarray(q[i:i + 1])))[0]
+            np.testing.assert_allclose(dec[i], w1[i] * a + w2[i] * b,
+                                       atol=1e-5)
+
+    def test_equal_weights_exact(self):
+        """Duplicated centers: every query is exactly equidistant, weights
+        are exactly (0.5, 0.5), and the blend is BITWISE 0.5*(a + b) of the
+        per-cell decisions at the engine's own padded launch shapes."""
+        rng = np.random.default_rng(7)
+        k, d, p = 16, 4, 2
+        center = rng.normal(size=(1, d)).astype(np.float32)
+        centers = np.repeat(center, 2, axis=0)          # identical pair
+        sv = rng.normal(size=(2, k, d)).astype(np.float32) + center
+        coefs = rng.normal(size=(2, k, p, 1)).astype(np.float32)
+        gamma = rng.uniform(0.5, 2.0, size=(2, p, 1)).astype(np.float32)
+        mask = np.ones((2, k), np.float32)
+        bank = ModelBank.from_cells(sv, mask, coefs, gamma, centers,
+                                    routing="overlap")
+        m = 8                                           # == one padded slot
+        q = (center + rng.normal(size=(m, d))).astype(np.float32)
+
+        eng = SVMEngine(bank, fused=False, row_bucket=8)
+        dec = eng.predict(q)
+        assert eng.counters["steps"] == 1               # both parts, one wave
+        c1, c2, d1, d2 = nearest_top2_dists(q, centers)
+        assert (d1 == d2).all() and (c1 == 0).all() and (c2 == 1).all()
+        w1, w2 = blend_weights(d1, d2)
+        assert (w1 == np.float32(0.5)).all() and (w2 == np.float32(0.5)).all()
+        # per-cell reference at the SAME padded shape (m == m_pad == 8)
+        ref0 = np.asarray(bank.cell_model(0).decision_function(jnp.asarray(q)))
+        ref1 = np.asarray(bank.cell_model(1).decision_function(jnp.asarray(q)))
+        want = np.float32(0.5) * ref0 + np.float32(0.5) * ref1
+        np.testing.assert_array_equal(dec, want)        # bitwise
+
+    def test_nearest_bank_serves_exact_1nn(self):
+        """voronoi<5 banks record routing=nearest: the engine must fall
+        back to the old single-cell path bitwise, no blending."""
+        bank_o, pool = _bank(5, routing="overlap")
+        import dataclasses
+        bank_n = dataclasses.replace(bank_o, routing="nearest")
+        # near-boundary queries: midpoints of center pairs (+ tiny noise),
+        # so the second cell's blend weight cannot underflow to zero
+        rng = np.random.default_rng(5)
+        c = np.asarray(bank_o.centers)
+        q = np.concatenate([
+            (c[[0]] + c[[1]]) / 2, (c[[1]] + c[[2]]) / 2,
+            (c[[0]] + c[[2]]) / 2,
+        ]) + rng.normal(size=(3, c.shape[1])).astype(np.float32) * 0.05
+        q = q.astype(np.float32)
+        eng = SVMEngine(bank_n, fused=False)
+        assert not eng.overlap
+        dec = eng.predict(q)
+        ref = SVMEngine(bank_o, fused=False, overlap=False).predict(q)
+        np.testing.assert_array_equal(dec, ref)
+        # and it differs from the blended path (the blend is real)
+        blended = SVMEngine(bank_o, fused=False).predict(q)
+        assert np.abs(blended - dec).max() > 0
+
+    def test_single_cell_bank_falls_back_to_1nn(self):
+        bank, pool = _bank(6, n_cells=1, routing="nearest")
+        import dataclasses
+        eng = SVMEngine(dataclasses.replace(bank, routing="overlap"),
+                        fused=False)
+        assert not eng.overlap                 # no second center to blend
+        dec = eng.predict(pool[:4])
+        assert np.isfinite(dec).all()
+
+
+class TestConservation:
+    """(c) no request is ever dropped or double-served."""
+
+    @settings(max_examples=QUICK_EXAMPLES, deadline=None)
+    @given(seed=st.integers(0, 2 ** 20), overlap=st.booleans())
+    def test_every_request_served_exactly_once(self, seed, overlap):
+        bank, pool = _bank(seed % 3)
+        rng = np.random.default_rng(seed)
+        eng = SVMEngine(bank, fused=False, overlap=overlap)
+        submitted: set = set()
+        served: list = []
+        for _ in range(int(rng.integers(4, 16))):
+            op = rng.integers(0, 4)
+            if op == 0:                                    # submit a batch
+                b = pool[rng.integers(0, pool.shape[0], int(rng.integers(1, 9)))]
+                submitted.update(int(i) for i in eng.submit(b))
+            elif op == 1 and not eng.in_flight:            # dispatch
+                eng.begin_step()
+            elif op == 2:                                  # collect
+                served.extend(eng.finish_step())
+            else:                                          # sync step
+                served.extend(eng.step())
+        while eng.pending or eng.in_flight:                # drain
+            served.extend(eng.step())
+        assert len(served) == len(set(served))             # never double-served
+        assert set(served) == submitted                    # never dropped
+        assert eng.counters["served"] == eng.counters["submitted"]
+
+    @settings(max_examples=QUICK_EXAMPLES, deadline=None)
+    @given(seed=st.integers(0, 2 ** 20), deadline_ms=st.floats(1.0, 50.0))
+    def test_run_conserves_requests_under_deadlines(self, seed, deadline_ms):
+        """The latency-bounded stepper serves everything exactly once for
+        any arrival pattern / deadline combination (fake clock)."""
+        bank, pool = _bank(seed % 3)
+        rng = np.random.default_rng(seed)
+        clk = [0.0]
+        eng = SVMEngine(bank, fused=False, deadline_ms=deadline_ms,
+                        clock=lambda: clk[0])
+        n_events = int(rng.integers(3, 12))
+        expect = 0
+
+        def traffic():
+            nonlocal expect
+            for _ in range(n_events):
+                clk[0] += float(rng.uniform(0.0, 0.02))    # 0-20 ms per tick
+                if rng.random() < 0.7:
+                    b = pool[rng.integers(0, pool.shape[0],
+                                          int(rng.integers(1, 9)))]
+                    expect += b.shape[0]
+                    yield b
+                else:
+                    yield None                             # idle tick
+
+        results = eng.run(traffic())
+        assert len(results) == expect
+        assert sorted(results) == list(range(expect))      # ids 0..n-1, once
+        assert eng.pending == 0 and not eng.in_flight
+
+
+class TestTop2TieBreak:
+    """Satellite: the documented tie-break at exactly-equidistant rows."""
+
+    def test_duplicated_centers_deterministic_pair(self):
+        rng = np.random.default_rng(11)
+        c = rng.normal(size=(1, 3)).astype(np.float32)
+        centers = np.concatenate([c, c, c + 10.0])         # dup at 0 and 1
+        x = (c + rng.normal(size=(9, 3))).astype(np.float32)
+        nn1, nn2, d1, d2 = _top2_chunk(x.copy(), centers)
+        assert (nn1 == 0).all() and (nn2 == 1).all()       # lowest index wins
+        np.testing.assert_array_equal(d1, d2)              # exactly tied
+        # chunking cannot change the rule
+        s1, s2 = nearest_top2(x, centers, chunk_size=2)
+        np.testing.assert_array_equal(s1, nn1)
+        np.testing.assert_array_equal(s2, nn2)
+
+    def test_geometrically_equidistant_row(self):
+        centers = np.asarray([[-1.0, 0.0], [1.0, 0.0], [0.0, 9.0]],
+                             np.float32)
+        x = np.asarray([[0.0, 0.5], [0.0, -2.0]], np.float32)  # on the bisector
+        nn1, nn2, d1, d2 = nearest_top2_dists(x, centers)
+        assert (nn1 == 0).all() and (nn2 == 1).all()
+        np.testing.assert_array_equal(d1, d2)
+        w1, w2 = blend_weights(d1, d2)
+        assert (w1 == np.float32(0.5)).all() and (w2 == np.float32(0.5)).all()
+
+    def test_engine_router_shares_the_assign_code_path(self):
+        """route_top2 must agree with pipeline.assign.nearest_top2_dists on
+        the bank's own centers — same ids, same distances, same weights."""
+        bank, pool = _bank(12)
+        eng = SVMEngine(bank, fused=False)
+        xs = (pool[:16] - bank.feat_mean) / bank.feat_std
+        c1, c2, w1, w2 = eng.route_top2(xs)
+        r1, r2, rd1, rd2 = nearest_top2_dists(xs, np.asarray(bank.centers))
+        np.testing.assert_array_equal(c1, r1.astype(np.int64))
+        np.testing.assert_array_equal(c2, r2.astype(np.int64))
+        e1, e2 = blend_weights(rd1, rd2)
+        np.testing.assert_array_equal(w1, e1)
+        np.testing.assert_array_equal(w2, e2)
+
+
+class TestDeadlineStepper:
+    def test_deadline_forces_partial_launch(self):
+        bank, pool = _bank(13)
+        clk = [0.0]
+        eng = SVMEngine(bank, fused=False, deadline_ms=5.0,
+                        clock=lambda: clk[0])
+
+        def traffic():
+            yield pool[:3]                     # far below fill_rows
+            clk[0] += 0.004
+            yield None                         # 4 ms: hold
+            assert eng.stats().get("waves", 0) == 0
+            clk[0] += 0.002
+            yield None                         # 6 ms: deadline launch
+
+        results = eng.run(traffic())
+        assert len(results) == 3
+        stats = eng.stats()
+        assert stats["waves"] == 1
+        assert stats["age_ms_max"] >= 5.0
+        assert 0.0 < stats["occupancy_mean"] < 1.0
+        assert sum(stats["age_hist"]) == eng.counters["served_rows"]
+
+    def test_fill_forces_launch_without_deadline(self):
+        bank, pool = _bank(13)
+        eng = SVMEngine(bank, fused=False, fill_rows=16)
+
+        def traffic():
+            yield pool[:4]
+            assert eng.stats().get("waves", 0) == 0    # 4 or 8 rows < 16
+            yield pool[4:24]                           # fills
+
+        results = eng.run(traffic())
+        assert len(results) == 24
+        assert eng.stats()["waves"] >= 1
+
+    def test_wave_stats_schema(self):
+        bank, pool = _bank(13)
+        eng = SVMEngine(bank, fused=False)
+        eng.submit(pool[:10])
+        eng.step()
+        (w,) = eng.wave_stats
+        assert set(w) == {"n_rows", "n_slots", "m_pad", "occupancy",
+                          "oldest_ms", "age_ms_mean", "age_hist"}
+        assert w["n_rows"] == sum(w["age_hist"])
+        assert 0.0 < w["occupancy"] <= 1.0

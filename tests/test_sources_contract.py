@@ -1,0 +1,137 @@
+"""ChunkSource contract conformance: ONE test class, every implementation.
+
+``repro.pipeline.dataset`` promises a single contract ("x lives
+anywhere"): ``iter_chunks(chunk_size)`` yields ``(start, chunk)`` pairs in
+dataset order, covering every row exactly once, with chunks never longer
+than ``chunk_size`` (but possibly shorter at shard boundaries); and
+``gather(ids)`` returns the rows of ``ids`` IN THE GIVEN ORDER.  The
+streaming builders' bitwise-parity guarantees all lean on these
+invariants, but until now each source was exercised ad hoc in
+``test_pipeline.py`` — here the same parametrized class runs against
+every implementation, so a new source (or a regression in an old one)
+is held to the full contract automatically.
+
+The shard layout for ``ShardedNpzSource`` is deliberately uneven (a
+1-row shard in the middle) so short-chunk emission at shard boundaries
+is exercised, and ``ScaledSource`` wraps the sharded source so the view
+composes with the trickiest base.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.pipeline.dataset import (ArraySource, ChunkSource, MemmapSource,
+                                    ScaledSource, ShardedNpzSource, as_source)
+
+N, D = 103, 5                      # deliberately not a chunk multiple
+SHARD_SIZES = (40, 1, 37, 25)      # uneven; includes a 1-row shard
+CHUNK_SIZES = (1, 7, 16, 64, 200)  # below/above shard sizes and n
+
+
+@pytest.fixture(scope="module")
+def x() -> np.ndarray:
+    return np.random.default_rng(0).normal(size=(N, D)).astype(np.float32)
+
+
+@pytest.fixture(scope="module")
+def scale() -> tuple:
+    rng = np.random.default_rng(1)
+    return (rng.normal(size=D).astype(np.float32),
+            rng.uniform(0.5, 2.0, size=D).astype(np.float32))
+
+
+@pytest.fixture(
+    scope="module",
+    params=["array", "memmap", "sharded_npz", "scaled"],
+)
+def source(request, x, scale, tmp_path_factory) -> ChunkSource:
+    kind = request.param
+    if kind == "array":
+        return ArraySource(x)
+    if kind == "memmap":
+        path = tmp_path_factory.mktemp("mm") / "x.npy"
+        np.save(path, x)
+        return MemmapSource(path)
+    # sharded: uneven shard sizes, 1-row shard included
+    d = tmp_path_factory.mktemp("npz")
+    paths, lo = [], 0
+    for i, s in enumerate(SHARD_SIZES):
+        p = d / f"shard{i}.npz"
+        np.savez(p, x=x[lo:lo + s])
+        paths.append(str(p))
+        lo += s
+    assert lo == N
+    sharded = ShardedNpzSource(paths)
+    if kind == "sharded_npz":
+        return sharded
+    mean, std = scale
+    return ScaledSource(sharded, mean, std)
+
+
+@pytest.fixture(scope="module")
+def expected(request, source, x, scale) -> np.ndarray:
+    """What the source must present: raw rows, or the scaled view."""
+    if isinstance(source, ScaledSource):
+        mean, std = scale
+        return ((x - mean) / std).astype(np.float32)
+    return x
+
+
+class TestChunkSourceContract:
+    def test_shape_properties(self, source, expected):
+        assert source.n_rows == N
+        assert source.dim == D
+        assert source.shape == (N, D)
+
+    @pytest.mark.parametrize("chunk_size", CHUNK_SIZES)
+    def test_iter_chunks_covers_every_row_exactly_once_in_order(
+            self, source, expected, chunk_size):
+        seen = np.zeros(N, np.int64)
+        pos = 0
+        for lo, chunk in source.iter_chunks(chunk_size):
+            assert lo == pos                      # contiguous, dataset order
+            assert chunk.ndim == 2 and chunk.shape[1] == D
+            assert chunk.dtype == np.float32
+            assert 1 <= chunk.shape[0] <= chunk_size
+            np.testing.assert_array_equal(chunk, expected[lo:lo + chunk.shape[0]])
+            seen[lo:lo + chunk.shape[0]] += 1
+            pos = lo + chunk.shape[0]
+        assert pos == N
+        assert (seen == 1).all()                  # exactly once
+
+    def test_chunk_size_invariance(self, source):
+        """Concatenating the chunks gives the same matrix for EVERY chunk
+        size — the invariant all streaming bitwise-parity claims rest on."""
+        ref = np.concatenate(
+            [c for _, c in source.iter_chunks(CHUNK_SIZES[0])])
+        for cs in CHUNK_SIZES[1:]:
+            got = np.concatenate([c for _, c in source.iter_chunks(cs)])
+            np.testing.assert_array_equal(got, ref)
+
+    def test_gather_preserves_given_order(self, source, expected):
+        rng = np.random.default_rng(2)
+        ids = rng.permutation(N)[: N // 2]        # unsorted, shard-crossing
+        got = source.gather(ids)
+        assert got.dtype == np.float32
+        np.testing.assert_array_equal(got, expected[ids])
+
+    def test_gather_repeated_and_single_ids(self, source, expected):
+        ids = np.asarray([5, 5, 0, N - 1, 5], np.int64)   # dups, both ends
+        np.testing.assert_array_equal(source.gather(ids), expected[ids])
+        np.testing.assert_array_equal(source.gather(np.asarray([3])),
+                                      expected[[3]])
+
+    def test_gather_matches_iter_chunks(self, source):
+        """The two access paths must present identical bytes."""
+        via_iter = np.concatenate([c for _, c in source.iter_chunks(16)])
+        via_gather = source.gather(np.arange(N, dtype=np.int64))
+        np.testing.assert_array_equal(via_gather, via_iter)
+
+    def test_materialize_is_full_in_order_gather(self, source, expected):
+        np.testing.assert_array_equal(source.materialize(), expected)
+
+
+def test_as_source_is_identity_on_sources(x):
+    src = ArraySource(x)
+    assert as_source(src) is src
