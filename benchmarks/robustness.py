@@ -1,0 +1,157 @@
+"""Robustness-layer overhead: what fault tolerance costs on the hot paths.
+
+Three prices worth knowing before turning the features on in production:
+
+  * **checkpoint** — the crash-safe save (tmp dir + fsync + per-leaf
+    blake2b checksums + atomic rename) and the verifying restore, per MB
+    of model state.  The checksum verify is the read-side overhead every
+    resume now pays;
+  * **hot swap** — serving throughput with zero swaps vs a bank swap
+    every K waves (same traffic): the swap itself is O(queued) re-routing
+    plus a queue rebuild, so the steady-state tax should be ~zero;
+  * **shedding** — an overloaded `run(..., max_queue=...)`: how fast the
+    engine turns away traffic it cannot serve (the shed path must stay
+    cheap or overload makes overload worse), plus the served/shed split.
+
+Quick by default; REPRO_BENCH_FULL=1 for bigger shapes.  Writes
+``BENCH_robustness.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from benchmarks.common import QUICK, Report, timeit
+from repro.serve.model_bank import ModelBank
+from repro.serve.svm_engine import OverloadError, SVMEngine
+from repro.train import checkpoint as ckpt
+
+OUT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_robustness.json")
+
+
+def _bank_and_traffic(n_cells, k, d, n_req, seed=0):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_cells, d)).astype(np.float32) * 5.0
+    sv = (centers[:, None, :]
+          + rng.normal(size=(n_cells, k, d))).astype(np.float32)
+    coefs = rng.normal(size=(n_cells, k, 3, 4)).astype(np.float32)
+    gammas = rng.uniform(0.6, 4.0, size=(n_cells, 3, 4)).astype(np.float32)
+    mask = np.ones((n_cells, k), np.float32)
+    bank = ModelBank.from_cells(sv, mask, coefs, gammas, centers)
+    owners = rng.integers(0, n_cells, n_req)
+    queries = (centers[owners]
+               + rng.normal(size=(n_req, d)) * 0.5).astype(np.float32)
+    return bank, queries
+
+
+def _serve(bank, queries, wave, swap_every=None, next_bank=None):
+    def run():
+        eng = SVMEngine(bank, fused=False)
+        version = int(bank.version)
+        res = {}
+        for i, lo in enumerate(range(0, queries.shape[0], wave)):
+            eng.submit(queries[lo:lo + wave])
+            if swap_every and (i + 1) % swap_every == 0:
+                version += 1
+                eng.swap_bank(next_bank.with_version(version))
+            res.update(eng.step())
+        while eng.pending or eng.in_flight:
+            res.update(eng.step())
+        return len(res), eng.stats()
+
+    return run
+
+
+def run(report: Report) -> None:
+    # ---- checkpoint save/restore ------------------------------------
+    n_leaf = (1 << 20) if QUICK else (1 << 23)       # 4 MB / 32 MB f32
+    tree = {"coefs": np.random.default_rng(0).normal(
+        size=(n_leaf,)).astype(np.float32)}
+    mb = tree["coefs"].nbytes / 2**20
+    d = tempfile.mkdtemp(prefix="bench_ckpt_")
+    try:
+        t_save = timeit(lambda: ckpt.save_checkpoint(d, 0, tree), repeats=3)
+        t_restore = timeit(
+            lambda: ckpt.restore_self_describing(d, step=0), repeats=3)
+        t_verify = timeit(lambda: ckpt.verify_step(d, 0), repeats=3)
+    finally:
+        shutil.rmtree(d, ignore_errors=True)
+    report.add("robustness", f"ckpt_save_{mb:.0f}MB", t_save,
+               mb_per_s=round(mb / t_save, 1))
+    report.add("robustness", f"ckpt_restore_{mb:.0f}MB", t_restore,
+               mb_per_s=round(mb / t_restore, 1))
+    report.add("robustness", f"ckpt_verify_{mb:.0f}MB", t_verify,
+               mb_per_s=round(mb / t_verify, 1))
+
+    # ---- hot swap under traffic -------------------------------------
+    n_cells, k, dim = (8, 256, 24) if QUICK else (16, 512, 32)
+    n_req = 2048 if QUICK else 8192
+    wave = 256
+    bank, queries = _bank_and_traffic(n_cells, k, dim, n_req)
+    alt = dataclasses.replace(bank, coefs=-np.asarray(bank.coefs))
+    swap_every = 2                                   # a swap every 2 waves
+
+    steady = _serve(bank, queries, wave)
+    swapping = _serve(bank, queries, wave, swap_every=swap_every,
+                      next_bank=alt)
+    steady()                                         # compile + warmup
+    swapping()
+    t_steady = timeit(steady, repeats=3)
+    t_swap = timeit(swapping, repeats=3)
+    n_served, swap_stats = swapping()
+    report.add("robustness", "serve_steady", t_steady,
+               rps=round(n_req / t_steady))
+    report.add("robustness", "serve_swapping", t_swap,
+               rps=round(n_req / t_swap), swaps=swap_stats["swaps"],
+               overhead=round(t_swap / t_steady - 1.0, 3))
+
+    # ---- overload shedding ------------------------------------------
+    def overloaded():
+        eng = SVMEngine(bank, fused=False, max_queue=wave)
+        served = shed = 0
+        for lo in range(0, queries.shape[0], 64):
+            try:
+                eng.submit(queries[lo:lo + 64])
+            except OverloadError:
+                shed += 64
+        while eng.pending or eng.in_flight:
+            served += len(eng.step())
+        return served, shed, eng.stats()
+
+    overloaded()
+    t_over = timeit(overloaded, repeats=3)
+    served, shed, over_stats = overloaded()
+    report.add("robustness", "overloaded_run", t_over,
+               served=served, shed=shed,
+               shed_rows=over_stats["shed_rows"])
+
+    payload = {
+        "quick": QUICK,
+        "checkpoint": {"mb": mb, "save_s": t_save, "restore_s": t_restore,
+                       "verify_s": t_verify,
+                       "save_mb_s": mb / t_save,
+                       "restore_mb_s": mb / t_restore},
+        "hot_swap": {"n_req": n_req, "wave": wave,
+                     "swap_every_waves": swap_every,
+                     "steady_rps": n_req / t_steady,
+                     "swapping_rps": n_req / t_swap,
+                     "swaps": swap_stats["swaps"],
+                     "requeued": swap_stats["swap_requeued"],
+                     "overhead_frac": t_swap / t_steady - 1.0},
+        "shedding": {"max_queue": wave, "served": served, "shed": shed,
+                     "trace_s": t_over},
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {OUT_PATH}")
+
+
+if __name__ == "__main__":
+    run(Report())

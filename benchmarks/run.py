@@ -18,7 +18,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
                     default="table1,table2,table3,table4,table10,gram_reuse,"
-                            "serve,cells")
+                            "serve,cells,robustness")
     args = ap.parse_args(argv)
     tables = args.tables.split(",")
     report = Report()
@@ -50,10 +50,13 @@ def main(argv=None) -> int:
     if "cells" in tables:
         from benchmarks import cell_build
         cell_build.run(report)
+    if "robustness" in tables:
+        from benchmarks import robustness
+        robustness.run(report)
 
     print(f"\n# done in {time.time() - t0:.0f}s")
     for t in ("table1", "table2", "table3", "table4", "table10", "gram_reuse",
-              "serve", "cells"):
+              "serve", "cells", "robustness"):
         md = report.table_markdown(t)
         if md:
             print(f"\n## {t}\n{md}")

@@ -4,17 +4,28 @@
 #   ./scripts/tier1.sh -m 'not slow'   # quick pass (extra args forwarded)
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+# Injected deadlocks in the fault suite must FAIL the gate, not hang it:
+# with pytest-timeout installed every test gets a hard cap; without it
+# the SIGALRM fallback in tests/conftest.py honours the same `timeout`
+# markers (the fault tests all carry one).
+TIMEOUT_ARGS=""
+if python -c 'import pytest_timeout' 2>/dev/null; then
+  TIMEOUT_ARGS="--timeout=120 --timeout-method=thread"
+fi
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+  $TIMEOUT_ARGS "$@"
 # The serving path (model bank + cell-routed engine), the async/overlap
-# serving conformance suite, the ChunkSource contract, the streaming
-# pipeline (bitwise cell-plan parity, wave training) and the staged
+# serving conformance suite (swap conservation included), the fault
+# injection suite (crash-safe checkpoints, wave preemption, hot swap,
+# overload shedding), the ChunkSource contract, the streaming pipeline
+# (bitwise cell-plan parity, wave training) and the staged
 # train->select->test API are part of the default gate: when extra args
 # filter the main run, still verify them explicitly (quick hypothesis
 # profiles only — the large profiles carry the slow marker).
 if [ "$#" -gt 0 ]; then
   PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
-    -m 'not slow' \
-    tests/test_serve_svm.py tests/test_serve_async.py \
+    $TIMEOUT_ARGS -m 'not slow' \
+    tests/test_serve_svm.py tests/test_serve_async.py tests/test_faults.py \
     tests/test_sources_contract.py tests/test_pipeline.py \
     tests/test_staged_api.py
 fi
@@ -41,9 +52,11 @@ PYTHONPATH=src python -m repro.cli select --model-dir "$SMOKE/model" \
   -S NPL_CONSTRAINT=0.05 > /dev/null
 PYTHONPATH=src python -m repro.cli test --data "$SMOKE/xte.npy" \
   --labels "$SMOKE/yte.npy" --model-dir "$SMOKE/model"
-# serve: cold-start the async engine from bank/ alone, latency-bounded
+# serve: cold-start the async engine from bank/ alone, latency-bounded,
+# with the hot-swap watcher and a bounded admission queue enabled
 PYTHONPATH=src python -m repro.cli serve --data "$SMOKE/xte.npy" \
   --model-dir "$SMOKE/model" --wave 16 -S DEADLINE_MS=5 \
+  -S SWAP_POLL_MS=50 -S MAX_QUEUE=4096 --swap-watch \
   --out "$SMOKE/pred.npy" > /dev/null
 PYTHONPATH=src python - "$SMOKE" <<'PY'
 import sys
@@ -53,4 +66,25 @@ yte = np.load(f"{sys.argv[1]}/yte.npy")
 assert pred.shape == yte.shape, (pred.shape, yte.shape)
 assert (pred == np.sign(yte)).mean() > 0.5, "serve predictions degenerate"
 PY
+
+# CLI failure modes: missing/incomplete artifacts must exit non-zero with
+# an actionable message (which stage to run), never a raw traceback
+if PYTHONPATH=src python -m repro.cli select \
+    --model-dir "$SMOKE/nomodel" 2> "$SMOKE/err.txt"; then
+  echo "tier1: select on a missing model dir must fail"; exit 1
+fi
+grep -q "missing 'train/'" "$SMOKE/err.txt"
+grep -q "repro.cli train" "$SMOKE/err.txt"
+if PYTHONPATH=src python -m repro.cli test --data "$SMOKE/xte.npy" \
+    --labels "$SMOKE/yte.npy" \
+    --model-dir "$SMOKE/nomodel" 2> "$SMOKE/err.txt"; then
+  echo "tier1: test on a missing model dir must fail"; exit 1
+fi
+grep -q "missing 'select/'" "$SMOKE/err.txt"
+mkdir -p "$SMOKE/torn/train"           # dir exists but artifact is torn
+if PYTHONPATH=src python -m repro.cli select \
+    --model-dir "$SMOKE/torn" 2> "$SMOKE/err.txt"; then
+  echo "tier1: select on a torn train artifact must fail"; exit 1
+fi
+
 echo "tier1: CLI smoke OK"

@@ -46,6 +46,13 @@ and ``python -m repro.cli serve`` — never the trainer; split off with
   DEADLINE_MS          float  latency bound for the async stepper: a wave
                        launches when it fills OR the oldest queued
                        request reaches this age.
+  MAX_QUEUE            int    admission-queue bound (launch rows): a
+                       submit that would overflow is rejected with a
+                       retry-able OverloadError instead of growing
+                       memory without bound.
+  SWAP_POLL_MS         float  hot-swap watcher poll interval for
+                       ``cli serve --swap-watch`` (how often the bank
+                       directory is checked for a newer version).
 
 Accepted for liquidSVM compatibility, no effect here
   DISPLAY, THREADS
@@ -118,12 +125,17 @@ _KEYS: Dict[str, ConfigKey] = {k.name: k for k in [
               serve=True),
     ConfigKey("DEADLINE_MS", "float", "async-stepper latency bound",
               serve=True, lo=0.0),
+    ConfigKey("MAX_QUEUE", "int", "admission-queue bound (sheds on overflow)",
+              serve=True, lo=1),
+    ConfigKey("SWAP_POLL_MS", "float", "hot-swap watcher poll interval",
+              serve=True, lo=0.0),
     ConfigKey("DISPLAY", "int", "verbosity (compat; ignored)", noop=True),
     ConfigKey("THREADS", "int", "thread count (compat; ignored)", noop=True),
 ]}
 
 _SELECT_NAMES = {"NPL_CONSTRAINT": "alpha", "NPL_CLASS": "npl_class"}
-_SERVE_NAMES = {"SERVE_OVERLAP": "overlap", "DEADLINE_MS": "deadline_ms"}
+_SERVE_NAMES = {"SERVE_OVERLAP": "overlap", "DEADLINE_MS": "deadline_ms",
+                "MAX_QUEUE": "max_queue", "SWAP_POLL_MS": "swap_poll_ms"}
 
 
 class ConfigError(ValueError):
@@ -188,7 +200,8 @@ def split_serve_keys(pairs: Dict[str, Any]
                      ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     """Partition raw key pairs into (non-serve pairs, engine kwargs).
 
-    Serve-stage keys (SERVE_OVERLAP, DEADLINE_MS) configure the
+    Serve-stage keys (SERVE_OVERLAP, DEADLINE_MS, MAX_QUEUE, SWAP_POLL_MS)
+    configure the
     :class:`repro.serve.SVMEngine`, not the trainer: callers that accept
     mixed string keys (the session front door, ``cli serve``) split them
     off here — validated/coerced — before ``apply_keys`` sees the rest.

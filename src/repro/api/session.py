@@ -406,12 +406,14 @@ class SelectResult:
 
     # ----------------------------------------------------------- serving
     def to_bank(self, drop_tol: float | None = 0.0, dtype: str = "f32",
-                dedup: bool = True):
+                dedup: bool = True, version: int = 0):
         """Compact into a serving ModelBank (cold-starts ``SVMEngine``).
 
         A ``VORONOI=5`` (overlap) fit records ``routing="overlap"`` in the
         bank, so the engine blends the 2 nearest cells' decisions by
         default — the 2-cell ownership the models were trained on.
+        ``version`` tags the bank for hot swapping
+        (``SVMEngine.swap_bank`` accepts strictly newer versions only).
         """
         from repro.serve.model_bank import _FAR, ModelBank
         n_slots = self.packed.n_slots
@@ -430,7 +432,7 @@ class SelectResult:
             feat_std=np.asarray(self.scaler.std, np.float32),
             classes=self.tasks.classes, pairs=self.tasks.pairs,
             scenario=self.config.scenario, default_sub=self.default_sub,
-            routing=routing)
+            routing=routing, version=version)
 
     # ------------------------------------------------------ persistence
     _ARRAYS = ("x_cells", "mask_cells", "coefs", "gamma", "lam", "tau",

@@ -70,6 +70,35 @@ def _emit(payload: dict) -> None:
     sys.stdout.write("\n")
 
 
+def _fail(msg: str) -> "SystemExit":
+    """Actionable operator error -> stderr + exit code 2 (not a traceback)."""
+    print(f"error: {msg}", file=sys.stderr)
+    raise SystemExit(2)
+
+
+def _load_artifact(model_dir: str, name: str, loader, produced_by: str):
+    """Load a staged artifact dir with actionable failure messages.
+
+    Missing, incomplete (no checkpoint step survived) and corrupt
+    (checksum/manifest verification failed) dirs all exit with code 2 and
+    say which stage to (re-)run, instead of surfacing a raw traceback.
+    """
+    from repro.train.checkpoint import CheckpointCorruptError
+
+    path = os.path.join(model_dir, name)
+    hint = f"run `python -m repro.cli {produced_by}` first"
+    if not os.path.isdir(path):
+        _fail(f"{path}: missing '{name}/' artifact — {hint}")
+    try:
+        return loader(path)
+    except FileNotFoundError as e:
+        _fail(f"{path}: incomplete '{name}/' artifact ({e}) — {hint}")
+    except CheckpointCorruptError as e:
+        _fail(f"{path}: corrupt '{name}/' artifact ({e}) — re-{hint}")
+    except ValueError as e:
+        _fail(f"{path}: not a valid '{name}/' artifact ({e}) — {hint}")
+
+
 # ------------------------------------------------------------------ train
 def cmd_train(args) -> int:
     from repro.api.config import apply_keys
@@ -118,7 +147,9 @@ def cmd_select(args) -> int:
     from repro.api.config import parse_keys
     from repro.api.session import TrainResult
 
-    tr = TrainResult.load(os.path.join(args.model_dir, "train"))
+    tr = _load_artifact(args.model_dir, "train", TrainResult.load,
+                        f"train --data ... --labels ... "
+                        f"--model-dir {args.model_dir}")
     rule, kwargs = None, {}
     sess_path = os.path.join(args.model_dir, "session.json")
     if os.path.exists(sess_path):
@@ -156,7 +187,8 @@ def cmd_select(args) -> int:
 def cmd_test(args) -> int:
     from repro.api.session import SelectResult
 
-    sel = SelectResult.load(os.path.join(args.model_dir, "select"))
+    sel = _load_artifact(args.model_dir, "select", SelectResult.load,
+                         f"select --model-dir {args.model_dir}")
     x = _load_data(args.data)
     y = np.load(args.labels)
     res = sel.test(x, y, chunk_size=args.chunk_size)
@@ -172,24 +204,60 @@ def cmd_serve(args) -> int:
 
     The bank's recorded routing mode (overlap for VORONOI=5 fits) applies
     unless overridden with ``-S SERVE_OVERLAP=...``; ``-S DEADLINE_MS=...``
-    bounds queueing latency.  ``--out`` writes predicted labels as .npy.
+    bounds queueing latency; ``-S MAX_QUEUE=...`` bounds admission (overflow
+    batches are shed, not queued).  ``--out`` writes predicted labels.
+
+    ``--swap-watch`` polls ``bank/`` every ``SWAP_POLL_MS`` (default 500)
+    between arrival bursts; when a STRICTLY newer bank version appears
+    (``select`` re-run, or an incremental ``repro.serve.refresh`` write),
+    it is hot-swapped mid-traffic — in-flight waves finish on the old
+    version, later admissions serve the new one.  A bank dir caught
+    mid-write is skipped and retried at the next poll.
     """
     from repro.api.config import split_serve_keys
     from repro.serve.model_bank import ModelBank
     from repro.serve.svm_engine import SVMEngine
+    from repro.train import checkpoint as ckpt_mod
     from repro.tasks.builder import combine_decisions
     import time as _time
 
     leftover, serve_kw = split_serve_keys(_parse_sets(args.set))
     if leftover:
-        raise SystemExit(f"serve only takes SERVE_OVERLAP/DEADLINE_MS keys, "
+        raise SystemExit(f"serve only takes SERVE_OVERLAP/DEADLINE_MS/"
+                         f"MAX_QUEUE/SWAP_POLL_MS keys, "
                          f"got {sorted(leftover)}")
-    bank = ModelBank.load(os.path.join(args.model_dir, "bank"))
+    bank_dir = os.path.join(args.model_dir, "bank")
+    bank = _load_artifact(args.model_dir, "bank", ModelBank.load,
+                          f"select --model-dir {args.model_dir}")
     eng = SVMEngine(bank, **serve_kw)
     src = _load_data(args.data)
 
+    poll_ms = serve_kw.get("swap_poll_ms") or 500.0
+    swaps_seen = {"polls": 0}
+
+    def _maybe_swap(last_poll: list) -> None:
+        now = _time.monotonic()
+        if (now - last_poll[0]) * 1e3 < poll_ms:
+            return
+        last_poll[0] = now
+        swaps_seen["polls"] += 1
+        try:
+            extra = ckpt_mod.peek_manifest(bank_dir)["extra"]
+            if int(extra.get("version", 0)) > int(eng.bank.version):
+                eng.swap_bank(ModelBank.load(bank_dir))
+        except (ckpt_mod.CheckpointCorruptError, FileNotFoundError,
+                OSError, ValueError):
+            pass                   # mid-write / torn bank: retry next poll
+
+    def traffic():
+        last_poll = [float("-inf")]
+        for _, chunk in src.iter_chunks(args.wave):
+            if args.swap_watch:
+                _maybe_swap(last_poll)
+            yield chunk
+
     t0 = _time.time()
-    results = eng.run(chunk for _, chunk in src.iter_chunks(args.wave))
+    results = eng.run(traffic())
     dt = _time.time() - t0
     dec = (np.stack([results[i] for i in sorted(results)]) if results
            else np.zeros((0, bank.n_tasks, bank.n_sub), np.float32))
@@ -205,6 +273,11 @@ def cmd_serve(args) -> int:
            "waves": stats.get("waves", 0),
            "occupancy_mean": stats.get("occupancy_mean"),
            "age_ms_max": stats.get("age_ms_max"),
+           "bank_version": stats["bank_version"],
+           "swaps": stats["swaps"],
+           "swap_requeued": stats["swap_requeued"],
+           "shed_rows": stats["shed_rows"],
+           "swap_polls": swaps_seen["polls"],
            "out": args.out, "model_dir": args.model_dir})
     return 0
 
@@ -255,8 +328,12 @@ def _build_parser() -> argparse.ArgumentParser:
                     help="arrival burst size fed to the stepper")
     vp.add_argument("--out", default=None,
                     help="write predicted labels to this .npy")
+    vp.add_argument("--swap-watch", action="store_true",
+                    help="poll bank/ for newer versions and hot-swap "
+                         "mid-traffic (interval: -S SWAP_POLL_MS)")
     vp.add_argument("-S", "--set", action="append", metavar="KEY=VALUE",
-                    help="SERVE_OVERLAP / DEADLINE_MS")
+                    help="SERVE_OVERLAP / DEADLINE_MS / MAX_QUEUE / "
+                         "SWAP_POLL_MS")
     vp.set_defaults(fn=cmd_serve)
     return p
 
@@ -268,7 +345,14 @@ def main(argv: Optional[List[str]] = None) -> int:
         print(describe_keys())
         return 0
     args = _build_parser().parse_args(argv)
-    return args.fn(args)
+    from repro.api.config import ConfigError
+    from repro.pipeline.dataset import DataSourceError
+    from repro.train.checkpoint import CheckpointCorruptError
+    try:
+        return args.fn(args)
+    except (ConfigError, DataSourceError, CheckpointCorruptError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
 
 
 if __name__ == "__main__":

@@ -138,7 +138,17 @@ def train_cells_waves(
     re-solving them — mid-fit fault tolerance for multi-hour cell sweeps.
     A mismatched fingerprint means a different run left the directory:
     its waves are ignored and re-solved.
+
+    Preemption survival: each wave is matched INDIVIDUALLY against the
+    directory (not just the latest step), so a kill at any point — mid
+    checkpoint write, mid solve, between waves — leaves only complete,
+    checksummed wave dirs behind; the re-run restores those and re-solves
+    the rest, and the solve being deterministic per wave makes the final
+    models bitwise identical to an uninterrupted run.  A wave dir that
+    fails checksum verification (torn write, bit rot) is re-solved, not
+    loaded.
     """
+    from repro.testing import faults
     from repro.train import checkpoint as ckpt_mod
 
     keys_out = wave_keys(cfg)
@@ -151,31 +161,40 @@ def train_cells_waves(
             f"wave_size {wave_size} must divide over {n_dev} devices")
     n_waves = -(-n_slots // wave_size)
 
-    done = -1
+    restorable = set()
     if ckpt_dir is not None:
-        latest = ckpt_mod.latest_step(ckpt_dir)
-        if latest is not None:
-            extra = ckpt_mod.peek_manifest(ckpt_dir, latest)["extra"]
+        for s in ckpt_mod.list_steps(ckpt_dir):
+            try:
+                extra = ckpt_mod.peek_manifest(ckpt_dir, s)["extra"]
+            except ckpt_mod.CheckpointCorruptError:
+                continue
             if (extra.get("wave_size") == wave_size
                     and extra.get("n_slots") == n_slots
                     and extra.get("fingerprint") == fingerprint):
-                done = latest
+                restorable.add(s)
 
     outs = []
     for w in range(n_waves):
         lo = w * wave_size
-        if w <= done:                      # restored, not re-solved
-            man = ckpt_mod.peek_manifest(ckpt_dir, w)
-            target = {k: np.zeros(s, np.dtype(dt)) for k, s, dt in zip(
-                sorted(keys_out), man["shapes"], man["dtypes"])}
-            tree, _, _ = ckpt_mod.restore_checkpoint(ckpt_dir, target, step=w)
-            res = tuple(np.asarray(tree[k]) for k in keys_out)
-        else:
+        faults.fire("trainer.wave.start", wave=w)
+        res = None
+        if w in restorable:
+            try:
+                man = ckpt_mod.peek_manifest(ckpt_dir, w)
+                target = {k: np.zeros(s, np.dtype(dt)) for k, s, dt in zip(
+                    sorted(keys_out), man["shapes"], man["dtypes"])}
+                tree, _, _ = ckpt_mod.restore_checkpoint(
+                    ckpt_dir, target, step=w)
+                res = tuple(np.asarray(tree[k]) for k in keys_out)
+            except ckpt_mod.CheckpointCorruptError:
+                res = None                 # torn/corrupt wave: re-solve it
+        if res is None:
             arrays = stage(lo, lo + wave_size)
             res = train_cells(*[jnp.asarray(a) for a in arrays],
                               lam_c, sub_c, task_c, cfg, n_lam, n_sub,
                               mesh=mesh, axis_names=axis_names)
             res = tuple(np.asarray(r) for r in res)
+            faults.fire("trainer.wave.solved", wave=w)
             if ckpt_dir is not None:
                 ckpt_mod.save_checkpoint(
                     ckpt_dir, w, dict(zip(keys_out, res)),

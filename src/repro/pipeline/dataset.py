@@ -27,16 +27,27 @@ Sources:
 
 ``streaming_mean_std`` gives ``Scaler`` its out-of-core fit (f64
 accumulators, one pass).
+
+File-backed sources raise :class:`DataSourceError` — naming the file, the
+shard and the affected row range — when the bytes on disk are truncated or
+corrupt, instead of surfacing a raw numpy/zipfile traceback mid-stream.
 """
 from __future__ import annotations
 
 import os
 import zipfile
+import zlib
 from typing import Iterator, Sequence, Tuple, Union
 
 import numpy as np
 
 DEFAULT_CHUNK = 65536
+
+
+class DataSourceError(RuntimeError):
+    """A file-backed source is unreadable: truncated/corrupt shard or
+    header.  The message names the offending file and row range so the
+    operator can regenerate exactly the broken piece of a big export."""
 
 
 class ChunkSource:
@@ -101,7 +112,15 @@ class MemmapSource(ChunkSource):
 
     def __init__(self, path: Union[str, os.PathLike]):
         self._path = os.fspath(path)
-        self._mm = np.load(self._path, mmap_mode="r")
+        try:
+            self._mm = np.load(self._path, mmap_mode="r")
+        except (OSError, ValueError) as e:
+            # ValueError covers a torn/garbled .npy header; OSError a
+            # missing/unreadable file or a body shorter than the header
+            # promises (mmap of the full extent fails up front)
+            raise DataSourceError(
+                f"{self._path}: cannot memmap .npy ({e}) — "
+                f"truncated or corrupt file?") from e
         assert self._mm.ndim == 2, self._mm.shape
 
     @property
@@ -122,12 +141,20 @@ class MemmapSource(ChunkSource):
 
 def _npz_member_shape(path: str, key: str):
     """Read one member's (shape, dtype) from an npz WITHOUT its payload."""
-    with zipfile.ZipFile(path) as zf, zf.open(key + ".npy") as f:
-        version = np.lib.format.read_magic(f)
-        if version == (1, 0):
-            shape, _, dtype = np.lib.format.read_array_header_1_0(f)
-        else:
-            shape, _, dtype = np.lib.format.read_array_header_2_0(f)
+    try:
+        with zipfile.ZipFile(path) as zf, zf.open(key + ".npy") as f:
+            version = np.lib.format.read_magic(f)
+            if version == (1, 0):
+                shape, _, dtype = np.lib.format.read_array_header_1_0(f)
+            else:
+                shape, _, dtype = np.lib.format.read_array_header_2_0(f)
+    except KeyError as e:
+        raise DataSourceError(
+            f"{path}: npz shard has no member {key!r} ({e})") from e
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise DataSourceError(
+            f"{path}: unreadable npz shard header ({e}) — "
+            f"truncated or corrupt file?") from e
     return shape, dtype
 
 
@@ -164,8 +191,25 @@ class ShardedNpzSource(ChunkSource):
         the same shard repeatedly) decompress each shard once, not per call."""
         if self._cache is not None and self._cache[0] == i:
             return self._cache[1]
-        with np.load(self._paths[i]) as z:
-            shard = np.asarray(z[self._key], np.float32)
+        lo, hi = int(self._starts[i]), int(self._starts[i + 1])
+        try:
+            with np.load(self._paths[i]) as z:
+                shard = np.asarray(z[self._key], np.float32)
+        except KeyError as e:
+            raise DataSourceError(
+                f"{self._paths[i]}: npz shard has no member "
+                f"{self._key!r} ({e})") from e
+        except (zipfile.BadZipFile, zlib.error, OSError, ValueError) as e:
+            # BadZipFile/zlib.error: torn zip or CRC/decompress failure —
+            # the shard's payload is corrupt even though its header parsed
+            raise DataSourceError(
+                f"{self._paths[i]}: corrupt npz shard covering rows "
+                f"[{lo}, {hi}) ({e})") from e
+        if shard.shape[0] != hi - lo:
+            raise DataSourceError(
+                f"{self._paths[i]}: shard payload holds {shard.shape[0]} "
+                f"rows but its header promised {hi - lo} "
+                f"(rows [{lo}, {hi})) — file changed after construction?")
         self._cache = (i, shard)
         return shard
 

@@ -92,6 +92,10 @@ class ModelBank:
     routing: str = "nearest"  # "nearest" (1-NN) | "overlap" (voronoi=5
                               # banks: route to the 2 nearest centers and
                               # blend decisions; the engine reads this)
+    version: int = 0          # monotonic bank version: the serving engine
+                              # only accepts hot swaps to a strictly newer
+                              # version, and tags every response with the
+                              # version that served it
 
     # ------------------------------------------------------------ properties
     @property
@@ -121,7 +125,12 @@ class ModelBank:
             "bytes": self.nbytes,
             "dtype": str(self.sv.dtype),
             "routing": self.routing,
+            "version": int(self.version),
         }
+
+    def with_version(self, version: int) -> "ModelBank":
+        """Same bank, new version tag (arrays shared, not copied)."""
+        return dataclasses.replace(self, version=int(version))
 
     # ---------------------------------------------------------- construction
     @classmethod
@@ -144,6 +153,7 @@ class ModelBank:
         scenario: str = "binary",
         default_sub: int = 0,
         routing: str = "nearest",
+        version: int = 0,
         pad_multiple: int = 8,
     ) -> "ModelBank":
         """Compact a trained cell batch into a bank.
@@ -209,6 +219,7 @@ class ModelBank:
             kernel=kernel, n_tasks=t_count, n_sub=s_count, scenario=scenario,
             raw_sv_total=int((mask_cells > 0).sum()),
             default_sub=int(default_sub), routing=routing,
+            version=int(version),
         )
 
     @classmethod
@@ -244,7 +255,7 @@ class ModelBank:
 
     # --------------------------------------------------------- serialization
     _META_KEYS = ("kernel", "n_tasks", "n_sub", "scenario", "raw_sv_total",
-                  "default_sub", "routing")
+                  "default_sub", "routing", "version")
 
     def save(self, ckpt_dir: str, step: int = 0) -> str:
         """Atomic checkpoint write; a server cold-starts from this alone."""

@@ -67,6 +67,7 @@ from repro.kernels.svm_predict import ops as sp_ops
 from repro.pipeline.assign import nearest_center, nearest_top2_dists
 from repro.serve.model_bank import ModelBank
 from repro.tasks.builder import combine_decisions
+from repro.testing import faults
 
 Array = jax.Array
 
@@ -74,6 +75,23 @@ _ROUTE_CHUNK = 4096
 
 # request-age histogram bucket upper edges (ms); the last bucket is open
 AGE_BUCKETS_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0)
+
+# rid -> serving bank version attributions kept for late readers (bounded:
+# overload protection must bound EVERY per-request structure)
+_SERVED_VERSION_CAP = 65536
+
+
+class OverloadError(RuntimeError):
+    """Admission rejected by the bounded queue (graceful degradation).
+
+    Carries a machine-readable ``code`` and ``retryable=True``: the queue
+    drains at the next wave, so the caller should back off and retry
+    rather than treat this as a hard failure.  No request id is assigned —
+    a shed request was never admitted.
+    """
+
+    code = "ENGINE_OVERLOADED"
+    retryable = True
 
 
 def blend_weights(d1: np.ndarray, d2: np.ndarray
@@ -106,6 +124,10 @@ class _Request:
     vals: List[Optional[np.ndarray]]
     ts: float
     left: int
+    raw: np.ndarray     # original (unscaled) feature row: a hot swap
+                        # re-scales + re-routes still-queued requests
+                        # against the new bank's scaling and centers
+    version: int        # bank version the request is currently routed with
 
 
 @functools.partial(jax.jit, static_argnames=("kernel",))
@@ -156,7 +178,20 @@ class SVMEngine:
     ``overlap=None`` reads the bank's recorded routing mode (set by
     ``SelectResult.to_bank()`` for ``VORONOI=5`` fits); ``deadline_ms``
     is the default latency bound for :meth:`run`; ``clock`` is injectable
-    for deterministic deadline tests.
+    for deterministic deadline/shedding tests.
+
+    Overload protection: ``max_queue`` bounds the admission queue in launch
+    rows — a ``submit()`` that would exceed it raises :class:`OverloadError`
+    (retry-able, no id assigned) instead of growing memory without bound;
+    ``shed_ms`` additionally rejects NEW admissions while the oldest queued
+    request is older than the bound (deadline-based shedding: when the
+    engine is this far behind, new arrivals would miss their deadline
+    anyway, so they are turned away while the backlog drains).
+
+    Hot swap: :meth:`swap_bank` replaces the bank mid-flight — see its
+    docstring.  ``swap_poll_ms`` is carried for the serve-loop watcher
+    (``repro.cli serve --swap-watch`` polls the bank directory at this
+    interval); the engine itself never polls.
     """
 
     def __init__(
@@ -171,25 +206,57 @@ class SVMEngine:
         overlap: Optional[bool] = None,
         deadline_ms: Optional[float] = None,
         fill_rows: Optional[int] = None,
+        max_queue: Optional[int] = None,
+        shed_ms: Optional[float] = None,
+        swap_poll_ms: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
     ):
         if cache_dtype not in ("f32", "bf16"):
             raise ValueError(f"cache_dtype must be f32|bf16, got {cache_dtype!r}")
-        self.bank = bank
         self.fused = runtime.on_tpu() if fused is None else bool(fused)
         self.cache_dtype = cache_dtype
         self.row_bucket = row_bucket
         self.slot_bucket = slot_bucket
         self.max_cached_d2 = max_cached_d2
-        # 1-NN fallback is EXACT: a bank built with voronoi<5 records
-        # routing="nearest", and blending needs a second center to exist
-        want = (bank.routing == "overlap") if overlap is None else bool(overlap)
-        self.overlap = want and bank.n_cells >= 2
+        self._overlap_pref = overlap
         self.deadline_ms = deadline_ms
         # "m_pad fills": one bucketed wave's worth of rows triggers a launch
         self.fill_rows = (row_bucket * slot_bucket if fill_rows is None
                           else int(fill_rows))
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.shed_ms = None if shed_ms is None else float(shed_ms)
+        self.swap_poll_ms = swap_poll_ms
         self._clock = clock
+
+        self._reqs: Dict[int, _Request] = {}
+        self._inflight: Optional[tuple] = None
+        self._next_id = 0
+        self._d2_cache: "collections.OrderedDict[bytes, Array]" = \
+            collections.OrderedDict()
+        self._last_wave: Optional[dict] = None
+        self.counters = collections.Counter()
+        self.wave_stats: List[dict] = []
+        # rid -> bank version that served it (bounded; see swap_bank)
+        self.served_version: "collections.OrderedDict[int, int]" = \
+            collections.OrderedDict()
+        self._bind_bank(bank)
+
+    def _bind_bank(self, bank: ModelBank) -> None:
+        """Point every bank-derived structure at ``bank``.
+
+        Fresh admission queues are sized to the new cell count; the wave-D²
+        cache and the last-wave handle are dropped (they index the OLD
+        bank's SV tables).  An in-flight wave is untouched — it carries its
+        own snapshot of everything it needs (see ``begin_step``).
+        """
+        self.bank = bank
+        # 1-NN fallback is EXACT: a bank built with voronoi<5 records
+        # routing="nearest", and blending needs a second center to exist
+        want = ((bank.routing == "overlap") if self._overlap_pref is None
+                else bool(self._overlap_pref))
+        if want and bank.n_cells < 2:
+            self.counters["routing_degraded"] += 1
+        self.overlap = want and bank.n_cells >= 2
 
         self._sv, self._coefs = bank.cell_arrays_f32()
         self._gammas = jnp.asarray(bank.gammas, jnp.float32)
@@ -199,15 +266,8 @@ class SVMEngine:
         # it into a wave and swaps in a fresh buffer (double buffering)
         self._queues: List[List[Tuple[int, int, np.ndarray]]] = [
             [] for _ in range(bank.n_cells)]
-        self._reqs: Dict[int, _Request] = {}
-        self._inflight: Optional[Tuple[WavePlan, List[List[Tuple[int, int]]],
-                                       Array]] = None
-        self._next_id = 0
-        self._d2_cache: "collections.OrderedDict[bytes, Array]" = \
-            collections.OrderedDict()
-        self._last_wave: Optional[dict] = None
-        self.counters = collections.Counter()
-        self.wave_stats: List[dict] = []
+        self._d2_cache.clear()
+        self._last_wave = None
 
     # ------------------------------------------------------------- ingestion
     def route(self, x: np.ndarray) -> np.ndarray:
@@ -240,15 +300,54 @@ class SVMEngine:
         lands in the fresh queue buffer and is consumed by the next
         ``begin_step()``.  Overlap banks enqueue up to two weighted parts
         per request; parts are merged at completion (``finish_step``).
+
+        With a bounded queue (``max_queue`` / ``shed_ms``) an over-limit
+        batch raises :class:`OverloadError` BEFORE any id is assigned —
+        admission is all-or-nothing per batch, so a shed batch leaves no
+        partial state behind.
         """
         x = np.asarray(x, np.float32)
         if x.ndim == 1:
             x = x[None, :]
-        xs = (x - self.bank.feat_mean) / self.bank.feat_std
+        faults.fire("engine.submit", rows=x.shape[0])
+        ts = float(self._clock()) if now is None else float(now)
+        if x.shape[0]:
+            self._admission_check(x.shape[0], ts)
         ids = np.arange(self._next_id, self._next_id + x.shape[0],
                         dtype=np.int64)
         self._next_id += x.shape[0]
-        ts = float(self._clock()) if now is None else float(now)
+        self._enqueue(x, ids, np.full((x.shape[0],), ts, np.float64))
+        self.counters["submitted"] += x.shape[0]
+        return ids
+
+    def _admission_check(self, m: int, now: float) -> None:
+        """Bounded-queue gate; raises :class:`OverloadError` to shed."""
+        if self.max_queue is not None:
+            parts = m * (2 if self.overlap else 1)
+            if self.pending + parts > self.max_queue:
+                self.counters["shed_overflow"] += 1
+                self.counters["shed_rows"] += m
+                raise OverloadError(
+                    f"[{OverloadError.code}] admission queue full "
+                    f"({self.pending} parts queued, batch needs {parts}, "
+                    f"max_queue={self.max_queue}); retry after a step")
+        if self.shed_ms is not None and self.pending:
+            age = self.oldest_age_ms(now)
+            if age >= self.shed_ms:
+                self.counters["shed_stale"] += 1
+                self.counters["shed_rows"] += m
+                raise OverloadError(
+                    f"[{OverloadError.code}] backlog too stale (oldest "
+                    f"queued request {age:.1f} ms >= shed_ms="
+                    f"{self.shed_ms}); retry after the backlog drains")
+
+    def _enqueue(self, x_raw: np.ndarray, ids: np.ndarray,
+                 ts: np.ndarray) -> None:
+        """Scale, route and queue rows under the CURRENT bank (used by
+        both fresh admission and post-swap re-admission, which is why raw
+        rows and per-row timestamps come in explicitly)."""
+        xs = (x_raw - self.bank.feat_mean) / self.bank.feat_std
+        version = int(self.bank.version)
         if self.overlap:
             c1, c2, w1, w2 = self.route_top2(xs)
             for i, rid in enumerate(map(int, ids)):
@@ -257,17 +356,81 @@ class SVMEngine:
                     parts.append((int(c2[i]), np.float32(w2[i])))
                 self._reqs[rid] = _Request(
                     weights=tuple(w for _, w in parts),
-                    vals=[None] * len(parts), ts=ts, left=len(parts))
+                    vals=[None] * len(parts), ts=float(ts[i]),
+                    left=len(parts), raw=x_raw[i], version=version)
                 for p, (c, _) in enumerate(parts):
                     self._queues[c].append((rid, p, xs[i]))
         else:
             cells = self.route(xs)
             for i, rid in enumerate(map(int, ids)):
-                self._reqs[rid] = _Request(weights=(np.float32(1.0),),
-                                           vals=[None], ts=ts, left=1)
+                self._reqs[rid] = _Request(
+                    weights=(np.float32(1.0),), vals=[None],
+                    ts=float(ts[i]), left=1, raw=x_raw[i], version=version)
                 self._queues[int(cells[i])].append((rid, 0, xs[i]))
-        self.counters["submitted"] += x.shape[0]
-        return ids
+
+    # ------------------------------------------------------------- hot swap
+    def swap_bank(self, new_bank: ModelBank, *, force: bool = False) -> dict:
+        """Swap the serving bank, mid-flight, with zero downtime.
+
+        The in-flight wave (if any) FINISHES on the old bank — it was
+        dispatched with a full snapshot (decisions, entry map, shape,
+        version), so nothing it needs is rebound.  Still-QUEUED requests
+        are re-admitted against the new bank: re-scaled with its feature
+        scaling, re-routed against its centers, original request ids and
+        admission timestamps preserved.  This is whole-request by
+        construction — ``begin_step`` drains every queue into the wave, so
+        a request is either fully in flight or fully queued, never split
+        across banks.
+
+        Versions are monotonic: ``new_bank.version`` must be strictly
+        greater than the serving version unless ``force=True`` (an
+        emergency rollback; counted as ``bank_fallbacks``).  The new bank
+        must be decision-compatible (same feature dim and (n_tasks, n_sub)
+        block shape); cell count, SV tables, routing mode and scaling may
+        all change freely.
+
+        Returns ``{"version", "requeued"}``; counters: ``swaps``,
+        ``swap_requeued``, ``bank_fallbacks``, ``routing_degraded``.
+        """
+        faults.fire("engine.swap")
+        d_old = self._centers.shape[1]
+        d_new = np.asarray(new_bank.centers).shape[1]
+        if d_new != d_old:
+            raise ValueError(
+                f"swap_bank: feature dim changed ({d_old} -> {d_new})")
+        if (new_bank.n_tasks, new_bank.n_sub) != (self.bank.n_tasks,
+                                                  self.bank.n_sub):
+            raise ValueError(
+                "swap_bank: decision block shape changed "
+                f"(({self.bank.n_tasks}, {self.bank.n_sub}) -> "
+                f"({new_bank.n_tasks}, {new_bank.n_sub}))")
+        if int(new_bank.version) <= int(self.bank.version):
+            if not force:
+                raise ValueError(
+                    f"swap_bank: version must be strictly newer (serving "
+                    f"v{self.bank.version}, offered v{new_bank.version}); "
+                    f"pass force=True to roll back")
+            self.counters["bank_fallbacks"] += 1
+
+        queued_rids: List[int] = []
+        seen = set()
+        for q in self._queues:
+            for rid, _part, _row in q:
+                if rid not in seen:
+                    seen.add(rid)
+                    queued_rids.append(rid)
+        requeue = [(rid, self._reqs.pop(rid)) for rid in queued_rids]
+
+        self._bind_bank(new_bank)
+
+        if requeue:
+            raws = np.stack([r.raw for _, r in requeue]).astype(np.float32)
+            ids = np.asarray([rid for rid, _ in requeue], np.int64)
+            ts = np.asarray([r.ts for _, r in requeue], np.float64)
+            self._enqueue(raws, ids, ts)
+            self.counters["swap_requeued"] += len(requeue)
+        self.counters["swaps"] += 1
+        return {"version": int(new_bank.version), "requeued": len(requeue)}
 
     @property
     def pending(self) -> int:
@@ -296,6 +459,7 @@ class SVMEngine:
         if self._inflight is not None:
             raise RuntimeError(
                 "a wave is already in flight - call finish_step() first")
+        faults.fire("engine.begin_step")
         counts = np.asarray([len(q) for q in self._queues], np.int64)
         plan = plan_wave(counts, row_bucket=self.row_bucket,
                          slot_bucket=self.slot_bucket)
@@ -321,7 +485,11 @@ class SVMEngine:
 
         cell_idx = np.maximum(plan.slot_cell, 0)     # padding slots: ignored rows
         dec = self._evaluate(jnp.asarray(xt), jnp.asarray(cell_idx), plan)
-        self._inflight = (plan, slot_entries, dec)
+        # full snapshot: a swap_bank between begin and finish must not
+        # change what this wave returns or which version it is tagged with
+        self._inflight = (plan, slot_entries, dec,
+                          self.bank.n_tasks, self.bank.n_sub,
+                          int(self.bank.version))
         self._record_wave(plan, ages)
         self.counters["steps"] += 1
         return True
@@ -334,13 +502,18 @@ class SVMEngine:
         part is still queued stays pending and is returned by the wave that
         serves its last part.  Blending (``sum_p w_p * part_p``) happens
         here, in fixed part order, in f32.
+
+        Every completion is attributed to the bank version the wave was
+        DISPATCHED with (``served_version[rid]``, plus a per-version
+        ``served_v<N>`` counter) — under a mid-flight swap, old-wave
+        responses carry the old version and post-swap admissions the new
+        one, so every response is attributable to exactly one bank.
         """
         if self._inflight is None:
             return {}
-        plan, slot_entries, dec = self._inflight
+        plan, slot_entries, dec, t, s_count, version = self._inflight
         self._inflight = None
         dec = np.asarray(dec)
-        t, s_count = self.bank.n_tasks, self.bank.n_sub
         results: Dict[int, np.ndarray] = {}
         for s, entries in enumerate(slot_entries):
             for r, (rid, part) in enumerate(entries):
@@ -353,7 +526,11 @@ class SVMEngine:
                         out = out + req.weights[p] * req.vals[p]
                     results[rid] = out
                     del self._reqs[rid]
+                    self.served_version[rid] = version
+                    while len(self.served_version) > _SERVED_VERSION_CAP:
+                        self.served_version.popitem(last=False)
         self.counters["served"] += len(results)
+        self.counters[f"served_v{version}"] += len(results)
         self.counters["served_rows"] += plan.n_requests
         # counted here, with served_rows, so stats() ratios stay consistent
         # while a wave is in flight
@@ -396,7 +573,8 @@ class SVMEngine:
                 and self.oldest_age_ms(now) >= deadline_ms)
 
     def run(self, traffic: Iterable[Optional[np.ndarray]],
-            deadline_ms: Optional[float] = None) -> Dict[int, np.ndarray]:
+            deadline_ms: Optional[float] = None,
+            max_queue: Optional[int] = None) -> Dict[int, np.ndarray]:
         """Latency-bounded async serving over an arrival stream.
 
         ``traffic`` yields request batches ((m, d) raw-feature arrays);
@@ -406,20 +584,35 @@ class SVMEngine:
         PREVIOUS wave is collected, so admission and host routing/packing
         overlap device work.  Exhausting ``traffic`` drains everything.
         Returns ``{request_id: blended (n_tasks, n_sub) decision block}``
-        for every submitted request.
+        for every ADMITTED request.
+
+        ``max_queue`` (or the engine-level default) bounds the admission
+        queue for the duration of the run: an arrival batch that would
+        overflow is SHED — rejected with :class:`OverloadError` at
+        admission, counted in ``shed_*``, never assigned an id — and the
+        run continues.  Graceful degradation instead of unbounded memory.
         """
         results: Dict[int, np.ndarray] = {}
-        for batch in traffic:
-            if batch is not None and np.size(batch):
-                self.submit(batch)
-            if self.should_launch(deadline_ms):
-                if self._inflight is not None:
-                    results.update(self.finish_step())
-                self.begin_step()
-        if self._inflight is not None:
-            results.update(self.finish_step())
-        while self.pending:
-            results.update(self.step())
+        prev_mq = self.max_queue
+        if max_queue is not None:
+            self.max_queue = int(max_queue)
+        try:
+            for batch in traffic:
+                if batch is not None and np.size(batch):
+                    try:
+                        self.submit(batch)
+                    except OverloadError:
+                        pass             # shed; visible in shed_* counters
+                if self.should_launch(deadline_ms):
+                    if self._inflight is not None:
+                        results.update(self.finish_step())
+                    self.begin_step()
+            if self._inflight is not None:
+                results.update(self.finish_step())
+            while self.pending:
+                results.update(self.step())
+        finally:
+            self.max_queue = prev_mq
         return results
 
     def _evaluate(self, xt: Array, cell_idx: Array, plan: WavePlan) -> Array:
@@ -502,6 +695,14 @@ class SVMEngine:
 
     def stats(self) -> dict:
         out = dict(self.counters)
+        # robustness counters are always visible, even at zero
+        for k in ("swaps", "swap_requeued", "bank_fallbacks",
+                  "routing_degraded", "shed_overflow", "shed_stale",
+                  "shed_rows"):
+            out.setdefault(k, 0)
+        out["bank_version"] = int(self.bank.version)
+        out["pending"] = self.pending
+        out["pending_requests"] = len(self._reqs)
         out["routing"] = "overlap" if self.overlap else "nearest"
         launched = out.get("launched_rows", 0)
         out["pad_fraction"] = (1.0 - out.get("served_rows", 0) / launched

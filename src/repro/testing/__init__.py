@@ -1,0 +1,7 @@
+"""Test-support subsystems shipped with the package (not the test suite).
+
+``repro.testing.faults`` is the deterministic fault-injection registry the
+robustness gate drives: production modules call ``faults.fire(site)`` at
+named failure points, tests arm a site and observe crash-safe recovery.
+"""
+from repro.testing import faults  # noqa: F401

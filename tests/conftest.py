@@ -1,10 +1,27 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device; only launch/dryrun.py forces 512 host
-devices (in its own process)."""
+devices (in its own process).
+
+Per-test timeouts: the fault-injection suite (tests/test_faults.py) marks
+tests with ``@pytest.mark.timeout(N)`` so an injected deadlock fails fast
+instead of hanging the gate.  When the pytest-timeout plugin is installed
+(requirements-dev.txt) it owns the marker; otherwise a SIGALRM-based
+fallback here honours the same marker on POSIX, and the marker degrades to
+a no-op where neither applies (non-main-thread runners, Windows).
+"""
 from __future__ import annotations
+
+import signal
+import threading
 
 import numpy as np
 import pytest
+
+try:
+    import pytest_timeout as _pytest_timeout  # noqa: F401
+    _HAVE_TIMEOUT_PLUGIN = True
+except ImportError:
+    _HAVE_TIMEOUT_PLUGIN = False
 
 
 @pytest.fixture(scope="session")
@@ -14,3 +31,34 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    if not _HAVE_TIMEOUT_PLUGIN:
+        config.addinivalue_line(
+            "markers",
+            "timeout(seconds): per-test limit (SIGALRM fallback when the "
+            "pytest-timeout plugin is not installed)")
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    marker = (None if _HAVE_TIMEOUT_PLUGIN
+              else item.get_closest_marker("timeout"))
+    use_alarm = (marker is not None and marker.args
+                 and hasattr(signal, "SIGALRM")
+                 and threading.current_thread() is threading.main_thread())
+    if not use_alarm:
+        yield
+        return
+
+    seconds = int(marker.args[0])
+
+    def _expired(signum, frame):
+        raise TimeoutError(
+            f"{item.nodeid}: exceeded {seconds}s per-test timeout")
+
+    prev = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(seconds)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)

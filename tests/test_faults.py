@@ -1,0 +1,482 @@
+"""Fault-injection acceptance suite: the robustness gate for PR 6.
+
+Proves, with deterministic kills at named sites (``repro.testing.faults``):
+
+  (a) **preemption survival** — kill ``train_cells_waves`` at ANY wave or
+      checkpoint-write boundary, resume from the same ``ckpt_dir``, and the
+      final model is BITWISE identical to the uninterrupted run;
+  (b) **torn/corrupt detection** — a step dir left by a mid-write kill, a
+      truncated manifest, or a bit-flipped payload is detected (checksums)
+      and restore falls back to the newest step that verifies, instead of
+      loading garbage;
+  (c) **hot-swap correctness** — the randomized conservation property lives
+      in ``test_serve_async.py::TestSwapConservation``; here the engine's
+      fault sites are shown to leave no partial state behind;
+  (d) **bounded overload** — a full admission queue sheds with a retry-able
+      :class:`OverloadError`, memory stays bounded, the shed is visible in
+      ``stats()``, and a post-drain retry succeeds.
+
+Every test carries a ``timeout`` marker so an injected deadlock fails the
+gate fast instead of hanging it (pytest-timeout when installed, else the
+SIGALRM fallback in ``conftest.py``).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve.model_bank import ModelBank
+from repro.serve.svm_engine import OverloadError, SVMEngine
+from repro.testing import faults
+from repro.train import checkpoint as ckpt
+
+pytestmark = pytest.mark.timeout(120)
+
+
+@pytest.fixture(autouse=True)
+def _clean_faults():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+# --------------------------------------------------------------- helpers
+def _tree(seed: int) -> dict:
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(7, 3)).astype(np.float32),
+            "b": rng.normal(size=(3,)).astype(np.float32),
+            "step": np.int32(seed)}
+
+
+def _save(d: str, step: int, **kw) -> str:
+    return ckpt.save_checkpoint(d, step, _tree(step),
+                                extra={"s": step}, **kw)
+
+
+def _assert_restores(d: str, step: int, expect_seed: int) -> None:
+    tree, extra = ckpt.restore_self_describing(d, step=step)
+    want = _tree(expect_seed)
+    assert extra == {"s": expect_seed}
+    for k in want:
+        np.testing.assert_array_equal(tree[k], want[k])
+
+
+def _corrupt_leaf(step_dir: str, leaf: str = "leaf_0") -> None:
+    """Flip one payload byte but keep the npz a VALID zip — exercises the
+    manifest checksum, not zipfile's CRC."""
+    shard = os.path.join(step_dir, "shard_0.npz")
+    with np.load(shard) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arrays[leaf][0] ^= 0xFF
+    np.savez(shard, **arrays)
+
+
+def _bank(seed: int, n_cells: int = 3, version: int = 0):
+    """Tiny overlap bank + clustered query pool (mirrors test_serve_async)."""
+    k, d = 16, 4
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_cells, d)).astype(np.float32) * 4.0
+    sv = (centers[:, None, :]
+          + rng.normal(size=(n_cells, k, d))).astype(np.float32)
+    coefs = rng.normal(size=(n_cells, k, 2, 1)).astype(np.float32)
+    gamma = rng.uniform(0.5, 3.0, size=(n_cells, 2, 1)).astype(np.float32)
+    mask = np.ones((n_cells, k), np.float32)
+    bank = ModelBank.from_cells(sv, mask, coefs, gamma, centers,
+                                routing="overlap", version=version)
+    pool = (centers[rng.integers(0, n_cells, 64)]
+            + rng.normal(size=(64, d)) * 1.5).astype(np.float32)
+    return bank, pool
+
+
+def _drain(eng: SVMEngine) -> dict:
+    out: dict = {}
+    while eng.pending or eng.in_flight:
+        out.update(eng.step())
+    return out
+
+
+# ---------------------------------------------------------------- harness
+class TestFaultHarness:
+    def test_fire_is_noop_when_nothing_armed(self):
+        faults.fire("nonexistent.site", whatever=1)   # must not raise
+        assert faults.hits("nonexistent.site") == 0   # not even counted
+
+    def test_arm_fires_on_nth_hit_then_disarms(self):
+        faults.arm("t.site", at_hit=3)
+        faults.fire("t.site")
+        faults.fire("t.site")
+        with pytest.raises(faults.InjectedFault) as ei:
+            faults.fire("t.site")
+        assert ei.value.site == "t.site" and ei.value.hit == 3
+        faults.fire("t.site")                          # disarmed: no raise
+        # the 4th fire is the zero-overhead fast path — not even counted
+        assert faults.hits("t.site") == 3
+
+    def test_injected_fault_escapes_except_exception(self):
+        faults.arm("t.kill")
+        with pytest.raises(faults.InjectedFault):
+            try:
+                faults.fire("t.kill")
+            except Exception:                          # the swallow trap
+                pytest.fail("InjectedFault must not be caught as Exception")
+
+    def test_action_receives_site_context(self):
+        got = []
+        faults.arm("t.act", action=lambda **ctx: got.append(ctx))
+        faults.fire("t.act", wave=5)                   # action, no raise
+        assert got == [{"wave": 5}]
+
+    def test_context_manager_resets_on_exit(self):
+        with pytest.raises(faults.InjectedFault):
+            with faults.armed("t.cm"):
+                assert faults.active()
+                faults.fire("t.cm")
+        assert not faults.active() and faults.hits("t.cm") == 0
+
+
+# ---------------------------------------------- crash-safe checkpoints (a,b)
+class TestCrashSafeCheckpoint:
+    @pytest.mark.parametrize("site", ["checkpoint.save.pre_shard",
+                                      "checkpoint.save.post_shard",
+                                      "checkpoint.save.pre_rename"])
+    def test_kill_before_visibility_keeps_last_good_step(self, tmp_path, site):
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        with pytest.raises(faults.InjectedFault):
+            with faults.armed(site):
+                _save(d, 1)
+        # the torn write never became visible; step 0 is intact
+        assert ckpt.list_steps(d) == [0]
+        assert ckpt.latest_step(d) == 0
+        _assert_restores(d, 0, 0)
+        # debris matches a hard kill (no tidy unwind) …
+        assert any(n.startswith(".tmp_step_1") for n in os.listdir(d))
+        # … and the next writer sweeps it and completes normally
+        _save(d, 1)
+        assert not any(n.startswith(".tmp_step_") for n in os.listdir(d))
+        assert ckpt.latest_step(d) == 1
+        _assert_restores(d, 1, 1)
+
+    def test_kill_after_rename_step_is_durable(self, tmp_path):
+        """post_rename kill: the step dir is visible (durable) but the
+        ``latest`` pointer is stale — restore still finds the new step."""
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        with pytest.raises(faults.InjectedFault):
+            with faults.armed("checkpoint.save.post_rename"):
+                _save(d, 1)
+        assert ckpt.list_steps(d) == [0, 1]
+        tree, extra = ckpt.restore_self_describing(d)   # newest complete
+        assert extra == {"s": 1}
+
+    def test_kill_after_pointer_is_fully_committed(self, tmp_path):
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        with pytest.raises(faults.InjectedFault):
+            with faults.armed("checkpoint.save.post_latest"):
+                _save(d, 1)
+        assert ckpt.latest_step(d) == 1
+        _assert_restores(d, 1, 1)
+
+    def test_torn_manifest_detected(self, tmp_path):
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        _save(d, 1)
+        man = os.path.join(d, "step_00000001", "manifest.json")
+        raw = open(man, "rb").read()
+        with open(man, "wb") as f:
+            f.write(raw[: len(raw) // 2])               # torn JSON
+        assert ckpt.list_steps(d) == [0]
+        assert ckpt.latest_step(d) == 0                 # pointer overridden
+        _assert_restores(d, 0, 0)
+
+    def test_payload_bitflip_falls_back_to_last_good(self, tmp_path):
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        _save(d, 1)
+        _corrupt_leaf(os.path.join(d, "step_00000001"))
+        # quick checks still pass — only the deep paths read the payload
+        assert ckpt.latest_step(d) == 1
+        assert ckpt.verify_step(d, 1) is False
+        assert ckpt.verify_step(d, 0) is True
+        tree, extra = ckpt.restore_self_describing(d)   # implicit fallback
+        assert extra == {"s": 0}
+        assert (os.path.abspath(d), 1) in [
+            (os.path.abspath(p), s) for p, s in ckpt.fallback_log()]
+        # an EXPLICIT step must fail fast, never silently substitute
+        with pytest.raises(ckpt.CheckpointCorruptError):
+            ckpt.restore_self_describing(d, step=1)
+
+    def test_truncated_shard_falls_back(self, tmp_path):
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        _save(d, 1)
+        shard = os.path.join(d, "step_00000001", "shard_0.npz")
+        raw = open(shard, "rb").read()
+        with open(shard, "wb") as f:
+            f.write(raw[: len(raw) // 2])
+        tree, extra = ckpt.restore_self_describing(d)
+        assert extra == {"s": 0}
+
+    def test_legacy_v1_manifest_without_checksums_restores(self, tmp_path):
+        import json
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        man = os.path.join(d, "step_00000000", "manifest.json")
+        with open(man) as f:
+            m = json.load(f)
+        del m["checksums"]
+        m["manifest_version"] = 1
+        with open(man, "w") as f:
+            json.dump(m, f)
+        _assert_restores(d, 0, 0)                       # size check only
+        assert ckpt.verify_step(d, 0) is True
+
+    def test_torn_latest_pointer_falls_back_to_listing(self, tmp_path):
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        _save(d, 1)
+        with open(os.path.join(d, "latest"), "w") as f:
+            f.write("step_garb")                        # torn/garbled pointer
+        assert ckpt.latest_step(d) == 1
+
+    def test_structure_mismatch_raises_not_falls_back(self, tmp_path):
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        bad_target = {"completely": np.zeros((), np.float32),
+                      "different": np.zeros((), np.float32),
+                      "keys": np.zeros((), np.float32)}
+        with pytest.raises(ValueError, match="structure mismatch"):
+            ckpt.restore_checkpoint(d, bad_target)
+
+
+# -------------------------------------------------------- GC guards (sat. 2)
+class TestGCGuards:
+    def test_gc_never_deletes_the_only_complete_step(self, tmp_path):
+        """keep_last newer — but torn — dirs must not evict the one good
+        step (regression guard for the `_gc` sparing rule)."""
+        d = os.fspath(tmp_path)
+        _save(d, 0)
+        for s in (1, 2):                                # torn: manifest only
+            os.makedirs(os.path.join(d, f"step_{s:08d}"))
+        ckpt._gc(d, keep_last=2)                        # victims include 0
+        assert ckpt.list_steps(d) == [0]
+        assert ckpt.verify_step(d, 0) is True
+        _assert_restores(d, 0, 0)
+
+    def test_gc_skips_step_being_restored(self, tmp_path):
+        """A save with aggressive keep_last landing in the MIDDLE of a
+        restore (via the restore.mid fault action) must not delete the
+        step dir under the reader's feet."""
+        d = os.fspath(tmp_path)
+        for s in range(4):
+            _save(d, s, keep_last=0)                    # keep all
+        faults.arm("checkpoint.restore.mid",
+                   action=lambda **ctx: _save(d, 4, keep_last=1))
+        tree, extra = ckpt.restore_self_describing(d, step=0)
+        assert extra == {"s": 0}                        # restore unharmed
+        # the concurrent GC ran: newest survives, restoring step spared
+        assert os.path.isdir(os.path.join(d, "step_00000000"))
+        assert ckpt.list_steps(d) == [0, 4]
+
+    def test_keep_last_prunes_old_complete_steps(self, tmp_path):
+        d = os.fspath(tmp_path)
+        for s in range(5):
+            _save(d, s, keep_last=2)
+        assert ckpt.list_steps(d) == [3, 4]
+
+
+# ------------------------------------------------- wave preemption (crit. a)
+class TestWaveResume:
+    def _fit(self, wave, ckpt_dir=None, seed=0):
+        from repro.data.synthetic import covtype_like, train_test_split
+        from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+        x, y = covtype_like(n=600, d=4, seed=seed, label_noise=0.02,
+                            n_modes=3)
+        xtr, ytr, xte, yte = train_test_split(x, np.where(y == 0, -1, 1),
+                                              0.25, seed)
+        cfg = SVMTrainerConfig(n_folds=2, max_iters=150,
+                               cell_method="voronoi", cell_size=120,
+                               n_slots_per_wave=wave)
+        m = LiquidSVM(cfg).fit(xtr, ytr, ckpt_dir=ckpt_dir)
+        return m, xte
+
+    @pytest.mark.parametrize("site,at_hit", [
+        ("trainer.wave.start", 1),          # killed before ANY progress
+        ("trainer.wave.start", 2),          # wave 0 done+saved, wave 1 not
+        ("trainer.wave.solved", 1),         # solved but NOT yet checkpointed
+        ("checkpoint.save.post_shard", 1),  # mid checkpoint write
+        ("checkpoint.save.pre_rename", 2),  # 2nd wave's save mid-write
+    ])
+    def test_kill_anywhere_resume_is_bitwise_identical(self, tmp_path,
+                                                       site, at_hit):
+        ref, xte = self._fit(2)                         # uninterrupted run
+        ck = os.fspath(tmp_path / "waves")
+        with pytest.raises(faults.InjectedFault):
+            with faults.armed(site, at_hit=at_hit):
+                self._fit(2, ckpt_dir=ck)
+        resumed, _ = self._fit(2, ckpt_dir=ck)          # survive the kill
+        np.testing.assert_array_equal(resumed.decision_function(xte),
+                                      ref.decision_function(xte))
+
+    def test_corrupt_wave_checkpoint_is_resolved(self, tmp_path):
+        """Bit rot in one wave's saved shard: that wave re-solves, the rest
+        restore, and the model is still bitwise identical."""
+        ref, xte = self._fit(2)
+        ck = os.fspath(tmp_path / "waves")
+        self._fit(2, ckpt_dir=ck)                       # leaves all waves
+        steps = ckpt.list_steps(ck)
+        assert len(steps) >= 2                          # waves actually split
+        _corrupt_leaf(os.path.join(ck, f"step_{steps[0]:08d}"))
+        resumed, _ = self._fit(2, ckpt_dir=ck)
+        np.testing.assert_array_equal(resumed.decision_function(xte),
+                                      ref.decision_function(xte))
+
+
+# ------------------------------------------- engine fault sites + swap (c)
+class TestEngineFaults:
+    def test_submit_fault_leaves_no_partial_state(self):
+        bank, pool = _bank(11)
+        eng = SVMEngine(bank, fused=False)
+        eng.submit(pool[:4])
+        before = (eng.counters["submitted"], eng.pending, eng._next_id)
+        with pytest.raises(faults.InjectedFault):
+            with faults.armed("engine.submit"):
+                eng.submit(pool[4:10])
+        # the killed admission burned nothing: no ids, no rows, no counters
+        assert (eng.counters["submitted"], eng.pending,
+                eng._next_id) == before
+        assert len(_drain(eng)) == 4                    # old traffic intact
+
+    def test_swap_fault_leaves_engine_on_old_bank(self):
+        bank0, pool = _bank(12)
+        bank1, _ = _bank(13, version=1)
+        eng = SVMEngine(bank0, fused=False)
+        eng.submit(pool[:6])
+        with pytest.raises(faults.InjectedFault):
+            with faults.armed("engine.swap"):
+                eng.swap_bank(bank1)
+        assert eng.bank.version == 0                    # swap never happened
+        assert eng.counters["swaps"] == 0
+        served = _drain(eng)
+        assert len(served) == 6
+        assert all(eng.served_version[r] == 0 for r in served)
+
+    def test_begin_step_fault_keeps_queues_intact(self):
+        bank, pool = _bank(14)
+        eng = SVMEngine(bank, fused=False)
+        eng.submit(pool[:5])
+        with pytest.raises(faults.InjectedFault):
+            with faults.armed("engine.begin_step"):
+                eng.begin_step()
+        assert not eng.in_flight and eng.pending > 0    # nothing dispatched
+        assert len(_drain(eng)) == 5
+
+
+# ------------------------------------------------- overload shedding (d)
+class TestOverloadShedding:
+    def test_overflow_sheds_retryable_and_bounded(self):
+        bank, pool = _bank(21)
+        eng = SVMEngine(bank, fused=False)
+        eng.submit(pool[:4])
+        eng.max_queue = eng.pending                     # queue exactly full
+        with pytest.raises(OverloadError) as ei:
+            eng.submit(pool[4:6])
+        assert ei.value.retryable is True
+        assert OverloadError.code in str(ei.value)
+        assert eng.pending <= eng.max_queue             # memory bounded
+        s = eng.stats()
+        assert s["shed_overflow"] == 1
+        assert s["shed_rows"] == 2
+        # all-or-nothing: the shed batch got NO ids, queue holds batch 1 only
+        assert eng.counters["submitted"] == 4
+        served = _drain(eng)
+        assert len(served) == 4
+        eng.submit(pool[4:6])                           # retry now succeeds
+        assert len(_drain(eng)) == 2
+
+    def test_stale_backlog_sheds_until_drained(self):
+        clk = [0.0]
+        bank, pool = _bank(22)
+        eng = SVMEngine(bank, fused=False, shed_ms=5.0, clock=lambda: clk[0])
+        eng.submit(pool[:3])
+        clk[0] = 0.010                                  # backlog now 10 ms old
+        with pytest.raises(OverloadError, match="stale"):
+            eng.submit(pool[3:5])
+        assert eng.stats()["shed_stale"] == 1
+        assert len(_drain(eng)) == 3                    # backlog drains
+        eng.submit(pool[3:5])                           # fresh queue: admitted
+        assert len(_drain(eng)) == 2
+
+    def test_run_sheds_overload_and_serves_the_rest(self):
+        bank, pool = _bank(23)
+        rng = np.random.default_rng(0)
+        eng = SVMEngine(bank, fused=False)
+        traffic = [pool[rng.integers(0, 64, 6)] for _ in range(12)]
+        results = eng.run(iter(traffic), max_queue=24)
+        s = eng.stats()
+        assert s["shed_overflow"] > 0       # overload was real
+        assert s["served"] == s["submitted"]
+        assert len(results) == s["served"]  # admitted all served
+        assert s["served"] + s["shed_rows"] == 72
+
+
+# ---------------------------------------------------- incremental refresh
+class TestRefresh:
+    @pytest.fixture(scope="class")
+    def fit(self):
+        from repro.api import SVM
+        from repro.data.synthetic import covtype_like
+        from repro.train.svm_trainer import SVMTrainerConfig
+        x, y = covtype_like(n=600, d=4, seed=3, label_noise=0.02, n_modes=3)
+        y = np.where(y == 0, -1.0, 1.0)
+        cfg = SVMTrainerConfig(n_folds=2, max_iters=150,
+                               cell_method="voronoi", cell_size=120)
+        sess = SVM(x, y, config=cfg)
+        tr = sess.train()
+        sel = sess.select("argmin")
+        return tr, sel, x
+
+    def test_refresh_touches_only_drifted_cells_and_bumps_version(self, fit):
+        from repro.serve.refresh import refresh_bank
+        tr, sel, x = fit
+        bank0 = sel.to_bank()
+        assert bank0.version == 0
+
+        x_new = np.repeat(x[:1], 3, axis=0)             # one cell, 3 points
+        y_new = np.asarray([1.0, -1.0, 1.0])
+        bank1, info = refresh_bank(tr, sel, x_new, y_new)
+
+        assert bank1.version == 1
+        assert info["drifted_slots"] == 1
+        assert info["rows_added"] == 3
+        assert info["resolve_calls"] >= 1
+        np.testing.assert_array_equal(bank1.centers, bank0.centers)
+
+        # queries routed to NON-drifted cells decide identically
+        drifted = int(np.asarray(tr.packed.slot_of_cell)[
+            tr.plan.route(tr.scaler.transform(x_new))[0]])
+        eng0 = SVMEngine(bank0, fused=False)
+        eng1 = SVMEngine(bank1, fused=False)
+        xq = x[50:90]
+        xs = (xq - bank0.feat_mean) / bank0.feat_std
+        keep = eng0.route(xs) != drifted
+        assert keep.any()
+        np.testing.assert_allclose(eng0.predict(xq[keep]),
+                                   eng1.predict(xq[keep]), atol=1e-5)
+
+    def test_refreshed_bank_hot_swaps(self, fit):
+        from repro.serve.refresh import refresh_bank
+        tr, sel, x = fit
+        bank0 = sel.to_bank()
+        bank1, _ = refresh_bank(tr, sel, x[:2], np.asarray([1.0, -1.0]))
+        eng = SVMEngine(bank0, fused=False)
+        eng.submit(x[10:16])
+        out = eng.swap_bank(bank1)
+        assert out["version"] == 1 and out["requeued"] == 6
+        served = _drain(eng)
+        assert len(served) == 6
+        assert all(eng.served_version[r] == 1 for r in served)
+        assert eng.stats()["bank_version"] == 1

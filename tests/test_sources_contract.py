@@ -21,8 +21,9 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
-from repro.pipeline.dataset import (ArraySource, ChunkSource, MemmapSource,
-                                    ScaledSource, ShardedNpzSource, as_source)
+from repro.pipeline.dataset import (ArraySource, ChunkSource, DataSourceError,
+                                    MemmapSource, ScaledSource,
+                                    ShardedNpzSource, as_source)
 
 N, D = 103, 5                      # deliberately not a chunk multiple
 SHARD_SIZES = (40, 1, 37, 25)      # uneven; includes a 1-row shard
@@ -135,3 +136,54 @@ class TestChunkSourceContract:
 def test_as_source_is_identity_on_sources(x):
     src = ArraySource(x)
     assert as_source(src) is src
+
+
+class TestDataSourceErrors:
+    """Broken bytes on disk surface as DataSourceError naming the file and
+    row range — never a raw numpy/zipfile traceback mid-stream."""
+
+    def test_truncated_npy_raises_naming_file(self, tmp_path, x):
+        p = tmp_path / "trunc.npy"
+        np.save(p, x)
+        raw = p.read_bytes()
+        p.write_bytes(raw[: len(raw) // 2])       # body shorter than header
+        with pytest.raises(DataSourceError, match="trunc.npy"):
+            MemmapSource(p)
+
+    def test_missing_npy_raises(self, tmp_path):
+        with pytest.raises(DataSourceError, match="nope.npy"):
+            MemmapSource(tmp_path / "nope.npy")
+
+    def test_npz_missing_member_raises_naming_key(self, tmp_path, x):
+        p = tmp_path / "wrongkey.npz"
+        np.savez(p, y=x[:10])                     # member 'x' absent
+        with pytest.raises(DataSourceError, match="no member 'x'"):
+            ShardedNpzSource([p])
+
+    def test_truncated_npz_header_raises(self, tmp_path, x):
+        p = tmp_path / "torn.npz"
+        np.savez(p, x=x[:10])
+        raw = p.read_bytes()
+        p.write_bytes(raw[: 20])                  # kill the zip directory
+        with pytest.raises(DataSourceError, match="torn.npz"):
+            ShardedNpzSource([p])
+
+    def test_corrupt_npz_payload_names_shard_and_rows(self, tmp_path):
+        """Header parses (construction succeeds) but the payload bytes are
+        flipped: the CRC failure on gather must name shard + row range.
+        Shards must exceed zipfile's 4 KiB read buffer so the header peek
+        doesn't already trip the CRC check."""
+        rng = np.random.default_rng(7)
+        big = rng.normal(size=(4000, D)).astype(np.float32)
+        paths = []
+        for i, (lo, hi) in enumerate([(0, 2000), (2000, 4000)]):
+            p = tmp_path / f"shard{i}.npz"
+            np.savez(p, x=big[lo:hi])
+            paths.append(p)
+        raw = bytearray(paths[1].read_bytes())
+        raw[len(raw) - 200] ^= 0xFF               # deep in member payload
+        paths[1].write_bytes(bytes(raw))
+        src = ShardedNpzSource(paths)             # headers still fine
+        with pytest.raises(DataSourceError,
+                           match=r"shard1\.npz.*rows \[2000, 4000\)"):
+            src.gather(np.arange(2000, 4000, dtype=np.int64))
