@@ -18,7 +18,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
                     default="table1,table2,table3,table4,table10,gram_reuse,"
-                            "serve,cells,robustness")
+                            "serve,serve_micro,cells,robustness")
     args = ap.parse_args(argv)
     tables = args.tables.split(",")
     report = Report()
@@ -47,6 +47,9 @@ def main(argv=None) -> int:
     if "serve" in tables:
         from benchmarks import serve_throughput
         serve_throughput.run(report)
+    if "serve_micro" in tables:
+        from benchmarks import serve_microbench
+        serve_microbench.run(report)
     if "cells" in tables:
         from benchmarks import cell_build
         cell_build.run(report)
@@ -56,7 +59,7 @@ def main(argv=None) -> int:
 
     print(f"\n# done in {time.time() - t0:.0f}s")
     for t in ("table1", "table2", "table3", "table4", "table10", "gram_reuse",
-              "serve", "cells", "robustness"):
+              "serve", "serve_micro", "cells", "robustness"):
         md = report.table_markdown(t)
         if md:
             print(f"\n## {t}\n{md}")

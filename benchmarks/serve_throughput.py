@@ -51,6 +51,30 @@ OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__
                         "BENCH_serve.json")
 
 
+def merge_bench(updates: dict) -> None:
+    """Merge ``updates`` into BENCH_serve.json, preserving keys other
+    writers own.  Two writers share the file — this module (throughput
+    aggregates) and ``benchmarks.serve_microbench`` (``per_stage`` /
+    ``async.per_stage`` / ``obs_overhead``) — so a plain dump from either
+    would silently erase the other's sections.  One level of dict-merge
+    lets ``async.speedup`` (ours) and ``async.per_stage`` (microbench)
+    coexist under the same key."""
+    data: dict = {}
+    if os.path.exists(OUT_PATH):
+        try:
+            with open(OUT_PATH) as f:
+                data = json.load(f)
+        except ValueError:
+            data = {}
+    for k, v in updates.items():
+        if isinstance(v, dict) and isinstance(data.get(k), dict):
+            data[k].update(v)
+        else:
+            data[k] = v
+    with open(OUT_PATH, "w") as f:
+        json.dump(data, f, indent=2)
+
+
 def _make_bank_and_traffic(n_cells, k, d, t_count, s_count, n_req, seed=0):
     """Synthetic trained cell batch: sparse duals (hinge-like), clustered
     queries; per-(task, sub) gammas all distinct (>= 3 tasks x >= 4 subs)."""
@@ -238,8 +262,7 @@ def run(report: Report) -> None:
                     "age_ms_max": dl_stats.get("age_ms_max"),
                     "age_hist": dl_stats.get("age_hist")},
     }
-    with open(OUT_PATH, "w") as f:
-        json.dump(payload, f, indent=2)
+    merge_bench(payload)
     print(f"# wrote {OUT_PATH}")
 
 

@@ -18,6 +18,15 @@ swapped in mid-stream (``engine.swap_bank``) — the in-flight wave
 completes on v0, queued requests re-route against v1, and the
 per-version ``served_v*`` counters show every request attributed to
 exactly one bank version.
+
+The demo runs with the observability layer ON (``repro.obs``): after the
+deadline-driven loop it prints where request latency went — the engine's
+per-stage breakdown (queue/pack/dispatch/device/collect), one request's
+individual attribution (``engine.breakdown(rid)``), the tracer's per-site
+summary — and dumps the span trace + metrics registry as JSONL.  In
+production the same surfaces come from the CLI keys ``-S TRACE=1
+-S METRICS_OUT=<path>`` (and ``-S PROFILE_DIR=<dir>`` for jax.profiler
+captures); everything here is off by default and costs ~nothing when off.
 """
 import argparse
 import tempfile
@@ -25,6 +34,7 @@ import time
 
 import numpy as np
 
+from repro import obs
 from repro.data.synthetic import banana_mc, train_test_split
 from repro.serve import ModelBank, SVMEngine
 from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
@@ -37,6 +47,8 @@ def main():
     ap.add_argument("--wave", type=int, default=128)
     ap.add_argument("--deadline-ms", type=float, default=2.0)
     args = ap.parse_args()
+
+    obs.configure(trace=True)        # the CLI's -S TRACE=1, programmatically
 
     x, y = banana_mc(n=args.n, n_classes=args.classes, seed=0)
     xtr, ytr, xte, yte = train_test_split(x, y, 0.25, 0)
@@ -109,6 +121,33 @@ def main():
         print(f"occupancy_mean={stats['occupancy_mean']:.2f}  "
               f"oldest_age_ms={stats['age_ms_max']:.2f}  "
               f"age_hist={stats['age_hist']}")
+
+        print("== observability: where did the latency go? ==")
+        # per-stage attribution for the whole run: queue (waiting for a
+        # wave) / pack (plan + fill) / dispatch (device launch) / device
+        # (XLA compute) / collect (blend + deliver)
+        for stage, v in stats["per_stage"].items():
+            print(f"  {stage:9s} total={v['total_ms']:8.2f} ms  "
+                  f"mean={v['mean_ms']:6.3f} ms  n={v['count']}")
+        # ... and for ONE request: every served response is attributable
+        rid = sorted(results)[0]
+        b = eng2.breakdown(rid)
+        print(f"request {rid}: total={b['total_ms']:.3f} ms = "
+              f"queue {b['queue_ms']:.3f} + pack {b['pack_ms']:.3f} + "
+              f"dispatch {b['dispatch_ms']:.3f} + device {b['device_ms']:.3f} "
+              f"+ collect {b['collect_ms']:.3f}  (wave {b['wave']})")
+        # the tracer aggregated every instrumented site across the demo
+        print("trace summary (per site):")
+        for site, agg in obs.tracer.summary().items():
+            print(f"  {site:24s} n={agg['count']:4d}  "
+                  f"mean={agg['mean_s'] * 1e3:7.3f} ms  "
+                  f"max={agg['max_s'] * 1e3:7.3f} ms")
+        # both surfaces export as JSONL for offline tooling
+        obs.tracer.write_jsonl(f"{ckpt}/trace.jsonl")
+        obs.metrics.write_jsonl(f"{ckpt}/metrics.jsonl")
+        assert obs.validate_jsonl(f"{ckpt}/metrics.jsonl") == []
+        print(f"dumped trace.jsonl ({len(obs.tracer.spans)} spans) and "
+              f"metrics.jsonl ({len(obs.metrics.names())} metrics)")
 
         print("== hot swap under traffic (versioned banks) ==")
         # v1: same fit, tighter compaction — a stand-in for any refreshed

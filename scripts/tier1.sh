@@ -53,11 +53,13 @@ PYTHONPATH=src python -m repro.cli select --model-dir "$SMOKE/model" \
 PYTHONPATH=src python -m repro.cli test --data "$SMOKE/xte.npy" \
   --labels "$SMOKE/yte.npy" --model-dir "$SMOKE/model"
 # serve: cold-start the async engine from bank/ alone, latency-bounded,
-# with the hot-swap watcher and a bounded admission queue enabled
+# with the hot-swap watcher, a bounded admission queue, and the
+# observability keys (tracing + metrics export) enabled
 PYTHONPATH=src python -m repro.cli serve --data "$SMOKE/xte.npy" \
   --model-dir "$SMOKE/model" --wave 16 -S DEADLINE_MS=5 \
   -S SWAP_POLL_MS=50 -S MAX_QUEUE=4096 --swap-watch \
-  --out "$SMOKE/pred.npy" > /dev/null
+  -S TRACE=1 -S METRICS_OUT="$SMOKE/metrics.jsonl" \
+  --out "$SMOKE/pred.npy" > "$SMOKE/serve_out.json"
 PYTHONPATH=src python - "$SMOKE" <<'PY'
 import sys
 import numpy as np
@@ -65,6 +67,27 @@ pred = np.load(f"{sys.argv[1]}/pred.npy")
 yte = np.load(f"{sys.argv[1]}/yte.npy")
 assert pred.shape == yte.shape, (pred.shape, yte.shape)
 assert (pred == np.sign(yte)).mean() > 0.5, "serve predictions degenerate"
+PY
+
+# metrics-schema smoke: the serve run above exported its registry via
+# METRICS_OUT — the JSONL must validate against repro.obs.metrics.v1
+# (operator dashboards pin this schema; drift fails the gate here), and
+# the serve payload must carry the per-request stage breakdown + trace
+PYTHONPATH=src python - "$SMOKE" <<'PY'
+import json
+import sys
+from repro.obs.metrics import MetricsRegistry, validate_jsonl
+d = sys.argv[1]
+errs = validate_jsonl(f"{d}/metrics.jsonl")
+assert errs == [], f"metrics JSONL schema drift: {errs}"
+reg, header = MetricsRegistry.read_jsonl(f"{d}/metrics.jsonl")
+assert header["stage"] == "serve", header
+served = reg.counter("serve.served").value
+assert served > 0 and reg.histogram("serve.request_ms").count == served
+payload = json.load(open(f"{d}/serve_out.json"))
+assert set(payload["per_stage"]) == {"queue", "pack", "dispatch",
+                                     "device", "collect"}, payload
+assert "serve.pack" in payload["trace"], sorted(payload["trace"])
 PY
 
 # CLI failure modes: missing/incomplete artifacts must exit non-zero with

@@ -54,6 +54,22 @@ and ``python -m repro.cli serve`` — never the trainer; split off with
                        ``cli serve --swap-watch`` (how often the bank
                        directory is checked for a newer version).
 
+Observability keys (consumed by ``repro.obs.configure`` — any stage; split
+off with :func:`split_obs_keys`)
+  TRACE                bool   enable the span tracer (``repro.obs.tracer``):
+                       monotonic-clock spans at every instrumented site,
+                       per-site summaries, JSONL trace dumps.  Off by
+                       default; disabled sites cost one attribute test.
+  METRICS_OUT          path   write the process metrics registry
+                       (counters/gauges/latency histograms, schema
+                       ``repro.obs.metrics.v1``) to this JSONL file when
+                       the CLI stage exits.
+  PROFILE_DIR          path   capture ``jax.profiler`` device traces around
+                       wave launches into this directory (each wave is a
+                       ``StepTraceAnnotation`` step; ``cv.d2``/
+                       ``cv.epilogue``/``cv.solve`` named scopes label the
+                       jitted CV internals).
+
 Accepted for liquidSVM compatibility, no effect here
   DISPLAY, THREADS
 """
@@ -75,7 +91,7 @@ _CELL_NAMES = ("none", "random", "voronoi", "overlap", "recursive",
 @dataclasses.dataclass(frozen=True)
 class ConfigKey:
     name: str
-    kind: str                       # int | float | bool | str | floats
+    kind: str                       # int | float | bool | str | path | floats
     doc: str
     field: Optional[str] = None     # SVMTrainerConfig field
     choices: Optional[Tuple] = None
@@ -83,6 +99,7 @@ class ConfigKey:
     hi: Optional[float] = None
     select: bool = False            # select-stage parameter
     serve: bool = False             # serve-stage (engine) parameter
+    obs: bool = False               # observability (repro.obs.configure)
     noop: bool = False              # accepted (compat), ignored
 
 
@@ -129,6 +146,11 @@ _KEYS: Dict[str, ConfigKey] = {k.name: k for k in [
               serve=True, lo=1),
     ConfigKey("SWAP_POLL_MS", "float", "hot-swap watcher poll interval",
               serve=True, lo=0.0),
+    ConfigKey("TRACE", "bool", "enable the span tracer", obs=True),
+    ConfigKey("METRICS_OUT", "path", "write metrics JSONL here on exit",
+              obs=True),
+    ConfigKey("PROFILE_DIR", "path", "jax.profiler capture directory",
+              obs=True),
     ConfigKey("DISPLAY", "int", "verbosity (compat; ignored)", noop=True),
     ConfigKey("THREADS", "int", "thread count (compat; ignored)", noop=True),
 ]}
@@ -136,6 +158,8 @@ _KEYS: Dict[str, ConfigKey] = {k.name: k for k in [
 _SELECT_NAMES = {"NPL_CONSTRAINT": "alpha", "NPL_CLASS": "npl_class"}
 _SERVE_NAMES = {"SERVE_OVERLAP": "overlap", "DEADLINE_MS": "deadline_ms",
                 "MAX_QUEUE": "max_queue", "SWAP_POLL_MS": "swap_poll_ms"}
+_OBS_NAMES = {"TRACE": "trace", "METRICS_OUT": "metrics_out",
+              "PROFILE_DIR": "profile_dir"}
 
 
 class ConfigError(ValueError):
@@ -154,6 +178,7 @@ def describe_keys() -> str:
         kind = k.kind or "int|str"
         extra = " (select stage)" if k.select else \
             " (serve stage)" if k.serve else \
+            " (observability)" if k.obs else \
             " (ignored)" if k.noop else ""
         rows.append(f"  {name:<20} {kind:<7} {k.doc}{extra}")
     return "\n".join(rows)
@@ -176,6 +201,9 @@ def _coerce(key: ConfigKey, raw: Any) -> Any:
                 v = tuple(float(p) for p in np.atleast_1d(raw))
         elif kind == "str":
             v = str(raw).lower()
+        elif kind == "path":
+            # filesystem paths keep their case, unlike "str" enum values
+            v = str(raw)
         else:                       # VORONOI: int code or method name
             s = str(raw).lower()
             if s in _CELL_NAMES:
@@ -218,6 +246,26 @@ def split_serve_keys(pairs: Dict[str, Any]
     return rest, serve
 
 
+def split_obs_keys(pairs: Dict[str, Any]
+                   ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Partition raw key pairs into (non-obs pairs, obs kwargs).
+
+    Observability keys (TRACE, METRICS_OUT, PROFILE_DIR) configure the
+    process-global ``repro.obs`` instruments, not the trainer or the
+    engine — callers pass the returned kwargs to ``repro.obs.configure``.
+    """
+    rest: Dict[str, Any] = {}
+    ob: Dict[str, Any] = {}
+    for name, raw in pairs.items():
+        canon = str(name).upper()
+        k = _KEYS.get(canon)
+        if k is not None and k.obs:
+            ob[_OBS_NAMES[canon]] = _coerce(k, raw)
+        else:
+            rest[name] = raw
+    return rest, ob
+
+
 def parse_keys(pairs: Dict[str, Any]) -> Dict[str, Any]:
     """Normalize/validate a {key: value} mapping to canonical upper keys."""
     out: Dict[str, Any] = {}
@@ -254,6 +302,11 @@ def apply_keys(base: SVMTrainerConfig, pairs: Dict[str, Any]
                 f"{name} is a serve-stage key — it configures the engine, "
                 f"not the trainer (use SVM(...).engine(), `cli serve`, or "
                 f"split_serve_keys)")
+        if k.obs:
+            raise ConfigError(
+                f"{name} is an observability key — it configures "
+                f"repro.obs, not the trainer (the session front door and "
+                f"the CLI split it off; see split_obs_keys)")
         if name == "VORONOI":
             fields["cell_method"] = v
         elif name == "MIN_WEIGHT":

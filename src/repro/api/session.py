@@ -234,6 +234,8 @@ class TrainResult:
                  "winners_moved": int(need.sum()),
                  "columns_resolved": 0, "resolve_calls": 0}
 
+        from repro import obs
+        m_resolved = obs.metrics.counter("select.columns_resolved")
         for c in np.flatnonzero(need.any(axis=(1, 2))):
             for g in np.unique(res.g_idx[c][need[c]]):
                 ts = np.argwhere(need[c] & (res.g_idx[c] == g))  # (m, 2)
@@ -242,17 +244,19 @@ class TrainResult:
                 pad = np.concatenate(
                     [ts, np.repeat(ts[:1], n_cols - len(ts), axis=0)])
                 l_of = res.l_idx[c, pad[:, 0], pad[:, 1]]
-                out = np.asarray(cv_mod.solve_columns_at(
-                    jnp.asarray(self.x_cells[c]),
-                    jnp.asarray(self.y_cells[c]),
-                    jnp.asarray(self.tmask_cells[c]),
-                    jnp.asarray(self.mask_cells[c]),
-                    jnp.asarray(self.gammas_cells[c, g]),
-                    jnp.asarray(self.lambdas[l_of], jnp.float32),
-                    jnp.asarray(sub_grid[pad[:, 1]], jnp.float32),
-                    jnp.asarray(pad[:, 0], jnp.int32),
-                    jnp.asarray(self.fold_keys[c]),
-                    self.cv_cfg))                                # (k, T*S)
+                with obs.tracer.span("select.resolve") as sp:
+                    sp.set(cell=int(c), columns=len(ts))
+                    out = np.asarray(cv_mod.solve_columns_at(
+                        jnp.asarray(self.x_cells[c]),
+                        jnp.asarray(self.y_cells[c]),
+                        jnp.asarray(self.tmask_cells[c]),
+                        jnp.asarray(self.mask_cells[c]),
+                        jnp.asarray(self.gammas_cells[c, g]),
+                        jnp.asarray(self.lambdas[l_of], jnp.float32),
+                        jnp.asarray(sub_grid[pad[:, 1]], jnp.float32),
+                        jnp.asarray(pad[:, 0], jnp.int32),
+                        jnp.asarray(self.fold_keys[c]),
+                        self.cv_cfg))                            # (k, T*S)
                 for j, (t, s) in enumerate(ts):
                     coefs[c, :, t, s] = out[:, j]
                     gamma[c, t, s] = self.gammas_cells[c, g]
@@ -261,6 +265,7 @@ class TrainResult:
                                                   res.l_idx[c, t, s], s]
                 stats["columns_resolved"] += len(ts)
                 stats["resolve_calls"] += 1
+                m_resolved.inc(len(ts))
 
         return SelectResult(
             rule=rule, config=cfg, cv_cfg=self.cv_cfg, scaler=self.scaler,
@@ -500,7 +505,12 @@ class SVM:
         sel_kw = dict(select_kwargs or {})
         srv_kw = dict(serve_kwargs or {})
         if config_keys:
-            from repro.api.config import apply_keys, split_serve_keys
+            from repro.api.config import (apply_keys, split_obs_keys,
+                                          split_serve_keys)
+            config_keys, key_obs = split_obs_keys(config_keys)
+            if key_obs:
+                from repro import obs
+                obs.configure(**key_obs)
             config_keys, key_srv = split_serve_keys(config_keys)
             srv_kw = {**key_srv, **srv_kw}
             cfg, key_sel = apply_keys(cfg, config_keys)

@@ -70,6 +70,44 @@ def _emit(payload: dict) -> None:
     sys.stdout.write("\n")
 
 
+def _setup_obs(pairs: dict) -> dict:
+    """Split TRACE/METRICS_OUT/PROFILE_DIR off a ``-S`` key dict and apply
+    them to the process-global ``repro.obs`` instruments; returns the
+    remaining pairs for the stage's own key handling."""
+    from repro.api.config import split_obs_keys
+    rest, obs_kw = split_obs_keys(pairs)
+    if obs_kw:
+        from repro import obs
+        obs.configure(**obs_kw)
+    return rest
+
+
+def _finish_obs(payload: dict) -> dict:
+    """Fold observability output into a stage's JSON payload.
+
+    Always surfaces restore fallbacks and corrupt-wave re-solves (silent
+    degradation an operator must see, satellite of PR 7); writes the
+    metrics JSONL when ``METRICS_OUT`` was configured and the per-site
+    span summary when ``TRACE`` was on.
+    """
+    from repro import obs
+    from repro.train.checkpoint import fallback_log
+    fl = fallback_log()
+    payload["checkpoint_fallbacks"] = len(fl)
+    if fl:
+        payload["checkpoint_fallback_steps"] = [list(x) for x in fl]
+    summary = obs.metrics.summary()
+    corrupt = summary.get("train.corrupt_waves", 0)
+    if corrupt:
+        payload["corrupt_waves_resolved"] = int(corrupt)
+    out = obs.flush_metrics(extra={"stage": payload.get("stage")})
+    if out:
+        payload["metrics_out"] = out
+    if obs.tracer.enabled:
+        payload["trace"] = obs.tracer.summary()
+    return payload
+
+
 def _fail(msg: str) -> "SystemExit":
     """Actionable operator error -> stderr + exit code 2 (not a traceback)."""
     print(f"error: {msg}", file=sys.stderr)
@@ -109,7 +147,7 @@ def cmd_train(args) -> int:
 
     scenario = _SCENARIOS[args.scenario]
     cfg, select_params = apply_keys(
-        SVMTrainerConfig(scenario=scenario), _parse_sets(args.set))
+        SVMTrainerConfig(scenario=scenario), _setup_obs(_parse_sets(args.set)))
     if cfg.weights == (1.0,):
         # npl/roc are weight-sweep scenarios: without an explicit
         # WEIGHTS/MIN_WEIGHT/... key, give them the front-ends' default
@@ -132,13 +170,14 @@ def cmd_train(args) -> int:
     with open(os.path.join(args.model_dir, "session.json"), "w") as f:
         json.dump({"select_rule": sess.select_rule,
                    "select_kwargs": sess.select_kwargs}, f)
-    _emit({"stage": "train", "n": tr.n, "d": tr.d,
-           "cells": tr.plan.n_cells, "slots": tr.packed.n_slots,
-           "grid": {"gammas": int(tr.gammas_cells.shape[1]),
-                    "lambdas": int(tr.lambdas.shape[0]),
-                    "tasks": int(tr.tasks.n_tasks),
-                    "sub": int(tr.gamma.shape[2])},
-           "model_dir": args.model_dir})
+    _emit(_finish_obs(
+        {"stage": "train", "n": tr.n, "d": tr.d,
+         "cells": tr.plan.n_cells, "slots": tr.packed.n_slots,
+         "grid": {"gammas": int(tr.gammas_cells.shape[1]),
+                  "lambdas": int(tr.lambdas.shape[0]),
+                  "tasks": int(tr.tasks.n_tasks),
+                  "sub": int(tr.gamma.shape[2])},
+         "model_dir": args.model_dir}))
     return 0
 
 
@@ -221,10 +260,11 @@ def cmd_serve(args) -> int:
     from repro.tasks.builder import combine_decisions
     import time as _time
 
-    leftover, serve_kw = split_serve_keys(_parse_sets(args.set))
+    leftover, serve_kw = split_serve_keys(_setup_obs(_parse_sets(args.set)))
     if leftover:
         raise SystemExit(f"serve only takes SERVE_OVERLAP/DEADLINE_MS/"
-                         f"MAX_QUEUE/SWAP_POLL_MS keys, "
+                         f"MAX_QUEUE/SWAP_POLL_MS and the observability "
+                         f"keys (TRACE/METRICS_OUT/PROFILE_DIR), "
                          f"got {sorted(leftover)}")
     bank_dir = os.path.join(args.model_dir, "bank")
     bank = _load_artifact(args.model_dir, "bank", ModelBank.load,
@@ -266,19 +306,21 @@ def cmd_serve(args) -> int:
     if args.out:
         np.save(args.out, pred)
     stats = eng.stats()
-    _emit({"stage": "serve", "n": int(src.n_rows),
-           "rps": src.n_rows / max(dt, 1e-9),
-           "routing": stats["routing"],
-           "deadline_ms": serve_kw.get("deadline_ms"),
-           "waves": stats.get("waves", 0),
-           "occupancy_mean": stats.get("occupancy_mean"),
-           "age_ms_max": stats.get("age_ms_max"),
-           "bank_version": stats["bank_version"],
-           "swaps": stats["swaps"],
-           "swap_requeued": stats["swap_requeued"],
-           "shed_rows": stats["shed_rows"],
-           "swap_polls": swaps_seen["polls"],
-           "out": args.out, "model_dir": args.model_dir})
+    _emit(_finish_obs(
+        {"stage": "serve", "n": int(src.n_rows),
+         "rps": src.n_rows / max(dt, 1e-9),
+         "routing": stats["routing"],
+         "deadline_ms": serve_kw.get("deadline_ms"),
+         "waves": stats.get("waves", 0),
+         "occupancy_mean": stats.get("occupancy_mean"),
+         "age_ms_max": stats.get("age_ms_max"),
+         "per_stage": stats["per_stage"],
+         "bank_version": stats["bank_version"],
+         "swaps": stats["swaps"],
+         "swap_requeued": stats["swap_requeued"],
+         "shed_rows": stats["shed_rows"],
+         "swap_polls": swaps_seen["polls"],
+         "out": args.out, "model_dir": args.model_dir}))
     return 0
 
 
@@ -333,7 +375,7 @@ def _build_parser() -> argparse.ArgumentParser:
                          "mid-traffic (interval: -S SWAP_POLL_MS)")
     vp.add_argument("-S", "--set", action="append", metavar="KEY=VALUE",
                     help="SERVE_OVERLAP / DEADLINE_MS / MAX_QUEUE / "
-                         "SWAP_POLL_MS")
+                         "SWAP_POLL_MS / TRACE / METRICS_OUT / PROFILE_DIR")
     vp.set_defaults(fn=cmd_serve)
     return p
 

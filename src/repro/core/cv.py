@@ -228,16 +228,23 @@ def cv_cell(
     track_rates = cfg.keep_surface and cfg.solver == "hinge"
     # ONE D² for the whole gamma scan: the O(n²d) MXU cross term is hoisted
     # out of the lax.scan; each scan step replays only the O(n²) epilogue.
-    cg = kernel_fns.CachedGram.build(x, name=cfg.kernel) if use_d2 else None
+    # named_scope markers label the D²-vs-epilogue-vs-solve split in a
+    # PROFILE_DIR device trace (host timing cannot see inside this jit).
+    if use_d2:
+        with jax.named_scope("cv.d2"):
+            cg = kernel_fns.CachedGram.build(x, name=cfg.kernel)
+    else:
+        cg = None
 
     def per_gamma(carry, gamma):
         best_val, best_cfs, best_g, best_l, c0_all = carry
-        if use_d2:
-            k_full = cg.gram(gamma, gram_dtype)                # VPU-only pass
-        else:
-            k_full = spec.fn(x, x, gamma)                      # ONE Gram/gamma
-            if want_bf16:
-                k_full = k_full.astype(jnp.bfloat16)   # 2-byte solver reads
+        with jax.named_scope("cv.epilogue"):
+            if use_d2:
+                k_full = cg.gram(gamma, gram_dtype)            # VPU-only pass
+            else:
+                k_full = spec.fn(x, x, gamma)                  # ONE Gram/gamma
+                if want_bf16:
+                    k_full = k_full.astype(jnp.bfloat16)  # 2-byte solver reads
 
         # ONE Lipschitz estimate per gamma, shared by every fold: for a PSD
         # Gram, lambda_max(M K M) <= lambda_max(K) for any 0/1 mask M, so
@@ -273,7 +280,9 @@ def cv_cell(
                 fa = det = jnp.zeros_like(vl)
             return vl, fa, det, coefs
 
-        vl, fa, det, coefs = jax.vmap(per_fold)(train_folds, val_folds, c0_all)
+        with jax.named_scope("cv.solve"):
+            vl, fa, det, coefs = jax.vmap(per_fold)(train_folds, val_folds,
+                                                    c0_all)
         vl_mean = jnp.mean(vl, axis=0)                                  # (P,)
         fa_tls = jnp.sum(fa, axis=0).reshape(n_tasks, n_lam, n_sub)
         det_tls = jnp.sum(det, axis=0).reshape(n_tasks, n_lam, n_sub)

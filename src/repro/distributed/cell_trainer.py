@@ -148,8 +148,13 @@ def train_cells_waves(
     fails checksum verification (torn write, bit rot) is re-solved, not
     loaded.
     """
+    from repro import obs
     from repro.testing import faults
     from repro.train import checkpoint as ckpt_mod
+
+    m_solved = obs.metrics.counter("train.waves_solved")
+    m_restored = obs.metrics.counter("train.waves_restored")
+    m_corrupt = obs.metrics.counter("train.corrupt_waves")
 
     keys_out = wave_keys(cfg)
     if wave_size is None or wave_size >= n_slots:
@@ -179,28 +184,36 @@ def train_cells_waves(
         faults.fire("trainer.wave.start", wave=w)
         res = None
         if w in restorable:
-            try:
-                man = ckpt_mod.peek_manifest(ckpt_dir, w)
-                target = {k: np.zeros(s, np.dtype(dt)) for k, s, dt in zip(
-                    sorted(keys_out), man["shapes"], man["dtypes"])}
-                tree, _, _ = ckpt_mod.restore_checkpoint(
-                    ckpt_dir, target, step=w)
-                res = tuple(np.asarray(tree[k]) for k in keys_out)
-            except ckpt_mod.CheckpointCorruptError:
-                res = None                 # torn/corrupt wave: re-solve it
+            with obs.tracer.span("train.wave.restore") as sp:
+                try:
+                    man = ckpt_mod.peek_manifest(ckpt_dir, w)
+                    target = {k: np.zeros(s, np.dtype(dt)) for k, s, dt in zip(
+                        sorted(keys_out), man["shapes"], man["dtypes"])}
+                    tree, _, _ = ckpt_mod.restore_checkpoint(
+                        ckpt_dir, target, step=w)
+                    res = tuple(np.asarray(tree[k]) for k in keys_out)
+                    m_restored.inc()
+                except ckpt_mod.CheckpointCorruptError:
+                    res = None             # torn/corrupt wave: re-solve it
+                    m_corrupt.inc()
+                    sp.set(wave=w, corrupt=True)
         if res is None:
-            arrays = stage(lo, lo + wave_size)
-            res = train_cells(*[jnp.asarray(a) for a in arrays],
-                              lam_c, sub_c, task_c, cfg, n_lam, n_sub,
-                              mesh=mesh, axis_names=axis_names)
-            res = tuple(np.asarray(r) for r in res)
+            with obs.tracer.span("train.wave.stage"):
+                arrays = stage(lo, lo + wave_size)
+            with obs.tracer.span("train.wave.solve"):
+                res = train_cells(*[jnp.asarray(a) for a in arrays],
+                                  lam_c, sub_c, task_c, cfg, n_lam, n_sub,
+                                  mesh=mesh, axis_names=axis_names)
+                res = tuple(np.asarray(r) for r in res)
+            m_solved.inc()
             faults.fire("trainer.wave.solved", wave=w)
             if ckpt_dir is not None:
-                ckpt_mod.save_checkpoint(
-                    ckpt_dir, w, dict(zip(keys_out, res)),
-                    extra={"wave": w, "wave_size": wave_size,
-                           "n_slots": n_slots, "fingerprint": fingerprint},
-                    keep_last=0)
+                with obs.tracer.span("train.wave.checkpoint"):
+                    ckpt_mod.save_checkpoint(
+                        ckpt_dir, w, dict(zip(keys_out, res)),
+                        extra={"wave": w, "wave_size": wave_size,
+                               "n_slots": n_slots, "fingerprint": fingerprint},
+                        keep_last=0)
         outs.append(res)
     return tuple(np.concatenate([o[i] for o in outs])[:n_slots]
                  for i in range(len(keys_out)))

@@ -1,0 +1,82 @@
+"""repro.obs — unified tracing + metrics for train/select/serve hot paths.
+
+One process-global :class:`Tracer` and :class:`MetricsRegistry` live here,
+mirroring how ``repro.testing.faults`` exposes one global site registry:
+production code imports the module and uses ``obs.tracer`` / ``obs.metrics``
+directly (or accepts them as injectable constructor arguments, as
+``SVMEngine`` does, defaulting to the globals).
+
+Configuration is three string keys, threaded through the normal ``-S``
+config-key surface (see ``repro.api.config``):
+
+  ``TRACE=1``            enable the span tracer
+  ``METRICS_OUT=<path>`` write the metrics registry as JSONL on exit
+  ``PROFILE_DIR=<path>`` capture ``jax.profiler`` traces around wave
+                         launches into this directory
+
+Everything is off by default and each disabled hook costs one attribute
+test on the hot path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from . import jaxprof
+from .metrics import (Counter, Gauge, Histogram, LATENCY_MS_BUCKETS,
+                      METRICS_SCHEMA, MetricsRegistry, WELL_KNOWN,
+                      validate_jsonl)
+from .trace import (NULL_SPAN, RingBuffer, Span, TRACE_SCHEMA, Tracer)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "LATENCY_MS_BUCKETS", "METRICS_SCHEMA",
+    "MetricsRegistry", "NULL_SPAN", "RingBuffer", "Span", "TRACE_SCHEMA",
+    "Tracer", "WELL_KNOWN", "configure", "jaxprof", "metrics", "metrics_out",
+    "profile_dir", "reset", "tracer", "validate_jsonl",
+]
+
+# process-global instruments — the default sinks for every instrumented site
+tracer = Tracer()
+metrics = MetricsRegistry()
+
+_METRICS_OUT: Optional[str] = None
+
+
+def configure(trace: Optional[bool] = None,
+              metrics_out: Optional[str] = None,
+              profile_dir: Optional[str] = None) -> None:
+    """Apply the observability config keys.  ``None`` leaves a setting
+    unchanged, so callers can forward exactly what the user passed."""
+    global _METRICS_OUT
+    if trace is not None:
+        tracer.enabled = bool(trace)
+    if metrics_out is not None:
+        _METRICS_OUT = metrics_out or None
+    if profile_dir is not None:
+        jaxprof.configure(profile_dir or None)
+
+
+def metrics_out() -> Optional[str]:
+    return _METRICS_OUT
+
+
+def profile_dir() -> Optional[str]:
+    return jaxprof.profile_dir()
+
+
+def flush_metrics(extra: Optional[Dict[str, Any]] = None) -> Optional[str]:
+    """Write the global registry to the configured ``METRICS_OUT`` path (if
+    any); returns the path written or None.  The CLI calls this on exit."""
+    if _METRICS_OUT is None:
+        return None
+    metrics.write_jsonl(_METRICS_OUT, extra=extra)
+    return _METRICS_OUT
+
+
+def reset() -> None:
+    """Return the process-global instruments to their startup state (tests)."""
+    global _METRICS_OUT
+    tracer.enabled = False
+    tracer.clear()
+    metrics.clear()
+    _METRICS_OUT = None
+    jaxprof.configure(None)

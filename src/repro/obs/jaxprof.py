@@ -1,0 +1,82 @@
+"""Optional ``jax.profiler`` hooks, gated by the ``PROFILE_DIR`` config key.
+
+The span tracer times HOST stages (queue/pack/device-wait/collect); what it
+cannot see is where the device time itself goes.  When a profile directory
+is configured (``obs.configure(profile_dir=...)``, or ``-S PROFILE_DIR=...``
+through the CLI), wave launches are bracketed with
+``jax.profiler.StepTraceAnnotation`` so each serve/train wave shows up as
+one step in the captured trace, and :func:`start`/:func:`stop` drive the
+device trace capture itself.
+
+Everything here degrades to a no-op when no directory is configured or the
+installed jax lacks the profiler — observability must never be the thing
+that crashes serving.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+# process-global profile directory; None = all hooks are no-ops
+_PROFILE_DIR: Optional[str] = None
+_ACTIVE = False
+
+
+def configure(profile_dir: Optional[str]) -> None:
+    global _PROFILE_DIR
+    _PROFILE_DIR = profile_dir
+
+
+def profile_dir() -> Optional[str]:
+    return _PROFILE_DIR
+
+
+def active() -> bool:
+    """True while a device trace capture is running."""
+    return _ACTIVE
+
+
+def start() -> bool:
+    """Begin a device trace capture into the configured directory.
+    Returns False (no-op) when unconfigured, already active, or the
+    profiler is unavailable on this jax build."""
+    global _ACTIVE
+    if _PROFILE_DIR is None or _ACTIVE:
+        return False
+    try:
+        import jax
+        jax.profiler.start_trace(_PROFILE_DIR)
+    except Exception:
+        return False
+    _ACTIVE = True
+    return True
+
+
+def stop() -> bool:
+    global _ACTIVE
+    if not _ACTIVE:
+        return False
+    _ACTIVE = False
+    try:
+        import jax
+        jax.profiler.stop_trace()
+    except Exception:
+        return False
+    return True
+
+
+def step(name: str, num: int):
+    """Context manager bracketing one wave launch as a profiler step.
+
+    ``with jaxprof.step("serve_wave", seq): dec = evaluate(...)`` — shows
+    up as step ``num`` of ``name`` in the captured trace.  Returns a
+    nullcontext unless a profile directory is configured (the hot path
+    pays one global read).
+    """
+    if _PROFILE_DIR is None:
+        return contextlib.nullcontext()
+    try:
+        import jax
+        return jax.profiler.StepTraceAnnotation(name, step_num=num)
+    except Exception:
+        return contextlib.nullcontext()

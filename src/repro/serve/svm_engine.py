@@ -60,10 +60,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.distributed.planner import WavePlan, plan_wave
 from repro.kernels import runtime
 from repro.kernels.kernel_matrix import ops as km_ops
 from repro.kernels.svm_predict import ops as sp_ops
+from repro.obs import jaxprof
+from repro.obs.trace import RingBuffer
 from repro.pipeline.assign import nearest_center, nearest_top2_dists
 from repro.serve.model_bank import ModelBank
 from repro.tasks.builder import combine_decisions
@@ -79,6 +82,13 @@ AGE_BUCKETS_MS = (1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0)
 # rid -> serving bank version attributions kept for late readers (bounded:
 # overload protection must bound EVERY per-request structure)
 _SERVED_VERSION_CAP = 65536
+
+# recent-wave detail window; exact aggregates live in running sums so a
+# long-running serve loop cannot grow memory by being observed
+_WAVE_STATS_CAP = 512
+
+# the per-wave host stages every served response decomposes into
+_STAGES = ("queue", "pack", "dispatch", "device", "collect")
 
 
 class OverloadError(RuntimeError):
@@ -192,6 +202,15 @@ class SVMEngine:
     docstring.  ``swap_poll_ms`` is carried for the serve-loop watcher
     (``repro.cli serve --swap-watch`` polls the bank directory at this
     interval); the engine itself never polls.
+
+    Observability: every wave's pack/dispatch/device/collect host stages
+    are timed unconditionally (one ``clock()`` read per boundary) into
+    ``wave_stats`` (bounded ring + exact running aggregates, see
+    ``stats()["per_stage"]``), every completed request gets a
+    queue/pack/dispatch/device/collect breakdown (:meth:`breakdown`), and
+    the same timestamps feed the ``tracer``/``metrics`` instruments —
+    defaulting to the process-global ``repro.obs`` pair, injectable for
+    tests.  A disabled tracer costs one attribute test per site.
     """
 
     def __init__(
@@ -210,6 +229,8 @@ class SVMEngine:
         shed_ms: Optional[float] = None,
         swap_poll_ms: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
+        tracer: Optional["obs.Tracer"] = None,
+        metrics: Optional["obs.MetricsRegistry"] = None,
     ):
         if cache_dtype not in ("f32", "bf16"):
             raise ValueError(f"cache_dtype must be f32|bf16, got {cache_dtype!r}")
@@ -235,10 +256,27 @@ class SVMEngine:
             collections.OrderedDict()
         self._last_wave: Optional[dict] = None
         self.counters = collections.Counter()
-        self.wave_stats: List[dict] = []
+        # recent-wave window; stats() aggregates come from the running
+        # sums below so they stay EXACT after the ring wraps
+        self.wave_stats = RingBuffer(_WAVE_STATS_CAP)
+        self._occ_sum = 0.0
+        self._age_ms_max = 0.0
+        self._age_hist_sum = [0] * (len(AGE_BUCKETS_MS) + 1)
+        self._stage_ms = {s: 0.0 for s in _STAGES}
+        self._stage_n = {s: 0 for s in _STAGES}
         # rid -> bank version that served it (bounded; see swap_bank)
         self.served_version: "collections.OrderedDict[int, int]" = \
             collections.OrderedDict()
+        # rid -> per-stage latency breakdown of the completing wave
+        # (bounded like served_version; read via breakdown())
+        self.served_breakdown: "collections.OrderedDict[int, dict]" = \
+            collections.OrderedDict()
+        self._tracer = obs.tracer if tracer is None else tracer
+        self._metrics = obs.metrics if metrics is None else metrics
+        self._m_request_ms = self._metrics.histogram("serve.request_ms")
+        self._m_served = self._metrics.counter("serve.served")
+        self._m_shed = self._metrics.counter("serve.shed")
+        self._m_waves = self._metrics.counter("serve.waves")
         self._bind_bank(bank)
 
     def _bind_bank(self, bank: ModelBank) -> None:
@@ -327,6 +365,7 @@ class SVMEngine:
             if self.pending + parts > self.max_queue:
                 self.counters["shed_overflow"] += 1
                 self.counters["shed_rows"] += m
+                self._m_shed.inc()
                 raise OverloadError(
                     f"[{OverloadError.code}] admission queue full "
                     f"({self.pending} parts queued, batch needs {parts}, "
@@ -336,6 +375,7 @@ class SVMEngine:
             if age >= self.shed_ms:
                 self.counters["shed_stale"] += 1
                 self.counters["shed_rows"] += m
+                self._m_shed.inc()
                 raise OverloadError(
                     f"[{OverloadError.code}] backlog too stale (oldest "
                     f"queued request {age:.1f} ms >= shed_ms="
@@ -349,7 +389,8 @@ class SVMEngine:
         xs = (x_raw - self.bank.feat_mean) / self.bank.feat_std
         version = int(self.bank.version)
         if self.overlap:
-            c1, c2, w1, w2 = self.route_top2(xs)
+            with self._tracer.span("serve.route"):
+                c1, c2, w1, w2 = self.route_top2(xs)
             for i, rid in enumerate(map(int, ids)):
                 parts = [(int(c1[i]), np.float32(w1[i]))]
                 if w2[i] > 0.0:          # unreachable 2nd cell: single part
@@ -361,7 +402,8 @@ class SVMEngine:
                 for p, (c, _) in enumerate(parts):
                     self._queues[c].append((rid, p, xs[i]))
         else:
-            cells = self.route(xs)
+            with self._tracer.span("serve.route"):
+                cells = self.route(xs)
             for i, rid in enumerate(map(int, ids)):
                 self._reqs[rid] = _Request(
                     weights=(np.float32(1.0),), vals=[None],
@@ -460,6 +502,7 @@ class SVMEngine:
             raise RuntimeError(
                 "a wave is already in flight - call finish_step() first")
         faults.fire("engine.begin_step")
+        t_begin = float(self._clock())
         counts = np.asarray([len(q) for q in self._queues], np.int64)
         plan = plan_wave(counts, row_bucket=self.row_bucket,
                          slot_bucket=self.slot_bucket)
@@ -482,15 +525,24 @@ class SVMEngine:
                     entries.append((rid, part))
                     ages.append((now - self._reqs[rid].ts) * 1e3)
             slot_entries.append(entries)
+        t_pack = float(self._clock())
 
         cell_idx = np.maximum(plan.slot_cell, 0)     # padding slots: ignored rows
-        dec = self._evaluate(jnp.asarray(xt), jnp.asarray(cell_idx), plan)
+        with jaxprof.step("serve_wave", self.wave_stats.total):
+            dec = self._evaluate(jnp.asarray(xt), jnp.asarray(cell_idx), plan)
+        t_disp = float(self._clock())
+        rec = self._record_wave(plan, ages,
+                                pack_ms=(t_pack - t_begin) * 1e3,
+                                dispatch_ms=(t_disp - t_pack) * 1e3)
         # full snapshot: a swap_bank between begin and finish must not
         # change what this wave returns or which version it is tagged with
+        # (rec rides along so finish_step can attach device/collect times)
         self._inflight = (plan, slot_entries, dec,
                           self.bank.n_tasks, self.bank.n_sub,
-                          int(self.bank.version))
-        self._record_wave(plan, ages)
+                          int(self.bank.version), rec)
+        self._tracer.record("serve.pack", t_begin, t_pack)
+        self._tracer.record("serve.dispatch", t_pack, t_disp)
+        self._m_waves.inc()
         self.counters["steps"] += 1
         return True
 
@@ -511,10 +563,13 @@ class SVMEngine:
         """
         if self._inflight is None:
             return {}
-        plan, slot_entries, dec, t, s_count, version = self._inflight
+        plan, slot_entries, dec, t, s_count, version, rec = self._inflight
         self._inflight = None
+        t_wait = float(self._clock())
         dec = np.asarray(dec)
+        t_dev = float(self._clock())
         results: Dict[int, np.ndarray] = {}
+        done_ts: List[Tuple[int, float]] = []
         for s, entries in enumerate(slot_entries):
             for r, (rid, part) in enumerate(entries):
                 req = self._reqs[rid]
@@ -526,9 +581,39 @@ class SVMEngine:
                         out = out + req.weights[p] * req.vals[p]
                     results[rid] = out
                     del self._reqs[rid]
+                    done_ts.append((rid, req.ts))
                     self.served_version[rid] = version
                     while len(self.served_version) > _SERVED_VERSION_CAP:
                         self.served_version.popitem(last=False)
+        t_col = float(self._clock())
+        device_ms = (t_dev - t_wait) * 1e3
+        collect_ms = (t_col - t_dev) * 1e3
+        rec["device_ms"] = device_ms
+        rec["collect_ms"] = collect_ms
+        self._stage_ms["device"] += device_ms
+        self._stage_ms["collect"] += collect_ms
+        self._stage_n["device"] += 1
+        self._stage_n["collect"] += 1
+        self._tracer.record("serve.device", t_wait, t_dev)
+        self._tracer.record("serve.collect", t_dev, t_col)
+        # per-response latency attribution: total is exact; queue is the
+        # residual (time not spent in this wave's pack/dispatch/device/
+        # collect — i.e. waiting in the admission queue or an earlier wave)
+        wave_ms = rec["pack_ms"] + rec["dispatch_ms"] + device_ms + collect_ms
+        for rid, ts in done_ts:
+            total_ms = (t_col - ts) * 1e3
+            queue_ms = max(total_ms - wave_ms, 0.0)
+            self._stage_ms["queue"] += queue_ms
+            self._stage_n["queue"] += 1
+            self._m_request_ms.observe(total_ms)
+            self.served_breakdown[rid] = {
+                "wave": rec["wave"], "total_ms": total_ms,
+                "queue_ms": queue_ms, "pack_ms": rec["pack_ms"],
+                "dispatch_ms": rec["dispatch_ms"],
+                "device_ms": device_ms, "collect_ms": collect_ms}
+            while len(self.served_breakdown) > _SERVED_VERSION_CAP:
+                self.served_breakdown.popitem(last=False)
+        self._m_served.inc(len(results))
         self.counters["served"] += len(results)
         self.counters[f"served_v{version}"] += len(results)
         self.counters["served_rows"] += plan.n_requests
@@ -544,11 +629,17 @@ class SVMEngine:
             self.begin_step()
         return self.finish_step()
 
-    def _record_wave(self, plan: WavePlan, ages: List[float]) -> None:
+    def _record_wave(self, plan: WavePlan, ages: List[float], *,
+                     pack_ms: float, dispatch_ms: float) -> dict:
+        """Append one wave record to the ring AND fold it into the running
+        aggregates (``stats()`` reads the sums, so it stays exact after the
+        ring wraps).  ``device_ms``/``collect_ms`` are filled in by
+        ``finish_step`` mutating the returned dict."""
         a = np.asarray(ages, np.float64)
         hist = np.bincount(np.searchsorted(AGE_BUCKETS_MS, a, side="right"),
                            minlength=len(AGE_BUCKETS_MS) + 1)
-        self.wave_stats.append({
+        rec = {
+            "wave": self.wave_stats.total,      # 0-based wave sequence no.
             "n_rows": plan.n_requests,
             "n_slots": plan.n_slots,
             "m_pad": plan.m_pad,
@@ -556,7 +647,31 @@ class SVMEngine:
             "oldest_ms": float(a.max()) if a.size else 0.0,
             "age_ms_mean": float(a.mean()) if a.size else 0.0,
             "age_hist": hist.tolist(),
-        })
+            "pack_ms": pack_ms,
+            "dispatch_ms": dispatch_ms,
+            "device_ms": 0.0,
+            "collect_ms": 0.0,
+        }
+        self.wave_stats.append(rec)
+        self._occ_sum += rec["occupancy"]
+        if rec["oldest_ms"] > self._age_ms_max:
+            self._age_ms_max = rec["oldest_ms"]
+        for i, n in enumerate(rec["age_hist"]):
+            self._age_hist_sum[i] += n
+        self._stage_ms["pack"] += pack_ms
+        self._stage_ms["dispatch"] += dispatch_ms
+        self._stage_n["pack"] += 1
+        self._stage_n["dispatch"] += 1
+        return rec
+
+    def breakdown(self, rid: int) -> Optional[dict]:
+        """Per-stage latency breakdown of a completed request:
+        ``{wave, total_ms, queue_ms, pack_ms, dispatch_ms, device_ms,
+        collect_ms}`` with ``total = queue + pack + dispatch + device +
+        collect`` exactly (queue is the residual: admission-queue wait plus
+        any earlier wave that served only part of an overlap request).
+        None for unknown/evicted ids (bounded like ``served_version``)."""
+        return self.served_breakdown.get(int(rid))
 
     # -------------------------------------------------- latency-bounded run
     def should_launch(self, deadline_ms: Optional[float] = None,
@@ -710,12 +825,18 @@ class SVMEngine:
         out["cached_d2_waves"] = len(self._d2_cache)
         out["cached_d2_bytes"] = int(sum(a.size * a.dtype.itemsize
                                          for a in self._d2_cache.values()))
-        out["waves"] = len(self.wave_stats)
-        if self.wave_stats:
-            out["occupancy_mean"] = float(
-                np.mean([w["occupancy"] for w in self.wave_stats]))
-            out["age_ms_max"] = float(
-                max(w["oldest_ms"] for w in self.wave_stats))
-            out["age_hist"] = np.sum(
-                [w["age_hist"] for w in self.wave_stats], axis=0).tolist()
+        # wave aggregates come from running sums, NOT the ring window, so
+        # they cover every wave ever launched (exact after the ring wraps)
+        out["waves"] = self.wave_stats.total
+        out["wave_stats_dropped"] = self.wave_stats.dropped
+        if self.wave_stats.total:
+            out["occupancy_mean"] = self._occ_sum / self.wave_stats.total
+            out["age_ms_max"] = self._age_ms_max
+            out["age_hist"] = list(self._age_hist_sum)
+        out["per_stage"] = {
+            s: {"total_ms": self._stage_ms[s],
+                "mean_ms": (self._stage_ms[s] / self._stage_n[s]
+                            if self._stage_n[s] else 0.0),
+                "count": self._stage_n[s]}
+            for s in _STAGES}
         return out

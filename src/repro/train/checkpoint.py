@@ -37,6 +37,7 @@ import json
 import os
 import shutil
 import tempfile
+import time
 import zipfile
 import zlib
 from typing import Any, Dict, List, Optional, Tuple
@@ -45,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.testing import faults
 
 PyTree = Any
@@ -66,6 +68,14 @@ class CheckpointCorruptError(RuntimeError):
 def fallback_log() -> List[Tuple[str, int]]:
     """Steps skipped as corrupt by restore fallbacks since process start."""
     return list(_FALLBACK_LOG)
+
+
+def _note_fallback(ckpt_dir: str, skipped: List[int]) -> None:
+    """Record steps a restore skipped as corrupt: the module log (exact
+    (dir, step) pairs for debugging) AND the metrics registry (the counter
+    operators watch — silent fallbacks were invisible before PR 7)."""
+    _FALLBACK_LOG.extend((ckpt_dir, int(s)) for s in skipped)
+    obs.metrics.counter("checkpoint.fallback_steps").inc(len(skipped))
 
 
 def _flatten_with_paths(tree: PyTree):
@@ -115,6 +125,7 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
     is advisory (readers fall back to directory listing when it is stale
     or torn).
     """
+    t_save = time.perf_counter()
     os.makedirs(ckpt_dir, exist_ok=True)
     _sweep_stale_tmp(ckpt_dir)
     paths, leaves, _ = _flatten_with_paths(tree)
@@ -175,6 +186,13 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
     faults.fire("checkpoint.save.post_latest", step=step)
 
     _gc(ckpt_dir, keep_last)
+    t_done = time.perf_counter()
+    obs.tracer.record("checkpoint.save", t_save, t_done)
+    obs.metrics.counter("checkpoint.saves").inc()
+    if t_done > t_save:
+        nbytes = sum(len(b) for b in raw)
+        obs.metrics.gauge("checkpoint.save_mbps").set(
+            nbytes / (t_done - t_save) / 1e6)
     return final
 
 
@@ -356,8 +374,7 @@ def restore_self_describing(ckpt_dir: str, step: Optional[int] = None
                 target[path.strip("[]'\"")] = np.zeros((), dtype=np.dtype(dt))
             tree, _, extra = restore_checkpoint(ckpt_dir, target, step=s)
             if i > 0:
-                _FALLBACK_LOG.extend(
-                    (ckpt_dir, int(c)) for c in candidates[:i])
+                _note_fallback(ckpt_dir, candidates[:i])
             return {k: np.asarray(v) for k, v in tree.items()}, extra
         except CheckpointCorruptError as e:
             if step is not None:
@@ -394,8 +411,7 @@ def restore_checkpoint(ckpt_dir: str, target: PyTree,
         try:
             out = _restore_one(ckpt_dir, target, int(s), shardings)
             if i > 0:
-                _FALLBACK_LOG.extend(
-                    (ckpt_dir, int(c)) for c in candidates[:i])
+                _note_fallback(ckpt_dir, candidates[:i])
             return out
         except CheckpointCorruptError as e:
             if step is not None:
@@ -411,11 +427,18 @@ def _restore_one(ckpt_dir: str, target: PyTree, step: int,
                  ) -> Tuple[PyTree, int, Dict[str, Any]]:
     d = os.path.join(ckpt_dir, _step_name(step))
     _RESTORING.add(os.path.abspath(d))
+    t_restore = time.perf_counter()
     try:
         manifest = _read_manifest(d)
         if manifest is None:
             raise CheckpointCorruptError(f"{d}: manifest missing or torn")
         leaves = _read_leaves(d, manifest)
+        t_read = time.perf_counter()
+        obs.tracer.record("checkpoint.restore", t_restore, t_read)
+        obs.metrics.counter("checkpoint.restores").inc()
+        if t_read > t_restore:
+            obs.metrics.gauge("checkpoint.restore_mbps").set(
+                sum(l.nbytes for l in leaves) / (t_read - t_restore) / 1e6)
         faults.fire("checkpoint.restore.mid", step=step)
 
         t_paths, t_leaves, treedef = _flatten_with_paths(target)

@@ -1,0 +1,347 @@
+"""Observability layer: spans, metrics, ring buffers, schemas.
+
+What is pinned here and why:
+  * span timing/nesting against an INJECTED clock — the tracer's numbers
+    must be exactly the clock deltas, not approximately;
+  * the disabled path — `span()` on a disabled tracer must return the
+    same singleton object and allocate nothing (measured with
+    tracemalloc), because these sites sit on the serve hot path;
+  * histogram bucket-edge semantics (a value ON an edge lands in that
+    edge's bucket; past the last edge lands in overflow);
+  * metrics JSONL round-trip + `validate_jsonl` (the tier-1 CLI smoke
+    validates real CLI output against this same checker);
+  * schema stability: the `stats()` keys and wave-record keys other tests
+    and the benchmark exporters rely on.
+"""
+import json
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.metrics import (Counter, Gauge, Histogram, LATENCY_MS_BUCKETS,
+                               METRICS_SCHEMA, MetricsRegistry,
+                               validate_jsonl)
+from repro.obs.trace import NULL_SPAN, RingBuffer, Tracer
+
+
+# ------------------------------------------------------------- ring buffer
+class TestRingBuffer:
+    def test_below_capacity_is_a_plain_list(self):
+        rb = RingBuffer(4)
+        for i in range(3):
+            rb.append(i)
+        assert list(rb) == [0, 1, 2]
+        assert len(rb) == 3 and rb.total == 3 and rb.dropped == 0
+        assert rb[0] == 0 and rb[-1] == 2
+
+    def test_wraps_keeping_newest(self):
+        rb = RingBuffer(4)
+        for i in range(10):
+            rb.append(i)
+        assert list(rb) == [6, 7, 8, 9]
+        assert len(rb) == 4
+        assert rb.total == 10 and rb.dropped == 6
+        assert rb[-1] == 9 and rb[0] == 6
+
+    def test_clear_and_bad_capacity(self):
+        rb = RingBuffer(2)
+        rb.append("x")
+        rb.clear()
+        assert len(rb) == 0 and rb.total == 0
+        with pytest.raises(ValueError):
+            RingBuffer(0)
+
+
+# ------------------------------------------------------------------ tracer
+class TestTracer:
+    def test_span_timing_with_injected_clock(self):
+        clk = [0.0]
+        tr = Tracer(enabled=True, clock=lambda: clk[0])
+        with tr.span("outer"):
+            clk[0] = 1.0
+            with tr.span("inner"):
+                clk[0] = 1.5
+            clk[0] = 3.0
+        spans = list(tr.spans)
+        assert [s.name for s in spans] == ["inner", "outer"]  # exit order
+        inner, outer = spans
+        assert inner.dur_s == 0.5 and inner.depth == 1
+        assert outer.dur_s == 3.0 and outer.depth == 0
+
+    def test_record_uses_caller_timestamps(self):
+        tr = Tracer(enabled=True, clock=lambda: 99.0)
+        tr.record("site", 2.0, 5.0)
+        (s,) = tr.spans
+        assert (s.t0, s.t1, s.dur_s) == (2.0, 5.0, 3.0)
+
+    def test_summary_is_exact_past_the_ring(self):
+        tr = Tracer(enabled=True, clock=lambda: 0.0, capacity=4)
+        for i in range(10):
+            tr.record("a", 0.0, float(i))
+        assert len(tr.spans) == 4 and tr.spans.total == 10
+        agg = tr.summary()["a"]
+        assert agg["count"] == 10
+        assert agg["total_s"] == sum(range(10))
+        assert agg["max_s"] == 9.0
+
+    def test_disabled_returns_the_null_singleton(self):
+        tr = Tracer(enabled=False)
+        assert tr.span("x") is NULL_SPAN
+        assert tr.span("y") is NULL_SPAN
+        with tr.span("z") as sp:
+            sp.set(attr=1)            # no-op, no error
+        tr.record("w", 0.0, 1.0)
+        assert len(tr.spans) == 0 and not tr.summary()
+
+    def test_disabled_hot_path_allocates_nothing(self):
+        tr = Tracer(enabled=False)
+        name = "serve.pack"
+        # warm up interned/cached state
+        for _ in range(10):
+            with tr.span(name):
+                pass
+            tr.record(name, 0.0, 1.0)
+        tracemalloc.start()
+        before = tracemalloc.take_snapshot()
+        for _ in range(1000):
+            with tr.span(name):
+                pass
+            tr.record(name, 0.0, 1.0)
+        after = tracemalloc.take_snapshot()
+        tracemalloc.stop()
+        grown = sum(d.size_diff for d in after.compare_to(before, "lineno")
+                    if d.size_diff > 0)
+        # tracemalloc's own bookkeeping shows up as a few small blocks;
+        # 1000 iterations of real allocation would be tens of KB
+        assert grown < 2048
+
+    def test_attrs_attach_to_live_spans(self):
+        tr = Tracer(enabled=True, clock=lambda: 0.0)
+        with tr.span("s") as sp:
+            sp.set(rows=7)
+        (s,) = tr.spans
+        assert s.attrs == {"rows": 7}
+
+    def test_trace_jsonl_dump(self, tmp_path):
+        tr = Tracer(enabled=True, clock=lambda: 0.0)
+        tr.record("a", 0.0, 1.0)
+        tr.record("b", 1.0, 3.0)
+        p = str(tmp_path / "trace.jsonl")
+        assert tr.write_jsonl(p) == 2
+        lines = [json.loads(l) for l in open(p)]
+        assert lines[0]["schema"] == "repro.obs.trace.v1"
+        assert lines[0]["spans_total"] == 2
+        assert {l["name"] for l in lines[1:]} == {"a", "b"}
+
+
+# ----------------------------------------------------------------- metrics
+class TestMetrics:
+    def test_counter_monotonic(self):
+        c = Counter("c")
+        c.inc()
+        c.inc(4)
+        assert c.value == 5
+        with pytest.raises(ValueError):
+            c.inc(-1)
+
+    def test_gauge_last_write_wins(self):
+        g = Gauge("g")
+        g.set(3.5)
+        g.set(1.25)
+        assert g.value == 1.25
+
+    def test_histogram_bucket_edges(self):
+        h = Histogram("h", (1.0, 2.0, 5.0))
+        # a value exactly ON an edge lands in that edge's bucket
+        # (bisect_left: bucket i covers (edge[i-1], edge[i]])
+        for v, want in [(0.5, 0), (1.0, 0), (1.5, 1), (2.0, 1),
+                        (4.9, 2), (5.0, 2), (5.1, 3), (100.0, 3)]:
+            before = list(h.counts)
+            h.observe(v)
+            assert h.counts[want] == before[want] + 1, (v, want)
+        assert h.count == 8 and sum(h.counts) == 8
+        assert h.mean() == pytest.approx(sum(
+            [0.5, 1.0, 1.5, 2.0, 4.9, 5.0, 5.1, 100.0]) / 8)
+
+    def test_histogram_rejects_bad_edges(self):
+        with pytest.raises(ValueError):
+            Histogram("h", ())
+        with pytest.raises(ValueError):
+            Histogram("h", (1.0, 1.0))
+        with pytest.raises(ValueError):
+            Histogram("h", (2.0, 1.0))
+
+    def test_registry_get_or_create_same_object(self):
+        reg = MetricsRegistry()
+        assert reg.counter("a") is reg.counter("a")
+        assert reg.histogram("h") is reg.histogram("h")
+        with pytest.raises(TypeError):
+            reg.gauge("a")
+        with pytest.raises(ValueError):
+            reg.histogram("h", (1.0, 2.0))   # bucket mismatch
+
+    def test_jsonl_round_trip(self, tmp_path):
+        reg = MetricsRegistry()
+        reg.counter("serve.served").inc(42)
+        reg.gauge("checkpoint.save_mbps").set(123.5)
+        h = reg.histogram("serve.request_ms")
+        for v in (0.3, 1.5, 7.0, 2000.0):
+            h.observe(v)
+        p = str(tmp_path / "metrics.jsonl")
+        assert reg.write_jsonl(p, extra={"stage": "serve"}) == 3
+        assert validate_jsonl(p) == []
+        back, header = MetricsRegistry.read_jsonl(p)
+        assert header["schema"] == METRICS_SCHEMA
+        assert header["stage"] == "serve"
+        assert back.counter("serve.served").value == 42
+        assert back.gauge("checkpoint.save_mbps").value == 123.5
+        hb = back.histogram("serve.request_ms")
+        assert hb.counts == h.counts and hb.count == 4
+        assert hb.buckets == tuple(LATENCY_MS_BUCKETS)
+
+    def test_validate_jsonl_catches_drift(self, tmp_path):
+        p = str(tmp_path / "bad.jsonl")
+        with open(p, "w") as f:
+            f.write(json.dumps({"schema": "other.v9", "unix_time": 0}) + "\n")
+            f.write(json.dumps({"name": "c", "type": "counter",
+                                "value": "NaN-ish"}) + "\n")
+            f.write(json.dumps({"name": "h", "type": "histogram",
+                                "buckets": [1.0, 2.0],
+                                "counts": [1, 2], "sum": 3.0,
+                                "count": 3}) + "\n")   # counts too short
+            f.write(json.dumps({"name": "c", "type": "gauge",
+                                "value": 1}) + "\n")   # duplicate name
+        errs = validate_jsonl(p)
+        assert any("schema" in e for e in errs)
+        assert any("non-numeric" in e for e in errs)
+        assert any("len(buckets)+1" in e for e in errs)
+        assert any("duplicate" in e for e in errs)
+        assert validate_jsonl(str(tmp_path / "missing.jsonl")) != []
+
+    def test_empty_and_garbage_files(self, tmp_path):
+        p = str(tmp_path / "empty.jsonl")
+        open(p, "w").close()
+        assert validate_jsonl(p) == ["empty file (expected a schema "
+                                     "header line)"]
+        with open(p, "w") as f:
+            f.write("not json\n")
+        assert any("not JSON" in e for e in validate_jsonl(p))
+
+
+# ------------------------------------------------------- module-level obs
+class TestGlobalConfigure:
+    def test_configure_and_reset(self, tmp_path):
+        try:
+            obs.configure(trace=True, metrics_out=str(tmp_path / "m.jsonl"),
+                          profile_dir=str(tmp_path / "prof"))
+            assert obs.tracer.enabled
+            assert obs.metrics_out() == str(tmp_path / "m.jsonl")
+            assert obs.profile_dir() == str(tmp_path / "prof")
+            obs.configure(trace=False)      # None leaves others unchanged
+            assert not obs.tracer.enabled
+            assert obs.metrics_out() == str(tmp_path / "m.jsonl")
+        finally:
+            obs.reset()
+        assert not obs.tracer.enabled
+        assert obs.metrics_out() is None and obs.profile_dir() is None
+
+    def test_flush_metrics_writes_configured_path(self, tmp_path):
+        try:
+            p = str(tmp_path / "m.jsonl")
+            obs.configure(metrics_out=p)
+            obs.metrics.counter("test.flush").inc(3)
+            assert obs.flush_metrics(extra={"stage": "t"}) == p
+            assert validate_jsonl(p) == []
+        finally:
+            obs.reset()
+        assert obs.flush_metrics() is None
+
+    def test_jaxprof_noop_when_unconfigured(self):
+        from repro.obs import jaxprof
+        assert jaxprof.profile_dir() is None
+        assert not jaxprof.start()
+        assert not jaxprof.stop()
+        with jaxprof.step("w", 0):
+            pass
+
+
+# ------------------------------------------------- engine schema stability
+class TestEngineSchemas:
+    """Pin the stats()/wave-record keys downstream consumers read."""
+
+    @pytest.fixture(scope="class")
+    def engine(self):
+        from repro.serve.model_bank import ModelBank
+        from repro.serve.svm_engine import SVMEngine
+        rng = np.random.default_rng(5)
+        n_cells, k, d = 2, 16, 4
+        centers = rng.normal(size=(n_cells, d)).astype(np.float32) * 4.0
+        sv = (centers[:, None, :]
+              + rng.normal(size=(n_cells, k, d))).astype(np.float32)
+        coefs = rng.normal(size=(n_cells, k, 1, 1)).astype(np.float32)
+        gamma = np.ones((n_cells, 1, 1), np.float32)
+        mask = np.ones((n_cells, k), np.float32)
+        bank = ModelBank.from_cells(sv, mask, coefs, gamma, centers)
+        eng = SVMEngine(bank, fused=False,
+                        metrics=MetricsRegistry(), tracer=Tracer())
+        for _ in range(2):
+            eng.submit((centers[rng.integers(0, n_cells, 9)]
+                        + rng.normal(size=(9, d))).astype(np.float32))
+            eng.step()
+        return eng
+
+    def test_stats_pins_existing_keys(self, engine):
+        st = engine.stats()
+        # the pre-PR-7 surface every existing consumer reads — keep as-is
+        for key in ("bank_version", "pending", "pending_requests", "routing",
+                    "pad_fraction", "cached_d2_waves", "cached_d2_bytes",
+                    "waves", "occupancy_mean", "age_ms_max", "age_hist",
+                    "swaps", "swap_requeued", "bank_fallbacks",
+                    "routing_degraded", "shed_overflow", "shed_stale",
+                    "shed_rows"):
+            assert key in st, key
+        # the PR-7 additions
+        assert set(st["per_stage"]) == {"queue", "pack", "dispatch",
+                                        "device", "collect"}
+        for v in st["per_stage"].values():
+            assert set(v) == {"total_ms", "mean_ms", "count"}
+        assert st["wave_stats_dropped"] == 0
+
+    def test_stats_exact_after_ring_wrap(self, monkeypatch):
+        """occupancy_mean / age_hist / waves stay exact once the ring
+        evicts — they come from running sums, not the retained window."""
+        from repro.serve import svm_engine as se
+        monkeypatch.setattr(se, "_WAVE_STATS_CAP", 2)
+        from repro.serve.model_bank import ModelBank
+        rng = np.random.default_rng(11)
+        n_cells, k, d = 2, 16, 4
+        centers = rng.normal(size=(n_cells, d)).astype(np.float32) * 4.0
+        sv = (centers[:, None, :]
+              + rng.normal(size=(n_cells, k, d))).astype(np.float32)
+        bank = ModelBank.from_cells(
+            sv, np.ones((n_cells, k), np.float32),
+            rng.normal(size=(n_cells, k, 1, 1)).astype(np.float32),
+            np.ones((n_cells, 1, 1), np.float32), centers)
+        eng = se.SVMEngine(bank, fused=False,
+                           metrics=MetricsRegistry(), tracer=Tracer())
+        occ = []
+        for _ in range(5):
+            eng.submit((centers[rng.integers(0, n_cells, 7)]
+                        + rng.normal(size=(7, d))).astype(np.float32))
+            eng.step()
+            occ.append(eng.wave_stats[-1]["occupancy"])
+        st = eng.stats()
+        assert len(eng.wave_stats) == 2
+        assert eng.wave_stats.dropped == 3
+        assert st["waves"] == 5 and st["wave_stats_dropped"] == 3
+        assert st["occupancy_mean"] == pytest.approx(np.mean(occ))
+        assert sum(st["age_hist"]) == eng.counters["served"]
+
+    def test_request_latency_histogram_observes(self, engine):
+        h = engine._metrics.histogram("serve.request_ms")
+        assert h.count == engine.counters["served"] > 0
+        assert engine._metrics.counter("serve.served").value == h.count
+        assert engine._metrics.counter("serve.waves").value \
+            == engine.stats()["waves"]

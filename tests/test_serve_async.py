@@ -450,7 +450,29 @@ class TestDeadlineStepper:
         eng.submit(pool[:10])
         eng.step()
         (w,) = eng.wave_stats
-        assert set(w) == {"n_rows", "n_slots", "m_pad", "occupancy",
-                          "oldest_ms", "age_ms_mean", "age_hist"}
+        assert set(w) == {"wave", "n_rows", "n_slots", "m_pad", "occupancy",
+                          "oldest_ms", "age_ms_mean", "age_hist",
+                          "pack_ms", "dispatch_ms", "device_ms",
+                          "collect_ms"}
         assert w["n_rows"] == sum(w["age_hist"])
         assert 0.0 < w["occupancy"] <= 1.0
+        assert w["wave"] == 0
+        for stage in ("pack_ms", "dispatch_ms", "device_ms", "collect_ms"):
+            assert w[stage] >= 0.0
+
+    def test_every_served_response_has_a_breakdown(self):
+        bank, pool = _bank(13)
+        eng = SVMEngine(bank, fused=False)
+        ids = eng.submit(pool[:10])
+        results = eng.step()
+        assert set(results) == set(int(i) for i in ids)
+        for rid in results:
+            b = eng.breakdown(rid)
+            assert b is not None
+            assert set(b) == {"wave", "total_ms", "queue_ms", "pack_ms",
+                              "dispatch_ms", "device_ms", "collect_ms"}
+            # the decomposition is exact: stages sum to the total
+            parts = (b["queue_ms"] + b["pack_ms"] + b["dispatch_ms"]
+                     + b["device_ms"] + b["collect_ms"])
+            assert parts == pytest.approx(b["total_ms"], abs=1e-6)
+        assert eng.breakdown(10 ** 9) is None
