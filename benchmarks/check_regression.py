@@ -1,0 +1,155 @@
+"""Regression gate over the committed BENCH_serve.json baselines.
+
+The benchmarks write their numbers into ``BENCH_serve.json`` so the perf
+trajectory is recorded — but nothing ever READ them back, so a PR that
+halved serving throughput would land silently as a new baseline.  This
+check closes that gap cheaply enough for tier-1: it re-measures ONE
+quick-mode sync drain in-process and compares against the committed
+numbers with wide tolerances (CI machines vary a lot; the bars catch
+collapses, not noise):
+
+  * ``engine_rps``       — fresh/baseline ratio within ``REPRO_REG_TOL``
+                           (default 5x either way);
+  * ``per_stage`` shares — each stage's share of wave time within
+                           ``REPRO_REG_SHARE_TOL`` (default +-0.35
+                           absolute) of the committed split — a stage
+                           that silently became the bottleneck moves its
+                           share far more than machine speed does;
+  * ``obs_overhead``     — the committed disabled-obs fraction is under
+                           its own recorded bar;
+  * ``latency``          — committed sketch quantiles are monotone
+                           (p50 <= p95 <= p99) and occupancy is in (0, 1]
+                           — internal-consistency checks on the sketch
+                           path, machine-independent.
+
+``REPRO_SKIP_REGRESSION=1`` skips the timed half (still validates the
+committed file); a missing BENCH_serve.json passes with a note, so fresh
+clones and CI without the benchmark artifacts are not blocked.
+
+``PYTHONPATH=src python -m benchmarks.check_regression`` — exit 0 pass,
+exit 1 with the violated bars listed.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from benchmarks.serve_throughput import OUT_PATH, _make_bank_and_traffic
+
+_STAGES = ("queue", "pack", "dispatch", "device", "collect")
+
+
+def _fresh_rps() -> float:
+    """One warmed quick-shape sync drain, in-process."""
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.serve.svm_engine import SVMEngine
+
+    n_cells, k, d = 8, 256, 24
+    n_req, wave = 1024, 256
+    compact, _full, queries = _make_bank_and_traffic(n_cells, k, d, 3, 4,
+                                                     n_req)
+
+    def drain():
+        eng = SVMEngine(compact, fused=False,
+                        metrics=MetricsRegistry(), tracer=Tracer())
+        for lo in range(0, queries.shape[0], wave):
+            eng.submit(queries[lo:lo + wave])
+            eng.step()
+
+    drain()                                    # compile + warmup
+    t0 = time.perf_counter()
+    drain()
+    return n_req / max(time.perf_counter() - t0, 1e-9)
+
+
+def check(baseline: dict, fresh_rps: float | None) -> list:
+    """Pure comparison half — returns the list of violated bars."""
+    errs = []
+
+    base_rps = baseline.get("engine_rps")
+    if fresh_rps is not None and base_rps:
+        tol = float(os.environ.get("REPRO_REG_TOL", "5.0"))
+        ratio = fresh_rps / base_rps
+        if not (1.0 / tol) <= ratio <= tol:
+            errs.append(f"engine_rps ratio {ratio:.2f} outside "
+                        f"[1/{tol}, {tol}] (fresh {fresh_rps:.0f} vs "
+                        f"baseline {base_rps:.0f})")
+
+    ps = baseline.get("per_stage")
+    if fresh_rps is not None and isinstance(ps, dict):
+        share_tol = float(os.environ.get("REPRO_REG_SHARE_TOL", "0.35"))
+        base_tot = sum(ps[s]["total_ms"] for s in _STAGES if s in ps)
+        fresh_ps = _fresh_per_stage()
+        fresh_tot = sum(fresh_ps[s]["total_ms"] for s in _STAGES)
+        for s in _STAGES:
+            if s not in ps or base_tot <= 0 or fresh_tot <= 0:
+                continue
+            b = ps[s]["total_ms"] / base_tot
+            f = fresh_ps[s]["total_ms"] / fresh_tot
+            if abs(f - b) > share_tol:
+                errs.append(f"per_stage.{s} share moved {b:.2f} -> {f:.2f} "
+                            f"(> +-{share_tol})")
+
+    ov = baseline.get("obs_overhead")
+    if isinstance(ov, dict) and "disabled_frac_of_sync" in ov:
+        bar = float(ov.get("bar", 0.02))
+        if ov["disabled_frac_of_sync"] >= bar:
+            errs.append(f"obs_overhead.disabled_frac_of_sync "
+                        f"{ov['disabled_frac_of_sync']:.4f} >= bar {bar}")
+
+    lat = baseline.get("latency")
+    if isinstance(lat, dict):
+        q = lat.get("sketch_q") or {}
+        qs = [q.get(p) for p in ("p50", "p95", "p99")]
+        if all(v is not None for v in qs) and not (qs[0] <= qs[1] <= qs[2]):
+            errs.append(f"latency.sketch_q not monotone: {qs}")
+        occ = lat.get("occupancy_mean")
+        if occ is not None and not 0.0 < occ <= 1.0:
+            errs.append(f"latency.occupancy_mean {occ} outside (0, 1]")
+    return errs
+
+
+def _fresh_per_stage() -> dict:
+    from repro.obs import MetricsRegistry, Tracer
+    from repro.serve.svm_engine import SVMEngine
+
+    compact, _full, queries = _make_bank_and_traffic(8, 256, 24, 3, 4, 1024)
+    eng = SVMEngine(compact, fused=False,
+                    metrics=MetricsRegistry(), tracer=Tracer())
+    for lo in range(0, queries.shape[0], 256):
+        eng.submit(queries[lo:lo + 256])
+        eng.step()
+    return eng.stats()["per_stage"]
+
+
+def main() -> int:
+    if not os.path.exists(OUT_PATH):
+        print(f"# check_regression: no baseline at {OUT_PATH} — pass "
+              f"(run benchmarks.serve_throughput + serve_microbench to "
+              f"record one)")
+        return 0
+    try:
+        with open(OUT_PATH) as f:
+            baseline = json.load(f)
+    except ValueError as e:
+        print(f"check_regression: {OUT_PATH} is not valid JSON ({e})")
+        return 1
+
+    skip = os.environ.get("REPRO_SKIP_REGRESSION") == "1"
+    fresh = None if skip else _fresh_rps()
+    errs = check(baseline, fresh)
+    if errs:
+        print("check_regression: FAIL")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    note = "baseline-only (REPRO_SKIP_REGRESSION=1)" if skip else \
+        f"fresh rps {fresh:.0f} vs baseline {baseline.get('engine_rps', 0):.0f}"
+    print(f"# check_regression: pass — {note}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

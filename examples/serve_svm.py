@@ -27,6 +27,16 @@ summary — and dumps the span trace + metrics registry as JSONL.  In
 production the same surfaces come from the CLI keys ``-S TRACE=1
 -S METRICS_OUT=<path>`` (and ``-S PROFILE_DIR=<dir>`` for jax.profiler
 captures); everything here is off by default and costs ~nothing when off.
+
+The last act closes the loop: a ``HealthMonitor`` watches per-cell
+routing-distance sketches against the train-time baseline every bank
+records at ``to_bank()`` time, a synthetic covariate shift on ONE cell
+drives that cell's drift score past the refresh threshold, and
+``refresh_drifted`` re-solves only that cell's columns (warm-started, at
+the already-selected hyper-parameters) before hot-swapping the bumped
+bank version back under the monitor — the CLI equivalent is ``serve
+--swap-watch --feedback-data ... -S SLO_P99_MS=... -S DRIFT_WINDOW=...
+-S DRIFT_REFRESH_THRESHOLD=...``.
 """
 import argparse
 import tempfile
@@ -176,6 +186,76 @@ def main():
               f"{st3.get('served_v0', 0)} on v0, "
               f"{st3.get('served_v1', 0)} on v1 — none dropped, "
               f"accuracy={(pred3 == yte).mean():.3f}")
+
+        print("== closed loop: monitor -> drift -> refresh -> swap ==")
+        # The health monitor watches two things the engine already
+        # computes: per-request latency (SLO burn rate against
+        # SLO_P99_MS) and per-cell routing distance, compared against the
+        # train-time baseline every bank records at to_bank() time.  In
+        # production the same loop runs as
+        #   python -m repro.cli serve --swap-watch \
+        #       --feedback-data f.npy --feedback-labels fy.npy \
+        #       -S SLO_P99_MS=20 -S DRIFT_REFRESH_THRESHOLD=3
+        from repro.serve import HealthMonitor, refresh_drifted
+        tr, sel = est.train_result, est.select_result
+        bank4 = sel.to_bank()
+        eng4 = SVMEngine(bank4)
+        # SLO generous enough that first-wave XLA compiles don't drown the
+        # drift story (production serves warmed shapes; a demo does not)
+        mon = HealthMonitor(eng4, slo_p99_ms=500.0, drift_window_s=2.0,
+                            drift_threshold=3.0, min_window_count=4)
+        for lo in range(0, xte.shape[0], 32):      # in-distribution traffic
+            eng4.submit(xte[lo:lo + 32])
+            eng4.step()
+        h = mon.health()
+        print(f"in-dist verdict: status={h['status']}  "
+              f"max_drift={h['drift']['max_score']:.2f}  "
+              f"burn_rate={h['slo']['burn_rate']:.2f}")
+
+        # inject covariate shift on ONE cell: push its queries outward from
+        # the owning center to a squared distance 5 baseline-spreads past
+        # the training median (they still route there, but land where only
+        # the training tail did) — by the drift-score formula that pins
+        # the score at ~5.0, past the 3.0 refresh threshold
+        xs = (xte - bank4.feat_mean) / bank4.feat_std
+        owner = eng4.route(xs)
+        target = int(np.bincount(owner, minlength=bank4.n_cells).argmax())
+        q50, q90, _n = bank4.route_baseline_arrays()
+        d2_shift = q50[target] + 5.0 * max(q90[target] - q50[target],
+                                           0.05 * q50[target])
+        u = xs[owner == target] - bank4.centers[target]
+        u /= np.maximum(np.linalg.norm(u, axis=1, keepdims=True), 1e-12)
+        far_s = (bank4.centers[target] +
+                 u * np.sqrt(d2_shift)).astype(np.float32)
+        far_s = far_s[eng4.route(far_s) == target]
+        far = (far_s * bank4.feat_std + bank4.feat_mean).astype(np.float32)
+        for _ in range(3):
+            eng4.submit(far)
+            eng4.step()
+        drifted = mon.drifted_cells()
+        scores = mon.drift_scores()
+        print(f"after shift on cell {target}: drifted={drifted}  "
+              f"scores={ {c: round(s, 1) for c, s in scores.items()} }")
+
+        # targeted refresh: feedback rows route back through the fit's own
+        # plan, ONLY the drifted cells' columns re-solve (warm-started, at
+        # the already-selected hyper-parameters), version bumps, hot swap
+        y_feed = np.ones(far.shape[0], np.float32)
+        bank5, info = refresh_drifted(tr, sel, far, y_feed, drifted,
+                                      base_version=eng4.bank.version)
+        print(f"refresh: {info['columns_resolved']} columns re-solved on "
+              f"{info['drifted_slots']} cell(s) "
+              f"({info['feedback_used']}/{info['feedback_rows']} feedback "
+              f"rows routed there) -> bank v{bank5.version}")
+        eng4.swap_bank(bank5)
+        mon.reset_cells(drifted)                   # measure POST-refresh
+        for lo in range(0, xte.shape[0], 32):      # traffic returns in-dist
+            eng4.submit(xte[lo:lo + 32])
+            eng4.step()
+        h = mon.health()
+        print(f"post-refresh verdict: status={h['status']}  "
+              f"bank_version={h['bank_version']}  "
+              f"max_drift={h['drift']['max_score']:.2f}")
 
 
 if __name__ == "__main__":

@@ -53,12 +53,15 @@ PYTHONPATH=src python -m repro.cli select --model-dir "$SMOKE/model" \
 PYTHONPATH=src python -m repro.cli test --data "$SMOKE/xte.npy" \
   --labels "$SMOKE/yte.npy" --model-dir "$SMOKE/model"
 # serve: cold-start the async engine from bank/ alone, latency-bounded,
-# with the hot-swap watcher, a bounded admission queue, and the
-# observability keys (tracing + metrics export) enabled
+# with the hot-swap watcher, a bounded admission queue, the health
+# monitor (SLO + drift keys), and the observability keys (tracing +
+# metrics/trace export) enabled
 PYTHONPATH=src python -m repro.cli serve --data "$SMOKE/xte.npy" \
   --model-dir "$SMOKE/model" --wave 16 -S DEADLINE_MS=5 \
   -S SWAP_POLL_MS=50 -S MAX_QUEUE=4096 --swap-watch \
+  -S SLO_P99_MS=500 -S DRIFT_WINDOW=5 -S DRIFT_REFRESH_THRESHOLD=3 \
   -S TRACE=1 -S METRICS_OUT="$SMOKE/metrics.jsonl" \
+  -S TRACE_OUT="$SMOKE/trace.jsonl" \
   --out "$SMOKE/pred.npy" > "$SMOKE/serve_out.json"
 PYTHONPATH=src python - "$SMOKE" <<'PY'
 import sys
@@ -88,6 +91,27 @@ payload = json.load(open(f"{d}/serve_out.json"))
 assert set(payload["per_stage"]) == {"queue", "pack", "dispatch",
                                      "device", "collect"}, payload
 assert "serve.pack" in payload["trace"], sorted(payload["trace"])
+# health monitor keys attached a HealthMonitor: the payload carries the
+# structured verdict (drift baseline recorded at to_bank time, SLO state)
+h = payload["health"]
+assert h["status"] in ("ok", "degraded", "breaching"), h
+assert h["drift"]["baseline"] is True, h
+assert "burn_rate" in h["slo"], h
+assert "deadline_miss_ratio" in h, h
+PY
+
+# trace-schema smoke: TRACE_OUT dumped the retained span window — the
+# JSONL must validate against repro.obs.trace.v1 (same contract as the
+# metrics schema above: operator tooling pins it, drift fails the gate)
+PYTHONPATH=src python - "$SMOKE" <<'PY'
+import json
+import sys
+from repro.obs.trace import validate_trace_jsonl
+d = sys.argv[1]
+errs = validate_trace_jsonl(f"{d}/trace.jsonl")
+assert errs == [], f"trace JSONL schema drift: {errs}"
+payload = json.load(open(f"{d}/serve_out.json"))
+assert payload["trace_out"] == f"{d}/trace.jsonl", payload.get("trace_out")
 PY
 
 # CLI failure modes: missing/incomplete artifacts must exit non-zero with
@@ -111,3 +135,11 @@ if PYTHONPATH=src python -m repro.cli select \
 fi
 
 echo "tier1: CLI smoke OK"
+
+# perf-regression gate: compare a fresh quick-mode drain against the
+# committed BENCH_serve.json baselines (wide tolerances — catches
+# collapses, not machine noise; REPRO_SKIP_REGRESSION=1 for the
+# baseline-only validation)
+PYTHONPATH=src python -m benchmarks.check_regression
+
+echo "tier1: OK"

@@ -54,16 +54,33 @@ and ``python -m repro.cli serve`` — never the trainer; split off with
                        ``cli serve --swap-watch`` (how often the bank
                        directory is checked for a newer version).
 
+Monitor keys (consumed by ``repro.serve.monitor.HealthMonitor`` —
+``SVM(...).monitor()`` and ``cli serve``; split off with
+:func:`split_monitor_keys`)
+  SLO_P99_MS           float  latency SLO: 99% of requests must complete
+                       under this many ms.  Enables rolling-window
+                       error-budget burn-rate tracking and breach events.
+  DRIFT_WINDOW         float  rolling window (seconds) for the per-cell
+                       routing-distance drift sketches and burn rates.
+  DRIFT_REFRESH_THRESHOLD float per-cell drift score at which the closed
+                       loop triggers a targeted ``refresh_bank`` +
+                       hot swap (``cli serve --swap-watch`` with
+                       ``--feedback-data``).
+
 Observability keys (consumed by ``repro.obs.configure`` — any stage; split
 off with :func:`split_obs_keys`)
   TRACE                bool   enable the span tracer (``repro.obs.tracer``):
                        monotonic-clock spans at every instrumented site,
                        per-site summaries, JSONL trace dumps.  Off by
                        default; disabled sites cost one attribute test.
+  TRACE_OUT            path   write the retained span window (schema
+                       ``repro.obs.trace.v1``) to this JSONL file when the
+                       CLI stage exits; implies TRACE=1 unless TRACE=0 is
+                       set explicitly.
   METRICS_OUT          path   write the process metrics registry
-                       (counters/gauges/latency histograms, schema
-                       ``repro.obs.metrics.v1``) to this JSONL file when
-                       the CLI stage exits.
+                       (counters/gauges/latency histograms/quantile
+                       sketches, schema ``repro.obs.metrics.v1``) to this
+                       JSONL file when the CLI stage exits.
   PROFILE_DIR          path   capture ``jax.profiler`` device traces around
                        wave launches into this directory (each wave is a
                        ``StepTraceAnnotation`` step; ``cv.d2``/
@@ -99,6 +116,7 @@ class ConfigKey:
     hi: Optional[float] = None
     select: bool = False            # select-stage parameter
     serve: bool = False             # serve-stage (engine) parameter
+    monitor: bool = False           # health-monitor (HealthMonitor) parameter
     obs: bool = False               # observability (repro.obs.configure)
     noop: bool = False              # accepted (compat), ignored
 
@@ -146,7 +164,16 @@ _KEYS: Dict[str, ConfigKey] = {k.name: k for k in [
               serve=True, lo=1),
     ConfigKey("SWAP_POLL_MS", "float", "hot-swap watcher poll interval",
               serve=True, lo=0.0),
+    ConfigKey("SLO_P99_MS", "float", "p99 latency SLO (burn-rate tracking)",
+              monitor=True, lo=0.0),
+    ConfigKey("DRIFT_WINDOW", "float", "drift/SLO rolling window seconds",
+              monitor=True, lo=0.0),
+    ConfigKey("DRIFT_REFRESH_THRESHOLD", "float",
+              "drift score that triggers a targeted bank refresh",
+              monitor=True, lo=0.0),
     ConfigKey("TRACE", "bool", "enable the span tracer", obs=True),
+    ConfigKey("TRACE_OUT", "path", "write trace JSONL here on exit",
+              obs=True),
     ConfigKey("METRICS_OUT", "path", "write metrics JSONL here on exit",
               obs=True),
     ConfigKey("PROFILE_DIR", "path", "jax.profiler capture directory",
@@ -158,8 +185,11 @@ _KEYS: Dict[str, ConfigKey] = {k.name: k for k in [
 _SELECT_NAMES = {"NPL_CONSTRAINT": "alpha", "NPL_CLASS": "npl_class"}
 _SERVE_NAMES = {"SERVE_OVERLAP": "overlap", "DEADLINE_MS": "deadline_ms",
                 "MAX_QUEUE": "max_queue", "SWAP_POLL_MS": "swap_poll_ms"}
-_OBS_NAMES = {"TRACE": "trace", "METRICS_OUT": "metrics_out",
-              "PROFILE_DIR": "profile_dir"}
+_MONITOR_NAMES = {"SLO_P99_MS": "slo_p99_ms",
+                  "DRIFT_WINDOW": "drift_window_s",
+                  "DRIFT_REFRESH_THRESHOLD": "drift_threshold"}
+_OBS_NAMES = {"TRACE": "trace", "TRACE_OUT": "trace_out",
+              "METRICS_OUT": "metrics_out", "PROFILE_DIR": "profile_dir"}
 
 
 class ConfigError(ValueError):
@@ -178,6 +208,7 @@ def describe_keys() -> str:
         kind = k.kind or "int|str"
         extra = " (select stage)" if k.select else \
             " (serve stage)" if k.serve else \
+            " (health monitor)" if k.monitor else \
             " (observability)" if k.obs else \
             " (ignored)" if k.noop else ""
         rows.append(f"  {name:<20} {kind:<7} {k.doc}{extra}")
@@ -246,6 +277,28 @@ def split_serve_keys(pairs: Dict[str, Any]
     return rest, serve
 
 
+def split_monitor_keys(pairs: Dict[str, Any]
+                       ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Partition raw key pairs into (non-monitor pairs, monitor kwargs).
+
+    Monitor keys (SLO_P99_MS, DRIFT_WINDOW, DRIFT_REFRESH_THRESHOLD)
+    configure the :class:`repro.serve.HealthMonitor` attached to an
+    engine, not the trainer or the engine itself — callers pass the
+    returned kwargs to ``HealthMonitor(engine, **kw)`` (or
+    ``SVM(...).monitor()``).
+    """
+    rest: Dict[str, Any] = {}
+    mon: Dict[str, Any] = {}
+    for name, raw in pairs.items():
+        canon = str(name).upper()
+        k = _KEYS.get(canon)
+        if k is not None and k.monitor:
+            mon[_MONITOR_NAMES[canon]] = _coerce(k, raw)
+        else:
+            rest[name] = raw
+    return rest, mon
+
+
 def split_obs_keys(pairs: Dict[str, Any]
                    ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     """Partition raw key pairs into (non-obs pairs, obs kwargs).
@@ -302,6 +355,11 @@ def apply_keys(base: SVMTrainerConfig, pairs: Dict[str, Any]
                 f"{name} is a serve-stage key — it configures the engine, "
                 f"not the trainer (use SVM(...).engine(), `cli serve`, or "
                 f"split_serve_keys)")
+        if k.monitor:
+            raise ConfigError(
+                f"{name} is a health-monitor key — it configures the "
+                f"serving HealthMonitor, not the trainer (use "
+                f"SVM(...).monitor(), `cli serve`, or split_monitor_keys)")
         if k.obs:
             raise ConfigError(
                 f"{name} is an observability key — it configures "

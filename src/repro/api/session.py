@@ -500,17 +500,21 @@ class SVM:
                  select_rule: Optional[str] = None,
                  select_kwargs: Optional[dict] = None,
                  serve_kwargs: Optional[dict] = None,
+                 monitor_kwargs: Optional[dict] = None,
                  **config_keys):
         cfg = config or SVMTrainerConfig()
         sel_kw = dict(select_kwargs or {})
         srv_kw = dict(serve_kwargs or {})
+        mon_kw = dict(monitor_kwargs or {})
         if config_keys:
-            from repro.api.config import (apply_keys, split_obs_keys,
-                                          split_serve_keys)
+            from repro.api.config import (apply_keys, split_monitor_keys,
+                                          split_obs_keys, split_serve_keys)
             config_keys, key_obs = split_obs_keys(config_keys)
             if key_obs:
                 from repro import obs
                 obs.configure(**key_obs)
+            config_keys, key_mon = split_monitor_keys(config_keys)
+            mon_kw = {**key_mon, **mon_kw}
             config_keys, key_srv = split_serve_keys(config_keys)
             srv_kw = {**key_srv, **srv_kw}
             cfg, key_sel = apply_keys(cfg, config_keys)
@@ -520,6 +524,7 @@ class SVM:
         self.select_rule = select_rule
         self.select_kwargs = sel_kw
         self.serve_kwargs = srv_kw
+        self.monitor_kwargs = mon_kw
         self._x, self._y = x, y
         self.train_result: Optional[TrainResult] = None
         self.select_result: Optional[SelectResult] = None
@@ -716,3 +721,14 @@ class SVM:
         from repro.serve.svm_engine import SVMEngine
         return SVMEngine(self.select_result.to_bank(),
                          **{**self.serve_kwargs, **engine_kwargs})
+
+    def monitor(self, engine, **monitor_kwargs):
+        """Attach a :class:`repro.serve.HealthMonitor` to an engine.
+
+        Monitor-stage string keys given at session construction
+        (``SLO_P99_MS``, ``DRIFT_WINDOW``, ``DRIFT_REFRESH_THRESHOLD``)
+        carry through here; explicit ``monitor_kwargs`` win.
+        """
+        from repro.serve.monitor import HealthMonitor
+        return HealthMonitor(engine,
+                             **{**self.monitor_kwargs, **monitor_kwargs})

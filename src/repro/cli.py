@@ -105,6 +105,9 @@ def _finish_obs(payload: dict) -> dict:
         payload["metrics_out"] = out
     if obs.tracer.enabled:
         payload["trace"] = obs.tracer.summary()
+    tout = obs.flush_trace()
+    if tout:
+        payload["trace_out"] = tout
     return payload
 
 
@@ -252,28 +255,70 @@ def cmd_serve(args) -> int:
     it is hot-swapped mid-traffic — in-flight waves finish on the old
     version, later admissions serve the new one.  A bank dir caught
     mid-write is skipped and retried at the next poll.
+
+    Monitor keys (``-S SLO_P99_MS=... / DRIFT_WINDOW=... /
+    DRIFT_REFRESH_THRESHOLD=...``) attach a
+    :class:`repro.serve.HealthMonitor`; the final payload then carries a
+    ``health`` verdict.  With ``--swap-watch`` AND a labelled feedback pool
+    (``--feedback-data``/``--feedback-labels``) the loop CLOSES: a cell
+    whose drift score crosses ``DRIFT_REFRESH_THRESHOLD`` triggers a
+    targeted ``refresh_drifted`` (only the drifted cells re-solve), the
+    bumped bank is written to ``bank/`` and hot-swapped mid-traffic, and
+    each trigger is traced (``serve.drift_refresh``) and counted
+    (``serve.drift_refreshes``).  Closing the loop needs the ``train/``
+    and ``select/`` artifacts next to ``bank/``.
     """
-    from repro.api.config import split_serve_keys
+    from repro.api.config import split_monitor_keys, split_serve_keys
     from repro.serve.model_bank import ModelBank
     from repro.serve.svm_engine import SVMEngine
     from repro.train import checkpoint as ckpt_mod
     from repro.tasks.builder import combine_decisions
+    from repro import obs
     import time as _time
 
-    leftover, serve_kw = split_serve_keys(_setup_obs(_parse_sets(args.set)))
+    leftover, mon_kw = split_monitor_keys(_setup_obs(_parse_sets(args.set)))
+    leftover, serve_kw = split_serve_keys(leftover)
     if leftover:
         raise SystemExit(f"serve only takes SERVE_OVERLAP/DEADLINE_MS/"
-                         f"MAX_QUEUE/SWAP_POLL_MS and the observability "
-                         f"keys (TRACE/METRICS_OUT/PROFILE_DIR), "
-                         f"got {sorted(leftover)}")
+                         f"MAX_QUEUE/SWAP_POLL_MS, the monitor keys "
+                         f"(SLO_P99_MS/DRIFT_WINDOW/DRIFT_REFRESH_THRESHOLD) "
+                         f"and the observability keys (TRACE/TRACE_OUT/"
+                         f"METRICS_OUT/PROFILE_DIR), got {sorted(leftover)}")
+    if (args.feedback_data is None) != (args.feedback_labels is None):
+        _fail("--feedback-data and --feedback-labels go together")
     bank_dir = os.path.join(args.model_dir, "bank")
     bank = _load_artifact(args.model_dir, "bank", ModelBank.load,
                           f"select --model-dir {args.model_dir}")
     eng = SVMEngine(bank, **serve_kw)
     src = _load_data(args.data)
 
+    mon = None
+    if mon_kw or args.feedback_data is not None:
+        from repro.serve.monitor import HealthMonitor
+        mon = HealthMonitor(eng, **mon_kw)
+
+    # the refresh half of the closed loop: needs the fit context (train/,
+    # select/) and a labelled feedback pool to re-solve drifted cells from
+    tr = sel = x_feed = y_feed = None
+    if args.feedback_data is not None:
+        if not args.swap_watch:
+            _fail("--feedback-data closes the drift->refresh loop; it "
+                  "requires --swap-watch")
+        from repro.api.session import SelectResult, TrainResult
+        tr = _load_artifact(args.model_dir, "train", TrainResult.load,
+                            f"train --model-dir {args.model_dir}")
+        sel = _load_artifact(args.model_dir, "select", SelectResult.load,
+                             f"select --model-dir {args.model_dir}")
+        x_feed = _load_data(args.feedback_data).materialize()
+        y_feed = np.load(args.feedback_labels)
+        if x_feed.shape[0] != y_feed.shape[0]:
+            _fail(f"feedback rows mismatch: {x_feed.shape[0]} data vs "
+                  f"{y_feed.shape[0]} labels")
+
     poll_ms = serve_kw.get("swap_poll_ms") or 500.0
     swaps_seen = {"polls": 0}
+    triggers: List[dict] = []
+    refreshed_slots: set = set()
 
     def _maybe_swap(last_poll: list) -> None:
         now = _time.monotonic()
@@ -289,11 +334,34 @@ def cmd_serve(args) -> int:
                 OSError, ValueError):
             pass                   # mid-write / torn bank: retry next poll
 
+    def _maybe_refresh() -> None:
+        """Drift crossed the threshold -> refresh ONLY those cells, write
+        the bumped bank and hot-swap it under the live traffic."""
+        from repro.serve.refresh import refresh_drifted
+        drifted = [c for c in mon.drifted_cells() if c not in refreshed_slots]
+        if not drifted:
+            return
+        refreshed_slots.update(drifted)   # one shot per slot per run
+        with obs.tracer.span("serve.drift_refresh") as sp:
+            sp.set(cells=len(drifted))
+            bank1, info = refresh_drifted(tr, sel, x_feed, y_feed, drifted,
+                                          base_version=eng.bank.version)
+        rec = {"cells": drifted, "scores": mon.drift_scores(), **info}
+        if bank1 is not None:
+            bank1.save(bank_dir, step=bank1.version)
+            eng.swap_bank(bank1)
+            obs.metrics.counter("serve.drift_refreshes").inc()
+            mon.reset_cells(drifted)
+            rec["version"] = bank1.version
+        triggers.append(rec)
+
     def traffic():
         last_poll = [float("-inf")]
         for _, chunk in src.iter_chunks(args.wave):
             if args.swap_watch:
                 _maybe_swap(last_poll)
+            if tr is not None:
+                _maybe_refresh()
             yield chunk
 
     t0 = _time.time()
@@ -306,21 +374,24 @@ def cmd_serve(args) -> int:
     if args.out:
         np.save(args.out, pred)
     stats = eng.stats()
-    _emit(_finish_obs(
-        {"stage": "serve", "n": int(src.n_rows),
-         "rps": src.n_rows / max(dt, 1e-9),
-         "routing": stats["routing"],
-         "deadline_ms": serve_kw.get("deadline_ms"),
-         "waves": stats.get("waves", 0),
-         "occupancy_mean": stats.get("occupancy_mean"),
-         "age_ms_max": stats.get("age_ms_max"),
-         "per_stage": stats["per_stage"],
-         "bank_version": stats["bank_version"],
-         "swaps": stats["swaps"],
-         "swap_requeued": stats["swap_requeued"],
-         "shed_rows": stats["shed_rows"],
-         "swap_polls": swaps_seen["polls"],
-         "out": args.out, "model_dir": args.model_dir}))
+    payload = {"stage": "serve", "n": int(src.n_rows),
+               "rps": src.n_rows / max(dt, 1e-9),
+               "routing": stats["routing"],
+               "deadline_ms": serve_kw.get("deadline_ms"),
+               "waves": stats.get("waves", 0),
+               "occupancy_mean": stats.get("occupancy_mean"),
+               "age_ms_max": stats.get("age_ms_max"),
+               "per_stage": stats["per_stage"],
+               "bank_version": stats["bank_version"],
+               "swaps": stats["swaps"],
+               "swap_requeued": stats["swap_requeued"],
+               "shed_rows": stats["shed_rows"],
+               "swap_polls": swaps_seen["polls"],
+               "out": args.out, "model_dir": args.model_dir}
+    if mon is not None:
+        payload["health"] = mon.health()
+        payload["drift_triggers"] = triggers
+    _emit(_finish_obs(payload))
     return 0
 
 
@@ -373,9 +444,16 @@ def _build_parser() -> argparse.ArgumentParser:
     vp.add_argument("--swap-watch", action="store_true",
                     help="poll bank/ for newer versions and hot-swap "
                          "mid-traffic (interval: -S SWAP_POLL_MS)")
+    vp.add_argument("--feedback-data", default=None,
+                    help="labelled feedback pool: close the drift->refresh "
+                         "loop (needs --swap-watch and train/+select/)")
+    vp.add_argument("--feedback-labels", default=None,
+                    help=".npy labels for --feedback-data")
     vp.add_argument("-S", "--set", action="append", metavar="KEY=VALUE",
                     help="SERVE_OVERLAP / DEADLINE_MS / MAX_QUEUE / "
-                         "SWAP_POLL_MS / TRACE / METRICS_OUT / PROFILE_DIR")
+                         "SWAP_POLL_MS / SLO_P99_MS / DRIFT_WINDOW / "
+                         "DRIFT_REFRESH_THRESHOLD / TRACE / TRACE_OUT / "
+                         "METRICS_OUT / PROFILE_DIR")
     vp.set_defaults(fn=cmd_serve)
     return p
 

@@ -13,6 +13,11 @@ Metric types
   * :class:`Histogram` — fixed bucket upper edges, counts per bucket plus
     one overflow bucket, running sum/count (latency distributions; buckets
     are fixed at creation so merged/exported histograms always line up)
+  * :class:`QuantileSketch` (``obs.sketch``) — mergeable online quantile
+    sketch: exact order statistics below a sample cap, KLL-style
+    bounded-rank-error compaction above it, the bound itself tracked and
+    exported.  This is where TRUE p50/p95/p99 come from; the fixed-bucket
+    histogram stays for bucket-aligned dashboards.
 
 JSONL schema (``repro.obs.metrics.v1``) — what :meth:`MetricsRegistry.
 write_jsonl` emits, :func:`validate_jsonl` checks, and the tier-1 CLI
@@ -23,6 +28,10 @@ metrics smoke pins:
   gauge:    {"name": str, "type": "gauge", "value": number}
   histogram:{"name": str, "type": "histogram", "buckets": [edges...],
              "counts": [len(edges)+1 ints], "sum": number, "count": int}
+  sketch:   {"name": str, "type": "sketch", "count": int, "sum": number,
+             "rank_error": int, "exact_cap": int, "level_cap": int,
+             "levels": [[number...]...], "q": {...}?}
+            (invariant: sum(len(levels[i]) * 2**i) == count)
 
 Names are dot-separated sites mirroring the tracer/faults idiom
 (``serve.request_ms``, ``checkpoint.fallback_steps``).  Well-known names
@@ -36,6 +45,8 @@ import json
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+from repro.obs.sketch import QuantileSketch
+
 METRICS_SCHEMA = "repro.obs.metrics.v1"
 
 # request-latency histogram upper edges (ms); one overflow bucket follows
@@ -45,9 +56,21 @@ LATENCY_MS_BUCKETS = (0.5, 1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0,
 # name -> one-line meaning; the documented metric surface
 WELL_KNOWN: Dict[str, str] = {
     "serve.request_ms": "histogram: submit -> blended-response latency",
+    "serve.request_ms.q": "sketch: true p50/p95/p99 of the same latency "
+                          "(exact below cap, bounded rank error above)",
     "serve.served": "counter: requests completed by the engine",
     "serve.shed": "counter: admission batches rejected by overload bounds",
     "serve.waves": "counter: waves dispatched",
+    "serve.slo_burn_rate": "gauge: SLO error-budget burn rate over the "
+                           "rolling window (>1 = burning budget)",
+    "serve.slo_breaches": "counter: burn-rate threshold crossings "
+                          "(ok -> breached transitions)",
+    "serve.drift_score_max": "gauge: worst per-cell routing-distance drift "
+                             "score at the last health() poll",
+    "serve.drift_alerts": "counter: health() polls with at least one cell "
+                          "over DRIFT_REFRESH_THRESHOLD",
+    "serve.drift_refreshes": "counter: drift-triggered refresh_bank + "
+                             "hot-swap cycles (the closed loop firing)",
     "train.waves_solved": "counter: training waves solved on device",
     "train.waves_restored": "counter: training waves restored from disk",
     "train.corrupt_waves": "counter: wave checkpoints failing verification "
@@ -131,7 +154,8 @@ class MetricsRegistry:
     with different buckets is an error — fixed buckets are the schema)."""
 
     def __init__(self):
-        self._metrics: Dict[str, Union[Counter, Gauge, Histogram]] = {}
+        self._metrics: Dict[str, Union[Counter, Gauge, Histogram,
+                                       QuantileSketch]] = {}
 
     def _get(self, name: str, cls, *args):
         m = self._metrics.get(name)
@@ -158,6 +182,15 @@ class MetricsRegistry:
                              f"{h.buckets}, requested {tuple(buckets)}")
         return h
 
+    def sketch(self, name: str, exact_cap: int = 2048,
+               level_cap: int = 256) -> QuantileSketch:
+        sk = self._get(name, QuantileSketch, exact_cap, level_cap)
+        if (sk.exact_cap, sk.level_cap) != (int(exact_cap), int(level_cap)):
+            raise ValueError(f"{name}: sketch exists with caps "
+                             f"({sk.exact_cap}, {sk.level_cap}), requested "
+                             f"({exact_cap}, {level_cap})")
+        return sk
+
     def clear(self) -> None:
         self._metrics.clear()
 
@@ -172,6 +205,8 @@ class MetricsRegistry:
             if isinstance(m, Histogram):
                 out[name] = {"count": m.count, "sum": m.sum,
                              "mean": m.mean(), "counts": list(m.counts)}
+            elif isinstance(m, QuantileSketch):
+                out[name] = m.summary()
             else:
                 out[name] = m.value
         return out
@@ -209,6 +244,8 @@ class MetricsRegistry:
                     reg.counter(d["name"]).inc(d["value"])
                 elif d["type"] == "gauge":
                     reg.gauge(d["name"]).set(d["value"])
+                elif d["type"] == "sketch":
+                    reg._metrics[d["name"]] = QuantileSketch.from_json(d)
                 else:
                     h = reg.histogram(d["name"], d["buckets"])
                     h.counts = list(d["counts"])
@@ -276,6 +313,26 @@ def validate_jsonl(path: str) -> List[str]:
                   or d["count"] != sum(c)):
                 errors.append(f"line {i}: {name}: counts/sum/count "
                               f"inconsistent")
+        elif typ == "sketch":
+            lv = d.get("levels")
+            caps_ok = (isinstance(d.get("exact_cap"), int)
+                       and isinstance(d.get("level_cap"), int)
+                       and d["exact_cap"] >= 1 and d["level_cap"] >= 2)
+            if (not isinstance(lv, list) or not caps_ok
+                    or not all(isinstance(l, list) and
+                               all(isinstance(v, (int, float)) for v in l)
+                               for l in lv)):
+                errors.append(f"line {i}: {name}: sketch needs integer "
+                              f"caps and numeric levels lists")
+            elif (not isinstance(d.get("count"), int)
+                  or not isinstance(d.get("sum"), (int, float))
+                  or not isinstance(d.get("rank_error"), int)
+                  or d["rank_error"] < 0
+                  or d["count"] != sum(len(l) << j
+                                       for j, l in enumerate(lv))):
+                # weight conservation: retained weights must cover count
+                errors.append(f"line {i}: {name}: sketch count/sum/"
+                              f"rank_error inconsistent with levels")
         else:
             errors.append(f"line {i}: {name}: unknown type {typ!r}")
     return errors

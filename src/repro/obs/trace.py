@@ -248,7 +248,9 @@ class Tracer:
     # ------------------------------------------------------------ exporting
     def write_jsonl(self, path: str) -> int:
         """Dump the retained span window as JSONL (header line first);
-        returns the number of span lines written."""
+        returns the number of span lines written.  The format is pinned as
+        ``repro.obs.trace.v1`` and checked by :func:`validate_trace_jsonl`
+        (the tier-1 smoke runs it against the CLI's ``TRACE_OUT``)."""
         n = 0
         with open(path, "w") as f:
             f.write(json.dumps({
@@ -260,3 +262,86 @@ class Tracer:
                 f.write(json.dumps(s.to_json()) + "\n")
                 n += 1
         return n
+
+
+_SUMMARY_FIELDS = ("count", "total_s", "mean_s", "max_s")
+
+
+def validate_trace_jsonl(path: str) -> List[str]:
+    """Check a trace JSONL file against the ``repro.obs.trace.v1`` schema.
+
+    The metrics validator's twin (``obs.metrics.validate_jsonl``): returns
+    a list of human-readable errors, empty when valid.  Pinned facts:
+
+      line 1:  {"schema": "repro.obs.trace.v1", "unix_time": number,
+                "spans_total": int >= "spans_dropped": int >= 0,
+                "summary": {site: {count, total_s, mean_s, max_s}}}
+      span:    {"name": str, "t0": number, "t1": number >= t0,
+                "dur_s": t1 - t0, "depth": int >= 0, "attrs": dict?}
+
+    and the span line count must equal ``spans_total - spans_dropped``
+    (the ring retains exactly what was not evicted).
+    """
+    errors: List[str] = []
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError as e:
+        return [f"unreadable: {e}"]
+    if not lines:
+        return ["empty file (expected a schema header line)"]
+    try:
+        header = json.loads(lines[0])
+    except ValueError as e:
+        return [f"line 1: not JSON ({e})"]
+    if header.get("schema") != TRACE_SCHEMA:
+        errors.append(f"line 1: schema={header.get('schema')!r}, "
+                      f"expected {TRACE_SCHEMA!r}")
+    if not isinstance(header.get("unix_time"), (int, float)):
+        errors.append("line 1: missing numeric unix_time")
+    total, dropped = header.get("spans_total"), header.get("spans_dropped")
+    if (not isinstance(total, int) or not isinstance(dropped, int)
+            or not 0 <= dropped <= total):
+        errors.append("line 1: spans_total/spans_dropped must be ints with "
+                      "0 <= dropped <= total")
+        total = dropped = None
+    summary = header.get("summary")
+    if not isinstance(summary, dict):
+        errors.append("line 1: missing summary dict")
+    else:
+        for site, agg in summary.items():
+            if (not isinstance(agg, dict)
+                    or not all(isinstance(agg.get(k), (int, float))
+                               for k in _SUMMARY_FIELDS)):
+                errors.append(f"line 1: summary[{site!r}] needs numeric "
+                              f"{'/'.join(_SUMMARY_FIELDS)}")
+    n_spans = 0
+    for i, line in enumerate(lines[1:], start=2):
+        if not line.strip():
+            continue
+        try:
+            d = json.loads(line)
+        except ValueError as e:
+            errors.append(f"line {i}: not JSON ({e})")
+            continue
+        n_spans += 1
+        name = d.get("name")
+        if not isinstance(name, str) or not name:
+            errors.append(f"line {i}: missing span name")
+            continue
+        t0, t1, dur = d.get("t0"), d.get("t1"), d.get("dur_s")
+        if (not isinstance(t0, (int, float)) or not isinstance(t1, (int, float))
+                or t1 < t0):
+            errors.append(f"line {i}: {name}: t0/t1 must be numeric with "
+                          f"t1 >= t0")
+        elif (not isinstance(dur, (int, float))
+              or abs(dur - (t1 - t0)) > 1e-9 * max(1.0, abs(t1))):
+            errors.append(f"line {i}: {name}: dur_s != t1 - t0")
+        if not isinstance(d.get("depth"), int) or d["depth"] < 0:
+            errors.append(f"line {i}: {name}: depth must be an int >= 0")
+        if "attrs" in d and not isinstance(d["attrs"], dict):
+            errors.append(f"line {i}: {name}: attrs must be a dict")
+    if total is not None and n_spans != total - dropped:
+        errors.append(f"{n_spans} span lines but header says "
+                      f"{total} total - {dropped} dropped")
+    return errors

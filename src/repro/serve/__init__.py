@@ -3,8 +3,10 @@ cell-routed SVM serving subsystem (``model_bank`` + ``svm_engine``)."""
 from repro.serve.kv_cache import pad_cache, cache_bytes
 from repro.serve.engine import generate, serve_step
 from repro.serve.model_bank import ModelBank
-from repro.serve.refresh import refresh_bank
+from repro.serve.monitor import HealthMonitor
+from repro.serve.refresh import refresh_bank, refresh_drifted
 from repro.serve.svm_engine import OverloadError, SVMEngine
 
 __all__ = ["pad_cache", "cache_bytes", "generate", "serve_step",
-           "ModelBank", "OverloadError", "SVMEngine", "refresh_bank"]
+           "HealthMonitor", "ModelBank", "OverloadError", "SVMEngine",
+           "refresh_bank", "refresh_drifted"]

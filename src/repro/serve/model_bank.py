@@ -49,6 +49,32 @@ from repro.train import checkpoint as ckpt_mod
 _FAR = np.float32(1.0e18)
 
 
+def _route_baseline(sv_cells: np.ndarray, mask_cells: np.ndarray,
+                    centers: np.ndarray) -> dict:
+    """Per-cell squared-distance quantiles of the training rows that BUILT
+    each cell, measured to the cell's own routing center — the reference
+    distribution ``serve.monitor`` scores live traffic against.  Computed
+    from the pre-compaction staged rows (``from_cells`` inputs), so it
+    reflects the training data, not the surviving SVs.  Cells with no live
+    rows (or non-finite padding centers) record n=0 and are skipped by the
+    drift scorer."""
+    c_count = sv_cells.shape[0]
+    q50 = np.zeros((c_count,), np.float64)
+    q90 = np.zeros((c_count,), np.float64)
+    n = np.zeros((c_count,), np.int64)
+    for c in range(c_count):
+        live = mask_cells[c] > 0
+        center = centers[c]
+        if not live.any() or not np.all(np.isfinite(center)):
+            continue
+        d2 = ((sv_cells[c][live] - center[None, :]) ** 2).sum(axis=1)
+        lo, hi = np.quantile(d2, (0.5, 0.9))
+        if not (np.isfinite(lo) and np.isfinite(hi)):
+            continue
+        q50[c], q90[c], n[c] = float(lo), float(hi), int(live.sum())
+    return {"q50": q50.tolist(), "q90": q90.tolist(), "n": n.tolist()}
+
+
 def _dedup_rows(sv: np.ndarray, coefs: np.ndarray):
     """Merge exact-duplicate SV rows, first-occurrence order preserved.
 
@@ -96,6 +122,15 @@ class ModelBank:
                               # only accepts hot swaps to a strictly newer
                               # version, and tags every response with the
                               # version that served it
+    route_baseline: Optional[dict] = None
+                              # train-time routing-distance baseline:
+                              # {"q50": [C], "q90": [C], "n": [C]} — per-cell
+                              # quantiles of the squared distance from the
+                              # cell's own (scaled) training rows to its
+                              # center.  serve.monitor compares live query
+                              # distances against this to score covariate
+                              # drift; None for banks that predate it
+                              # (drift detection disables itself).
 
     # ------------------------------------------------------------ properties
     @property
@@ -126,11 +161,22 @@ class ModelBank:
             "dtype": str(self.sv.dtype),
             "routing": self.routing,
             "version": int(self.version),
+            "drift_baseline": bool(self.route_baseline),
         }
 
     def with_version(self, version: int) -> "ModelBank":
         """Same bank, new version tag (arrays shared, not copied)."""
         return dataclasses.replace(self, version=int(version))
+
+    def route_baseline_arrays(self):
+        """(q50, q90, n) f64/int arrays from the recorded baseline, or
+        ``None`` when the bank predates drift baselines."""
+        rb = self.route_baseline
+        if not rb:
+            return None
+        return (np.asarray(rb["q50"], np.float64),
+                np.asarray(rb["q90"], np.float64),
+                np.asarray(rb["n"], np.int64))
 
     # ---------------------------------------------------------- construction
     @classmethod
@@ -155,6 +201,7 @@ class ModelBank:
         routing: str = "nearest",
         version: int = 0,
         pad_multiple: int = 8,
+        route_baseline: Optional[dict] = None,
     ) -> "ModelBank":
         """Compact a trained cell batch into a bank.
 
@@ -163,6 +210,11 @@ class ModelBank:
         disables dropping).  Row order is preserved, so with no droppable
         rows and no duplicates the compacted tables are bitwise identical
         to the inputs.
+
+        ``route_baseline``: pass a precomputed drift baseline to carry it
+        through; ``None`` (the default) computes it here from the
+        pre-compaction rows — every bank built this way supports drift
+        monitoring for free.
         """
         sv_cells = np.asarray(sv_cells, np.float32)
         mask_cells = np.asarray(mask_cells, np.float32)
@@ -200,6 +252,9 @@ class ModelBank:
             raise ValueError(f"dtype must be f32|bf16, got {dtype!r}")
         if routing not in ("nearest", "overlap"):
             raise ValueError(f"routing must be nearest|overlap, got {routing!r}")
+        centers = np.asarray(centers, np.float32)
+        if route_baseline is None:
+            route_baseline = _route_baseline(sv_cells, mask_cells, centers)
 
         if feat_mean is None:
             feat_mean = np.zeros((d,), np.float32)
@@ -209,7 +264,7 @@ class ModelBank:
             sv=sv, coefs=coefs,
             gammas=np.asarray(gamma_cells, np.float32).reshape(c_count, p),
             sv_count=counts,
-            centers=np.asarray(centers, np.float32),
+            centers=centers,
             feat_mean=np.asarray(feat_mean, np.float32),
             feat_std=np.asarray(feat_std, np.float32),
             classes=(np.zeros((0,), np.float32) if classes is None
@@ -219,7 +274,7 @@ class ModelBank:
             kernel=kernel, n_tasks=t_count, n_sub=s_count, scenario=scenario,
             raw_sv_total=int((mask_cells > 0).sum()),
             default_sub=int(default_sub), routing=routing,
-            version=int(version),
+            version=int(version), route_baseline=route_baseline,
         )
 
     @classmethod
@@ -255,7 +310,7 @@ class ModelBank:
 
     # --------------------------------------------------------- serialization
     _META_KEYS = ("kernel", "n_tasks", "n_sub", "scenario", "raw_sv_total",
-                  "default_sub", "routing", "version")
+                  "default_sub", "routing", "version", "route_baseline")
 
     def save(self, ckpt_dir: str, step: int = 0) -> str:
         """Atomic checkpoint write; a server cold-starts from this alone."""

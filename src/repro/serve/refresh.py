@@ -162,3 +162,43 @@ def refresh_bank(
     bank = refreshed.to_bank(drop_tol=drop_tol, dtype=dtype, dedup=dedup,
                              version=int(base_version) + 1)
     return bank, info
+
+
+def refresh_drifted(
+    tr: "TrainResult",
+    sel: "SelectResult",
+    x_feed: np.ndarray,
+    y_feed: np.ndarray,
+    drifted_slots,
+    **kwargs,
+) -> Tuple[Optional[ModelBank], dict]:
+    """Refresh EXACTLY the drifted cells from a labelled feedback pool.
+
+    The closed loop's refresh half (``serve.monitor`` names the slots, this
+    routes the feedback): feedback rows are routed with the fit's own plan
+    and only those landing in ``drifted_slots`` are folded in, so
+    :func:`refresh_bank` re-solves the drifted cells' columns and nothing
+    else — cells the monitor did not flag stay bitwise intact even when the
+    feedback pool contains rows for them.
+
+    Returns ``(bank, info)`` like :func:`refresh_bank`, with
+    ``feedback_rows`` / ``feedback_used`` added; ``bank`` is ``None`` (no
+    refresh, no version bump) when no feedback row routes into a drifted
+    slot — the caller keeps serving the current bank.
+    """
+    x_feed = np.asarray(x_feed, np.float32)
+    if x_feed.ndim == 1:
+        x_feed = x_feed[None, :]
+    y_feed = np.asarray(y_feed)
+    drifted = np.unique(np.asarray(list(drifted_slots), np.int64))
+    xs = tr.scaler.transform(x_feed)
+    slot_of = np.asarray(tr.packed.slot_of_cell)[tr.plan.route(xs)]
+    keep = np.isin(slot_of, drifted)
+    feed_info = {"feedback_rows": int(x_feed.shape[0]),
+                 "feedback_used": int(keep.sum())}
+    if not keep.any():
+        return None, {"drifted_slots": 0, "rows_added": 0, "rows_evicted": 0,
+                      "resolve_calls": 0, "columns_resolved": 0, **feed_info}
+    bank, info = refresh_bank(tr, sel, x_feed[keep], y_feed[keep], **kwargs)
+    info.update(feed_info)
+    return bank, info

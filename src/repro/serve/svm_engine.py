@@ -274,10 +274,20 @@ class SVMEngine:
         self._tracer = obs.tracer if tracer is None else tracer
         self._metrics = obs.metrics if metrics is None else metrics
         self._m_request_ms = self._metrics.histogram("serve.request_ms")
+        self._m_request_q = self._metrics.sketch("serve.request_ms.q")
         self._m_served = self._metrics.counter("serve.served")
         self._m_shed = self._metrics.counter("serve.shed")
         self._m_waves = self._metrics.counter("serve.waves")
+        # health monitor (serve.monitor.HealthMonitor attaches itself);
+        # detached cost is one `is not None` test per batch/wave
+        self._monitor = None
         self._bind_bank(bank)
+
+    def attach_monitor(self, monitor) -> None:
+        """Attach (or detach with ``None``) a health monitor.  The engine
+        feeds it per-batch routing distances (``observe_routing``) and
+        per-wave completed-request latencies (``observe_requests``)."""
+        self._monitor = monitor
 
     def _bind_bank(self, bank: ModelBank) -> None:
         """Point every bank-derived structure at ``bank``.
@@ -391,6 +401,8 @@ class SVMEngine:
         if self.overlap:
             with self._tracer.span("serve.route"):
                 c1, c2, w1, w2 = self.route_top2(xs)
+            if self._monitor is not None:
+                self._observe_routing(xs, c1)
             for i, rid in enumerate(map(int, ids)):
                 parts = [(int(c1[i]), np.float32(w1[i]))]
                 if w2[i] > 0.0:          # unreachable 2nd cell: single part
@@ -404,11 +416,23 @@ class SVMEngine:
         else:
             with self._tracer.span("serve.route"):
                 cells = self.route(xs)
+            if self._monitor is not None:
+                self._observe_routing(xs, cells)
             for i, rid in enumerate(map(int, ids)):
                 self._reqs[rid] = _Request(
                     weights=(np.float32(1.0),), vals=[None],
                     ts=float(ts[i]), left=1, raw=x_raw[i], version=version)
                 self._queues[int(cells[i])].append((rid, 0, xs[i]))
+
+    def _observe_routing(self, xs: np.ndarray, primary: np.ndarray) -> None:
+        """Feed the attached monitor each row's squared distance to its
+        PRIMARY routing center — O(m*d), uniform across the nearest and
+        overlap paths, and the same quantity the bank's train-time
+        ``route_baseline`` recorded."""
+        diff = xs - self._centers[primary]
+        d2 = np.einsum("ij,ij->i", diff, diff)
+        self._monitor.observe_routing(primary, d2,
+                                      now=float(self._clock()))
 
     # ------------------------------------------------------------- hot swap
     def swap_bank(self, new_bank: ModelBank, *, force: bool = False) -> dict:
@@ -600,12 +624,15 @@ class SVMEngine:
         # residual (time not spent in this wave's pack/dispatch/device/
         # collect — i.e. waiting in the admission queue or an earlier wave)
         wave_ms = rec["pack_ms"] + rec["dispatch_ms"] + device_ms + collect_ms
+        totals: List[float] = []
         for rid, ts in done_ts:
             total_ms = (t_col - ts) * 1e3
+            totals.append(total_ms)
             queue_ms = max(total_ms - wave_ms, 0.0)
             self._stage_ms["queue"] += queue_ms
             self._stage_n["queue"] += 1
             self._m_request_ms.observe(total_ms)
+            self._m_request_q.observe(total_ms)
             self.served_breakdown[rid] = {
                 "wave": rec["wave"], "total_ms": total_ms,
                 "queue_ms": queue_ms, "pack_ms": rec["pack_ms"],
@@ -613,6 +640,9 @@ class SVMEngine:
                 "device_ms": device_ms, "collect_ms": collect_ms}
             while len(self.served_breakdown) > _SERVED_VERSION_CAP:
                 self.served_breakdown.popitem(last=False)
+                self.counters["breakdown_evicted"] += 1
+        if self._monitor is not None and totals:
+            self._monitor.observe_requests(totals, now=t_col)
         self._m_served.inc(len(results))
         self.counters["served"] += len(results)
         self.counters[f"served_v{version}"] += len(results)
@@ -670,7 +700,18 @@ class SVMEngine:
         collect_ms}`` with ``total = queue + pack + dispatch + device +
         collect`` exactly (queue is the residual: admission-queue wait plus
         any earlier wave that served only part of an overlap request).
-        None for unknown/evicted ids (bounded like ``served_version``)."""
+
+        ``None`` has two distinct causes a caller can tell apart:
+
+          * the rid never completed here (unknown id, still pending, or
+            shed) — ``stats()["breakdown_evicted"]`` is unchanged by such
+            lookups and stays 0 on an engine that never wrapped;
+          * the entry was EVICTED from the bounded ring (oldest-first, cap
+            ``_SERVED_VERSION_CAP``) — every eviction increments
+            ``breakdown_evicted``, so a nonzero counter says old rids are
+            being dropped and a late reader holding one should treat its
+            ``None`` as "aged out", not "never served".
+        """
         return self.served_breakdown.get(int(rid))
 
     # -------------------------------------------------- latency-bounded run
@@ -813,7 +854,7 @@ class SVMEngine:
         # robustness counters are always visible, even at zero
         for k in ("swaps", "swap_requeued", "bank_fallbacks",
                   "routing_degraded", "shed_overflow", "shed_stale",
-                  "shed_rows"):
+                  "shed_rows", "breakdown_evicted"):
             out.setdefault(k, 0)
         out["bank_version"] = int(self.bank.version)
         out["pending"] = self.pending
@@ -839,4 +880,8 @@ class SVMEngine:
                             if self._stage_n[s] else 0.0),
                 "count": self._stage_n[s]}
             for s in _STAGES}
+        # true request-latency quantiles from the sketch (exact below its
+        # cap, analytic rank-error bound above; see obs.sketch)
+        if self._m_request_q.count:
+            out["request_ms_q"] = self._m_request_q.summary()
         return out

@@ -1,0 +1,401 @@
+"""Serving health: SLO burn rate, drift windows, and the closed loop.
+
+Everything time-dependent runs against an INJECTED clock (the engine and
+the monitor share one by default), so burn rates, window rotations and
+drift scores are exact assertions, not sleeps.  The closed-loop test is
+the PR's acceptance criterion end to end: a real voronoi fit, injected
+covariate shift on a strict subset of cells, drift crossing the
+threshold, a refresh that re-solves ONLY the drifted cells (counted
+solver columns, orders of magnitude below a full refit), a hot swap
+under traffic with zero dropped requests, and the engine's latency
+sketch agreeing with the pooled per-request breakdowns.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.obs import MetricsRegistry, Tracer
+from repro.obs.slo import SLOSpec, SLOTracker
+from repro.serve.model_bank import ModelBank
+from repro.serve.monitor import HealthMonitor
+from repro.serve.svm_engine import SVMEngine
+
+
+def _bank(seed=0, n_cells=3, k=16, d=4):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_cells, d)).astype(np.float32) * 4.0
+    sv = (centers[:, None, :]
+          + rng.normal(size=(n_cells, k, d))).astype(np.float32)
+    coefs = rng.normal(size=(n_cells, k, 2, 1)).astype(np.float32)
+    gamma = rng.uniform(0.5, 3.0, size=(n_cells, 2, 1)).astype(np.float32)
+    mask = np.ones((n_cells, k), np.float32)
+    bank = ModelBank.from_cells(sv, mask, coefs, gamma, centers)
+    pool = (centers[rng.integers(0, n_cells, 64)]
+            + rng.normal(size=(64, d)) * 1.0).astype(np.float32)
+    return bank, pool
+
+
+def _fake_engine(bank, clk, **kw):
+    return SVMEngine(bank, fused=False, clock=lambda: clk[0],
+                     metrics=MetricsRegistry(), tracer=Tracer(), **kw)
+
+
+# -------------------------------------------------------------- SLO tracker
+class TestSLOTracker:
+    def test_burn_rate_is_bad_fraction_over_budget(self):
+        clk = [100.0]
+        t = SLOTracker(SLOSpec(threshold_ms=20.0, percentile=0.99,
+                               window_s=60.0), clock=lambda: clk[0])
+        for _ in range(98):
+            t.record(5.0)
+        t.record(25.0)
+        t.record(30.0)                        # 2 bad / 100 = 2% vs 1% budget
+        assert t.window_counts() == (98, 2)
+        assert t.bad_fraction() == pytest.approx(0.02)
+        assert t.burn_rate() == pytest.approx(2.0)
+        assert not t.ok()
+
+    def test_window_evicts_old_buckets(self):
+        clk = [0.0]
+        t = SLOTracker(SLOSpec(threshold_ms=10.0, window_s=12.0),
+                       clock=lambda: clk[0], n_buckets=12)
+        t.record(99.0)                        # bad at t=0
+        assert t.window_counts() == (0, 1)
+        clk[0] = 6.0
+        t.record(1.0)                         # good at t=6; both in window
+        assert t.window_counts() == (1, 1)
+        clk[0] = 13.0                         # t=0 bucket aged out
+        assert t.window_counts() == (1, 0)
+        assert t.burn_rate() == 0.0
+        assert t.total_bad == 1               # lifetime totals never evict
+
+    def test_breach_and_recover_are_edge_triggered(self):
+        clk = [0.0]
+        t = SLOTracker(SLOSpec(threshold_ms=10.0, percentile=0.9,
+                               window_s=10.0), clock=lambda: clk[0])
+        for _ in range(8):
+            t.record(1.0)
+        t.record(50.0)
+        t.record(50.0)                        # 20% bad vs 10% budget
+        ev = t.poll()
+        assert [e["kind"] for e in ev] == ["slo_breach"]
+        assert t.poll() == []                 # still breaching: no re-fire
+        clk[0] = 11.0                         # window empties
+        ev = t.poll()
+        assert [e["kind"] for e in ev] == ["slo_recover"]
+        assert t.poll() == []
+        kinds = [e["kind"] for e in t.events]
+        assert kinds == ["slo_breach", "slo_recover"]
+
+    def test_percentile_zero_degenerates_to_miss_ratio(self):
+        clk = [0.0]
+        t = SLOTracker(SLOSpec(threshold_ms=2.0, percentile=0.0,
+                               window_s=5.0), clock=lambda: clk[0])
+        t.record(1.0)
+        t.record(3.0)
+        t.record(3.0)
+        t.record(3.0)
+        assert t.bad_fraction() == pytest.approx(0.75)
+        assert t.burn_rate() == pytest.approx(0.75)   # budget = 1
+
+    def test_spec_validation(self):
+        with pytest.raises(ValueError):
+            SLOSpec(threshold_ms=5.0, percentile=1.0)
+        with pytest.raises(ValueError):
+            SLOSpec(threshold_ms=5.0, window_s=0.0)
+
+
+# ------------------------------------------------------------ drift windows
+class TestHealthMonitor:
+    def test_in_distribution_traffic_scores_near_zero(self):
+        bank, pool = _bank()
+        clk = [0.0]
+        eng = _fake_engine(bank, clk)
+        mon = HealthMonitor(eng, drift_window_s=1.0, min_window_count=4,
+                            metrics=MetricsRegistry())
+        for lo in range(0, 64, 8):
+            eng.submit(pool[lo:lo + 8])
+            eng.step()
+            clk[0] += 0.01
+        scores = mon.drift_scores()
+        assert scores                          # windows populated
+        assert max(abs(s) for s in scores.values()) < 3.0
+        assert mon.drifted_cells() == []
+        h = mon.health()
+        assert h["status"] == "ok" and h["drift"]["baseline"]
+
+    def test_shifted_cell_crosses_threshold_alone(self):
+        bank, pool = _bank()
+        clk = [0.0]
+        eng = _fake_engine(bank, clk)
+        mon = HealthMonitor(eng, drift_window_s=1.0, drift_threshold=3.0,
+                            min_window_count=4, metrics=MetricsRegistry())
+        xs = (pool - bank.feat_mean) / bank.feat_std
+        owner = eng.route(xs)
+        target = int(np.bincount(owner).argmax())
+        sel_rows = xs[owner == target]
+        # outward covariate shift: scale residuals from the owning center
+        shifted_s = bank.centers[target] + (sel_rows
+                                            - bank.centers[target]) * 5.0
+        still = eng.route(shifted_s.astype(np.float32)) == target
+        shifted_s = shifted_s[still]
+        assert shifted_s.shape[0] >= 4
+        shifted = (shifted_s * bank.feat_std
+                   + bank.feat_mean).astype(np.float32)
+        for lo in range(0, 64, 8):             # mixed: in-dist + shifted
+            eng.submit(pool[lo:lo + 8])
+            eng.submit(shifted)
+            eng.step()
+            clk[0] += 0.01
+        drifted = mon.drifted_cells()
+        assert drifted == [target]             # ONLY the shifted cell
+        assert mon.health()["status"] == "degraded"
+
+    def test_window_rotation_is_clock_deterministic(self):
+        def run():
+            bank, pool = _bank(1)
+            clk = [0.0]
+            eng = _fake_engine(bank, clk)
+            mon = HealthMonitor(eng, drift_window_s=0.05,
+                                min_window_count=2,
+                                metrics=MetricsRegistry())
+            for lo in range(0, 64, 8):
+                eng.submit(pool[lo:lo + 8])
+                eng.step()
+                clk[0] += 0.02
+            return mon.drift_scores(), mon._windows_rotated
+
+        s1, r1 = run()
+        s2, r2 = run()
+        assert s1 == s2 and r1 == r2 and r1 > 0
+
+    def test_no_baseline_disables_drift(self):
+        bank, pool = _bank()
+        bare = dataclasses.replace(bank, route_baseline=None)  # pre-PR bank
+        clk = [0.0]
+        eng = _fake_engine(bare, clk)
+        mon = HealthMonitor(eng, metrics=MetricsRegistry())
+        eng.submit(pool[:16])
+        eng.step()
+        assert mon.drift_scores() == {}
+        h = mon.health()
+        assert h["drift"]["baseline"] is False and h["status"] == "ok"
+
+    def test_reset_cells_clears_windows(self):
+        bank, pool = _bank()
+        clk = [0.0]
+        eng = _fake_engine(bank, clk)
+        mon = HealthMonitor(eng, min_window_count=1,
+                            metrics=MetricsRegistry())
+        eng.submit(pool[:32])
+        eng.step()
+        cells = list(mon.drift_scores())
+        assert cells
+        mon.reset_cells(cells)
+        assert mon.drift_scores() == {}
+
+    def test_slo_and_deadline_threaded_through_health(self):
+        bank, pool = _bank()
+        clk = [0.0]
+        eng = _fake_engine(bank, clk, deadline_ms=5.0)
+        mon = HealthMonitor(eng, slo_p99_ms=1e-6,
+                            metrics=MetricsRegistry())
+        eng.submit(pool[:16])
+        clk[0] += 0.01                         # 10ms in queue: misses both
+        eng.step()
+        h = mon.health()
+        assert h["slo"]["breached"] and h["status"] == "breaching"
+        assert h["deadline_miss_ratio"] == pytest.approx(1.0)
+        assert mon._metrics.counter("serve.slo_breaches").value >= 1
+
+    def test_constructor_validation(self):
+        bank, _ = _bank()
+        clk = [0.0]
+        eng = _fake_engine(bank, clk)
+        with pytest.raises(ValueError):
+            HealthMonitor(eng, slo_p99_ms=5.0,
+                          slo=SLOSpec(threshold_ms=5.0),
+                          metrics=MetricsRegistry())
+        with pytest.raises(ValueError):
+            HealthMonitor(eng, drift_window_s=0.0,
+                          metrics=MetricsRegistry())
+
+
+# ------------------------------------------------------------- config keys
+class TestMonitorKeys:
+    def test_apply_keys_rejects_monitor_keys(self):
+        from repro.api.config import ConfigError, apply_keys
+        from repro.train.svm_trainer import SVMTrainerConfig
+        for key in ("SLO_P99_MS", "DRIFT_WINDOW", "DRIFT_REFRESH_THRESHOLD"):
+            with pytest.raises(ConfigError, match="health-monitor key"):
+                apply_keys(SVMTrainerConfig(), {key: 5.0})
+
+    def test_split_monitor_keys_maps_and_coerces(self):
+        from repro.api.config import ConfigError, split_monitor_keys
+        rest, mon = split_monitor_keys(
+            {"SLO_P99_MS": "20", "DRIFT_WINDOW": "2.5",
+             "DRIFT_REFRESH_THRESHOLD": "4", "FOLDS": "3"})
+        assert mon == {"slo_p99_ms": 20.0, "drift_window_s": 2.5,
+                       "drift_threshold": 4.0}
+        assert rest == {"FOLDS": "3"}
+        with pytest.raises(ConfigError):
+            split_monitor_keys({"SLO_P99_MS": "-1"})
+
+
+# ------------------------------------------- breakdown eviction (regression)
+class TestBreakdownEviction:
+    def test_evicted_vs_never_seen_are_distinguishable(self, monkeypatch):
+        from repro.serve import svm_engine as se
+        monkeypatch.setattr(se, "_SERVED_VERSION_CAP", 4)
+        bank, pool = _bank()
+        clk = [0.0]
+        eng = _fake_engine(bank, clk)
+        served = []
+        for lo in range(0, 12, 2):
+            eng.submit(pool[lo:lo + 2])
+            served.extend(eng.step())
+            clk[0] += 0.001
+        assert len(served) == 12
+        # lookups never move the counter; only ring eviction does
+        assert eng.breakdown(10 ** 9) is None            # never seen
+        assert eng.stats()["breakdown_evicted"] == 8      # 12 served, cap 4
+        assert eng.breakdown(min(served)) is None         # evicted (aged out)
+        assert eng.breakdown(max(served))["total_ms"] >= 0.0
+        # an engine that never wrapped keeps the counter at 0
+        eng2 = _fake_engine(bank, clk)
+        eng2.submit(pool[:2])
+        eng2.step()
+        assert eng2.breakdown(10 ** 9) is None
+        assert eng2.stats()["breakdown_evicted"] == 0
+
+
+# ------------------------------------------------------------- closed loop
+@pytest.mark.timeout(600)
+class TestClosedLoop:
+    @pytest.fixture(scope="class")
+    def fit(self):
+        from repro.api import SVM
+        from repro.data.synthetic import covtype_like
+        from repro.train.svm_trainer import SVMTrainerConfig
+        x, y = covtype_like(n=600, d=4, seed=3, label_noise=0.02, n_modes=3)
+        y = np.where(y == 0, -1.0, 1.0)
+        cfg = SVMTrainerConfig(n_folds=2, max_iters=150,
+                               cell_method="voronoi", cell_size=120)
+        sess = SVM(x, y, config=cfg)
+        sess.train()
+        sel = sess.select("argmin")
+        return sess.train_result, sel, x, y
+
+    def _shifted_traffic(self, bank, eng, x, factor=6.0):
+        """Covariate shift on ONE cell: scale residuals outward from its
+        center so the shifted queries still route there."""
+        xs = (np.asarray(x, np.float32) - bank.feat_mean) / bank.feat_std
+        owner = eng.route(xs)
+        target = int(np.bincount(owner, minlength=bank.n_cells).argmax())
+        rows = xs[owner == target]
+        shifted_s = bank.centers[target] + (rows
+                                            - bank.centers[target]) * factor
+        keep = eng.route(shifted_s.astype(np.float32)) == target
+        shifted_s = shifted_s[keep]
+        shifted = (shifted_s * bank.feat_std
+                   + bank.feat_mean).astype(np.float32)
+        return target, shifted, rows[keep]
+
+    def test_drift_refresh_swap_end_to_end(self, fit):
+        from repro.serve.refresh import refresh_drifted
+        tr, sel, x, y = fit
+        bank0 = sel.to_bank()
+        assert bank0.route_baseline is not None   # recorded at to_bank time
+        assert bank0.stats()["drift_baseline"]
+
+        clk = [0.0]
+        eng = _fake_engine(bank0, clk)
+        mon = HealthMonitor(eng, drift_window_s=1.0, drift_threshold=3.0,
+                            min_window_count=4, metrics=MetricsRegistry())
+
+        # phase 1: in-distribution traffic — no cell drifts
+        for lo in range(0, 200, 20):
+            eng.submit(x[lo:lo + 20].astype(np.float32))
+            eng.step()
+            clk[0] += 0.01
+        assert mon.drifted_cells() == []
+
+        # phase 2: inject covariate shift on one cell
+        target, shifted, _rows = self._shifted_traffic(bank0, eng, x)
+        assert shifted.shape[0] >= 4
+        for _ in range(4):
+            eng.submit(shifted)
+            eng.step()
+            clk[0] += 0.01
+        drifted = mon.drifted_cells()
+        assert target in drifted
+        assert set(drifted) < set(range(bank0.n_cells))   # strict subset
+
+        # phase 3: targeted refresh — ONLY the drifted cells re-solve
+        rng = np.random.default_rng(0)
+        y_feed = rng.choice([-1.0, 1.0], size=shifted.shape[0])
+        bank1, info = refresh_drifted(tr, sel, shifted, y_feed, drifted,
+                                      base_version=eng.bank.version)
+        assert bank1 is not None and bank1.version == bank0.version + 1
+        n_cols = sel.gamma.shape[1] * sel.gamma.shape[2]
+        assert info["drifted_slots"] <= len(drifted)
+        assert info["columns_resolved"] <= len(drifted) * n_cols
+        assert info["feedback_used"] == shifted.shape[0]
+        # a full refit would sweep the whole grid on every slot
+        full_columns = (tr.packed.n_slots * n_cols
+                        * tr.gammas_cells.shape[1] * tr.lambdas.shape[0])
+        assert info["columns_resolved"] * 20 < full_columns
+
+        # untouched cells decide identically across the refresh
+        xq = x[300:340].astype(np.float32)
+        xs = (xq - bank0.feat_mean) / bank0.feat_std
+        keep = ~np.isin(eng.route(xs), drifted)
+        if keep.any():
+            e0 = SVMEngine(bank0, fused=False,
+                           metrics=MetricsRegistry(), tracer=Tracer())
+            e1 = SVMEngine(bank1, fused=False,
+                           metrics=MetricsRegistry(), tracer=Tracer())
+            np.testing.assert_allclose(e0.predict(xq[keep]),
+                                       e1.predict(xq[keep]),
+                                       rtol=1e-5, atol=1e-5)
+
+        # phase 4: hot-swap mid-traffic — conservation, zero drops
+        submitted = eng.counters["submitted"]
+        served = eng.counters["served"]
+        eng.submit(x[400:420].astype(np.float32))
+        eng.begin_step()
+        eng.swap_bank(bank1)                   # wave in flight on bank0
+        eng.submit(x[420:440].astype(np.float32))
+        eng.finish_step()
+        eng.step()
+        clk[0] += 0.01
+        assert eng.bank.version == bank1.version
+        assert eng.counters["submitted"] - submitted == 40
+        assert eng.counters["served"] - served == 40      # nothing dropped
+        assert eng.counters["shed_rows"] == 0
+
+        # monitor follows the swap: baseline cache refreshes to bank1
+        mon.reset_cells(drifted)
+        assert mon._baseline_arrays() is not None
+        assert mon._baseline_version == bank1.version
+
+    def test_latency_sketch_matches_pooled_breakdowns(self, fit):
+        _tr, sel, x, _y = fit
+        bank = sel.to_bank()
+        clk = [0.0]
+        eng = _fake_engine(bank, clk)
+        rng = np.random.default_rng(5)
+        rids = []
+        for lo in range(0, 400, 16):
+            eng.submit(x[lo:lo + 16].astype(np.float32))
+            clk[0] += float(rng.uniform(0.0, 0.01))
+            rids.extend(eng.step())
+            clk[0] += float(rng.uniform(0.0, 0.005))
+        pooled = np.asarray([eng.breakdown(r)["total_ms"] for r in rids])
+        q = eng.stats()["request_ms_q"]
+        assert q["count"] == pooled.size
+        sk = eng._m_request_q
+        assert sk.exact                         # below cap: exactness
+        for name, qq in (("p50", 0.5), ("p90", 0.9), ("p99", 0.99)):
+            assert q[name] == np.quantile(pooled, qq, method="lower")

@@ -345,3 +345,79 @@ class TestEngineSchemas:
         assert engine._metrics.counter("serve.served").value == h.count
         assert engine._metrics.counter("serve.waves").value \
             == engine.stats()["waves"]
+
+
+# ---------------------------------------------------- trace schema validator
+class TestTraceValidator:
+    def _dump(self, tmp_path, name="trace.jsonl"):
+        tr = Tracer(enabled=True, clock=lambda: 0.0)
+        tr.record("serve.pack", 0.0, 1.0)
+        tr.record("serve.device", 1.0, 3.5)
+        with tr.span("outer") as sp:
+            sp.set(rows=3)
+        p = str(tmp_path / name)
+        tr.write_jsonl(p)
+        return p
+
+    def test_real_dump_validates(self, tmp_path):
+        from repro.obs.trace import validate_trace_jsonl
+        assert validate_trace_jsonl(self._dump(tmp_path)) == []
+
+    def test_corruptions_are_caught(self, tmp_path):
+        from repro.obs.trace import validate_trace_jsonl
+        p = self._dump(tmp_path)
+        lines = open(p).read().splitlines()
+        hdr = json.loads(lines[0])
+
+        bad = str(tmp_path / "bad_schema.jsonl")
+        with open(bad, "w") as f:
+            f.write(json.dumps(dict(hdr, schema="other.v9")) + "\n")
+            f.write("\n".join(lines[1:]) + "\n")
+        assert any("schema" in e for e in validate_trace_jsonl(bad))
+
+        bad = str(tmp_path / "missing_span.jsonl")     # count mismatch
+        with open(bad, "w") as f:
+            f.write("\n".join(lines[:-1]) + "\n")
+        assert any("spans_total" in e or "span line" in e
+                   for e in validate_trace_jsonl(bad))
+
+        span = json.loads(lines[1])
+        bad = str(tmp_path / "bad_time.jsonl")         # t1 < t0
+        with open(bad, "w") as f:
+            f.write(lines[0] + "\n")
+            f.write(json.dumps(dict(span, t0=5.0, t1=1.0, dur_s=-4.0)) + "\n")
+            f.write("\n".join(lines[2:]) + "\n")
+        assert validate_trace_jsonl(bad) != []
+
+        bad = str(tmp_path / "bad_dur.jsonl")          # dur != t1 - t0
+        with open(bad, "w") as f:
+            f.write(lines[0] + "\n")
+            f.write(json.dumps(dict(span, dur_s=99.0)) + "\n")
+            f.write("\n".join(lines[2:]) + "\n")
+        assert any("dur" in e for e in validate_trace_jsonl(bad))
+
+        assert validate_trace_jsonl(str(tmp_path / "nope.jsonl")) != []
+
+
+class TestTraceOut:
+    def test_trace_out_implies_tracing_and_flushes(self, tmp_path):
+        from repro.obs.trace import validate_trace_jsonl
+        p = str(tmp_path / "t.jsonl")
+        try:
+            obs.configure(trace_out=p)
+            assert obs.tracer.enabled          # TRACE_OUT implies TRACE
+            assert obs.trace_out() == p
+            with obs.tracer.span("unit.test"):
+                pass
+            assert obs.flush_trace() == p
+            assert validate_trace_jsonl(p) == []
+        finally:
+            obs.reset()
+        assert obs.trace_out() is None and obs.flush_trace() is None
+
+    def test_explicit_trace_false_wins(self, tmp_path):
+        try:
+            obs.configure(trace=False, trace_out=str(tmp_path / "t.jsonl"))
+            assert not obs.tracer.enabled
+        finally:
+            obs.reset()

@@ -1,0 +1,176 @@
+"""Quantile sketch: exactness below cap, bounded error above, mergeability.
+
+The sketch is the serving health layer's measurement primitive (per-cell
+routing-distance windows, request-latency quantiles), so its contract is
+pinned hard:
+
+  * **exact mode** — below ``exact_cap`` the sketch IS ``np.quantile``
+    with ``method="lower"`` (smallest value whose cumulative weight
+    exceeds q*(count-1)); no approximation sneaks in early;
+  * **merge ≡ pool** — merging sketches built from disjoint streams must
+    answer exactly like one sketch fed the pooled stream (below cap), and
+    within the TRACKED analytic rank-error bound above it.  The bound is
+    the point: ``rank_error`` accumulates ``2^i`` per level-i compaction,
+    so the property test can assert against the sketch's own error
+    arithmetic instead of a hand-tuned epsilon;
+  * **weight conservation** — sum over levels of ``len(level) * 2^i``
+    equals the observation count at every moment (compaction moves
+    weight, never loses it);
+  * **JSONL round trip** — the serialized form re-answers identically and
+    the metrics validator accepts it / rejects corruptions.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.obs.sketch import QuantileSketch
+
+QS = (0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0)
+
+
+def _pooled_rank_gap(sk: QuantileSketch, pooled: np.ndarray, q: float) -> int:
+    """Rank distance between the sketch's answer and the exact quantile."""
+    v = sk.quantile(q)
+    exact_rank = q * (pooled.size - 1)
+    lo = np.searchsorted(np.sort(pooled), v, side="left")
+    hi = np.searchsorted(np.sort(pooled), v, side="right") - 1
+    return int(min(abs(lo - exact_rank), abs(hi - exact_rank)))
+
+
+class TestExactMode:
+    def test_matches_numpy_lower_quantile(self):
+        rng = np.random.default_rng(0)
+        vals = rng.normal(size=500)
+        sk = QuantileSketch(exact_cap=2048)
+        sk.observe_many(vals)
+        assert sk.exact and sk.rank_error == 0
+        for q in QS:
+            assert sk.quantile(q) == np.quantile(vals, q, method="lower")
+
+    def test_mean_and_count(self):
+        sk = QuantileSketch()
+        sk.observe_many([1.0, 2.0, 4.0])
+        sk.observe(9.0)
+        assert sk.count == 4
+        assert sk.mean() == pytest.approx(4.0)
+
+    def test_empty_sketch(self):
+        sk = QuantileSketch()
+        assert sk.count == 0 and np.isnan(sk.quantile(0.5))
+        assert sk.summary()["count"] == 0
+
+
+class TestMerge:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n1=st.integers(1, 400),
+           n2=st.integers(1, 400))
+    def test_merged_exact_equals_pooled(self, seed, n1, n2):
+        rng = np.random.default_rng(seed)
+        a, b = rng.normal(size=n1), rng.exponential(size=n2)
+        s1 = QuantileSketch(exact_cap=1024)
+        s2 = QuantileSketch(exact_cap=1024)
+        s1.observe_many(a)
+        s2.observe_many(b)
+        s1.merge(s2)
+        pooled = np.concatenate([a, b])
+        assert s1.count == pooled.size
+        assert s1.exact        # n1+n2 <= 800 < exact_cap: still exact
+        for q in QS:
+            assert s1.quantile(q) == np.quantile(pooled, q, method="lower")
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_compacted_merge_within_tracked_bound(self, seed):
+        rng = np.random.default_rng(seed)
+        a = rng.normal(size=6000)
+        b = rng.normal(loc=3.0, size=6000)
+        s1 = QuantileSketch(exact_cap=256, level_cap=64)
+        s2 = QuantileSketch(exact_cap=256, level_cap=64)
+        s1.observe_many(a)
+        s2.observe_many(b)
+        s1.merge(s2)
+        pooled = np.concatenate([a, b])
+        assert not s1.exact and s1.rank_error > 0
+        for q in (0.1, 0.5, 0.9, 0.99):
+            assert _pooled_rank_gap(s1, pooled, q) <= s1.rank_error
+
+    def test_registry_cap_mismatch_rejected(self):
+        # merge() follows self's caps by design; the REGISTRY is where two
+        # writers with different cap ideas must collide loudly
+        from repro.obs.metrics import MetricsRegistry
+        reg = MetricsRegistry()
+        reg.sketch("s", exact_cap=128)
+        with pytest.raises(ValueError):
+            reg.sketch("s", exact_cap=64)
+
+
+class TestConservation:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 5000))
+    def test_weight_conserved_through_compaction(self, seed, n):
+        rng = np.random.default_rng(seed)
+        sk = QuantileSketch(exact_cap=64, level_cap=16)
+        for chunk in np.array_split(rng.normal(size=n), 7):
+            sk.observe_many(chunk)
+            assert sum(len(lv) << i
+                       for i, lv in enumerate(sk._levels)) == sk.count
+        assert sk.count == n
+
+    def test_deterministic(self):
+        vals = np.random.default_rng(7).normal(size=20000)
+        outs = []
+        for _ in range(2):
+            sk = QuantileSketch(exact_cap=256, level_cap=64)
+            sk.observe_many(vals)
+            outs.append((sk.rank_error, sk.quantiles((0.5, 0.9, 0.99))))
+        assert outs[0][0] == outs[1][0]
+        assert outs[0][1] == outs[1][1]
+
+
+class TestSerialization:
+    def test_json_round_trip(self):
+        rng = np.random.default_rng(3)
+        sk = QuantileSketch("serve.request_ms.q", exact_cap=128, level_cap=32)
+        sk.observe_many(rng.exponential(size=5000))
+        d = sk.to_json()
+        assert d["type"] == "sketch"
+        back = QuantileSketch.from_json(d)
+        assert back.count == sk.count and back.rank_error == sk.rank_error
+        for q in QS:
+            assert back.quantile(q) == sk.quantile(q)
+
+    def test_registry_jsonl_round_trip_and_validation(self, tmp_path):
+        from repro.obs.metrics import MetricsRegistry, validate_jsonl
+        reg = MetricsRegistry()
+        reg.sketch("serve.request_ms.q").observe_many([1.0, 5.0, 9.0, 20.0])
+        reg.counter("serve.served").inc(4)
+        path = str(tmp_path / "m.jsonl")
+        reg.write_jsonl(path)
+        assert validate_jsonl(path) == []
+        back, _hdr = MetricsRegistry.read_jsonl(path)
+        assert back.sketch("serve.request_ms.q").quantile(0.5) == 5.0
+
+    def test_validator_rejects_broken_sketch_lines(self, tmp_path):
+        import json
+        from repro.obs.metrics import MetricsRegistry, validate_jsonl
+        reg = MetricsRegistry()
+        reg.sketch("s").observe_many([1.0, 2.0, 3.0])
+        path = str(tmp_path / "m.jsonl")
+        reg.write_jsonl(path)
+        lines = open(path).read().splitlines()
+        hdr, sk_line = lines[0], json.loads(lines[1])
+
+        broken = dict(sk_line, count=99)        # weight != count
+        p = tmp_path / "bad1.jsonl"
+        p.write_text(hdr + "\n" + json.dumps(broken) + "\n")
+        assert validate_jsonl(str(p)) != []
+
+        broken = dict(sk_line, rank_error=-1)
+        p = tmp_path / "bad2.jsonl"
+        p.write_text(hdr + "\n" + json.dumps(broken) + "\n")
+        assert validate_jsonl(str(p)) != []
+
+        broken = dict(sk_line, levels="nope")
+        p = tmp_path / "bad3.jsonl"
+        p.write_text(hdr + "\n" + json.dumps(broken) + "\n")
+        assert validate_jsonl(str(p)) != []
