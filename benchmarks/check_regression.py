@@ -1,4 +1,4 @@
-"""Regression gate over the committed BENCH_serve.json baselines.
+"""Regression gate over the committed BENCH_serve/BENCH_embed baselines.
 
 The benchmarks write their numbers into ``BENCH_serve.json`` so the perf
 trajectory is recorded — but nothing ever READ them back, so a PR that
@@ -22,9 +22,23 @@ collapses, not noise):
                            — internal-consistency checks on the sketch
                            path, machine-independent.
 
+The embedding vertical has its own committed baseline, ``BENCH_embed.json``
+(written by ``benchmarks.embed_bench``), checked on machine-independent
+internal-consistency bars only — no re-measure needed because the decisive
+number is a same-machine ratio:
+
+  * ``cache.cache_hit_speedup`` — warm npz replay vs cold backbone compute
+    must clear the committed ``bar`` (5x): the cache paying for itself is
+    the embed subsystem's tier-1 acceptance criterion;
+  * ``serve.d`` >= 768 and positive throughput/rps — the end-to-end
+    embed->route->blend path was exercised at production-like width;
+  * ``serve.embed_share`` in [0, 1] — the ``embed_ms`` stage accounting
+    stayed a coherent fraction of total stage time.
+
 ``REPRO_SKIP_REGRESSION=1`` skips the timed half (still validates the
-committed file); a missing BENCH_serve.json passes with a note, so fresh
-clones and CI without the benchmark artifacts are not blocked.
+committed files); a missing BENCH_serve.json or BENCH_embed.json passes
+with a note, so fresh clones and CI without the benchmark artifacts are
+not blocked.
 
 ``PYTHONPATH=src python -m benchmarks.check_regression`` — exit 0 pass,
 exit 1 with the violated bars listed.
@@ -36,6 +50,7 @@ import os
 import sys
 import time
 
+from benchmarks.embed_bench import OUT_PATH as EMBED_OUT_PATH
 from benchmarks.serve_throughput import OUT_PATH, _make_bank_and_traffic
 
 _STAGES = ("queue", "pack", "dispatch", "device", "collect")
@@ -111,6 +126,40 @@ def check(baseline: dict, fresh_rps: float | None) -> list:
     return errs
 
 
+def check_embed(baseline: dict) -> list:
+    """Committed-value bars for BENCH_embed.json — machine-independent
+    (the decisive number is a same-machine cold/warm ratio), so no
+    re-measure half."""
+    errs = []
+
+    cache = baseline.get("cache")
+    if not isinstance(cache, dict):
+        errs.append("cache section missing")
+    else:
+        bar = float(cache.get("bar", 5.0))
+        sp = cache.get("cache_hit_speedup")
+        if sp is None or sp < bar:
+            errs.append(f"cache.cache_hit_speedup {sp} < bar {bar}x")
+
+    tp = baseline.get("throughput")
+    if not isinstance(tp, dict) or not tp.get("rows_per_s", 0) > 0:
+        errs.append("throughput.rows_per_s missing or non-positive")
+
+    srv = baseline.get("serve")
+    if not isinstance(srv, dict):
+        errs.append("serve section missing")
+    else:
+        if srv.get("d", 0) < 768:
+            errs.append(f"serve.d {srv.get('d')} < 768 — end-to-end path "
+                        f"not exercised at production-like width")
+        if not srv.get("rps", 0) > 0:
+            errs.append("serve.rps missing or non-positive")
+        share = srv.get("embed_share")
+        if share is None or not 0.0 <= share <= 1.0:
+            errs.append(f"serve.embed_share {share} outside [0, 1]")
+    return errs
+
+
 def _fresh_per_stage() -> dict:
     from repro.obs import MetricsRegistry, Tracer
     from repro.serve.svm_engine import SVMEngine
@@ -125,28 +174,49 @@ def _fresh_per_stage() -> dict:
 
 
 def main() -> int:
+    errs = []
+    skip = os.environ.get("REPRO_SKIP_REGRESSION") == "1"
+    fresh = None
+
     if not os.path.exists(OUT_PATH):
         print(f"# check_regression: no baseline at {OUT_PATH} — pass "
               f"(run benchmarks.serve_throughput + serve_microbench to "
               f"record one)")
-        return 0
-    try:
-        with open(OUT_PATH) as f:
-            baseline = json.load(f)
-    except ValueError as e:
-        print(f"check_regression: {OUT_PATH} is not valid JSON ({e})")
-        return 1
+    else:
+        try:
+            with open(OUT_PATH) as f:
+                baseline = json.load(f)
+        except ValueError as e:
+            print(f"check_regression: {OUT_PATH} is not valid JSON ({e})")
+            return 1
+        fresh = None if skip else _fresh_rps()
+        errs += check(baseline, fresh)
 
-    skip = os.environ.get("REPRO_SKIP_REGRESSION") == "1"
-    fresh = None if skip else _fresh_rps()
-    errs = check(baseline, fresh)
+    if not os.path.exists(EMBED_OUT_PATH):
+        print(f"# check_regression: no embed baseline at {EMBED_OUT_PATH} "
+              f"— pass (run benchmarks.embed_bench to record one)")
+    else:
+        try:
+            with open(EMBED_OUT_PATH) as f:
+                embed_baseline = json.load(f)
+        except ValueError as e:
+            print(f"check_regression: {EMBED_OUT_PATH} is not valid JSON "
+                  f"({e})")
+            return 1
+        errs += [f"embed: {e}" for e in check_embed(embed_baseline)]
+
     if errs:
         print("check_regression: FAIL")
         for e in errs:
             print(f"  - {e}")
         return 1
-    note = "baseline-only (REPRO_SKIP_REGRESSION=1)" if skip else \
-        f"fresh rps {fresh:.0f} vs baseline {baseline.get('engine_rps', 0):.0f}"
+    if skip:
+        note = "baseline-only (REPRO_SKIP_REGRESSION=1)"
+    elif fresh is not None:
+        note = (f"fresh rps {fresh:.0f} vs baseline "
+                f"{baseline.get('engine_rps', 0):.0f}")
+    else:
+        note = "committed-value checks only"
     print(f"# check_regression: pass — {note}")
     return 0
 

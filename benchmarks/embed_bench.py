@@ -1,0 +1,149 @@
+"""Embedding-vertical benchmarks: extractor throughput, cache hits, serving.
+
+The ``repro.embed`` subsystem's performance story has three legs, each
+measured here and recorded in ``BENCH_embed.json`` at the repo root:
+
+  * ``throughput`` — rows/s through the jit-compiled fixed-batch
+    :class:`EmbeddingExtractor` (smoke arch), steady state after the one
+    compile;
+  * ``cache``      — a cold write-through pass over a token corpus vs the
+    warm npz replay of the sealed :class:`EmbedCache`.  The recorded
+    ``cache_hit_speedup`` must clear the committed ``bar`` (5x) — this is
+    the machine-independent number ``check_regression`` enforces, since
+    both halves run on the same machine in the same process;
+  * ``serve``      — end-to-end embed->route->blend rps through
+    :class:`EmbedServe` at a production-like embedding width (d=768,
+    2-layer backbone), with the embed stage's share of total stage time.
+
+``PYTHONPATH=src python -m benchmarks.embed_bench`` — quick mode by
+default (REPRO_BENCH_FULL=1 for larger shapes); always writes
+BENCH_embed.json so the perf trajectory is recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, Report
+from benchmarks.serve_throughput import _make_bank_and_traffic
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_embed.json")
+
+SPEEDUP_BAR = 5.0
+
+
+def _smoke_extractor(batch_size):
+    from repro.embed import EmbeddingExtractor, resolve_arch
+    cfg = resolve_arch("stablelm-1.6b:smoke")
+    return cfg, EmbeddingExtractor(cfg, pooling="mean",
+                                   batch_size=batch_size, seed=0)
+
+
+def _tokens(n, seq, vocab, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, vocab, size=(n, seq)).astype(np.int32)
+
+
+def bench_throughput(report: Report) -> dict:
+    n, seq, batch = (512, 32, 64) if QUICK else (4096, 64, 128)
+    cfg, ex = _smoke_extractor(batch)
+    tok = _tokens(n, seq, cfg.vocab)
+    ex(tok[:batch])                              # the one compile + warmup
+    t0 = time.perf_counter()
+    out = ex(tok)
+    dt = max(time.perf_counter() - t0, 1e-9)
+    assert out.shape == (n, cfg.d_model)
+    assert ex.compile_count == 1, "fixed-batch forward must compile once"
+    rows_per_s = n / dt
+    report.add("embed", "extractor_throughput", dt, rows_per_s=rows_per_s)
+    return {"rows_per_s": rows_per_s, "arch": "stablelm-1.6b:smoke",
+            "batch": batch, "seq": seq, "n": n, "d": int(cfg.d_model)}
+
+
+def bench_cache(report: Report) -> dict:
+    from repro.embed import EmbeddingSource
+    n, seq, batch = (384, 32, 64) if QUICK else (2048, 64, 128)
+    cfg, ex = _smoke_extractor(batch)
+    tok = _tokens(n, seq, cfg.vocab, seed=1)
+    ex(tok[:batch])                              # exclude compile from cold
+    root = tempfile.mkdtemp(prefix="embed_bench_cache_")
+    try:
+        t0 = time.perf_counter()
+        cold = EmbeddingSource(tok, ex, cache=root)
+        cold.materialize()                       # write-through pass
+        cold_s = max(time.perf_counter() - t0, 1e-9)
+        assert cold.cache_complete()
+
+        warm_src = EmbeddingSource(tok, ex, cache=root)
+        warm_src.materialize()                   # page cache warmup
+        t0 = time.perf_counter()
+        got = EmbeddingSource(tok, ex, cache=root).materialize()
+        warm_s = max(time.perf_counter() - t0, 1e-9)
+        np.testing.assert_array_equal(got, cold.materialize())
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    speedup = cold_s / warm_s
+    report.add("embed", "cache_cold", cold_s, rows=n)
+    report.add("embed", "cache_warm", warm_s, rows=n, speedup=speedup)
+    return {"cold_s": cold_s, "warm_s": warm_s, "rows": n,
+            "cache_hit_speedup": speedup, "bar": SPEEDUP_BAR}
+
+
+def bench_serve(report: Report) -> dict:
+    """Co-located embed->route->blend at a production-like width: a 2-layer
+    d_model=768 backbone feeding a routed bank trained at the same d."""
+    from repro.embed import EmbeddingExtractor, resolve_arch
+    from repro.serve import EmbedServe, SVMEngine
+
+    d = 768
+    base = resolve_arch("stablelm-1.6b:smoke")
+    cfg = dataclasses.replace(base, name="embed-bench-768", d_model=d,
+                              n_heads=12, n_kv_heads=12, head_dim=64,
+                              d_ff=1536)
+    n_req, wave, seq = (256, 64, 32) if QUICK else (2048, 128, 64)
+    ex = EmbeddingExtractor(cfg, pooling="mean", batch_size=wave, seed=0)
+    bank, _full, _q = _make_bank_and_traffic(8, 64, d, 1, 2, n_req)
+    serve = EmbedServe(SVMEngine(bank, fused=False), ex)
+    tok = _tokens(n_req, seq, cfg.vocab, seed=2)
+
+    serve.run_tokens([tok[:wave]])               # compile + warmup
+    t0 = time.perf_counter()
+    results = serve.run_tokens(tok[lo:lo + wave]
+                               for lo in range(0, n_req, wave))
+    dt = max(time.perf_counter() - t0, 1e-9)
+    assert len(results) == n_req
+    rps = n_req / dt
+    ps = serve.stats()["per_stage"]
+    tot = sum(v["total_ms"] for v in ps.values())
+    embed_share = ps["embed"]["total_ms"] / tot if tot > 0 else 0.0
+    report.add("embed", "embed_serve", dt, rps=rps, embed_share=embed_share)
+    return {"rps": rps, "d": d, "n_req": n_req, "wave": wave, "seq": seq,
+            "embed_share": embed_share}
+
+
+def run(report: Report) -> None:
+    out = {"throughput": bench_throughput(report),
+           "cache": bench_cache(report),
+           "serve": bench_serve(report)}
+    with open(OUT_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# embed_bench: wrote {OUT_PATH} (cache_hit_speedup "
+          f"{out['cache']['cache_hit_speedup']:.1f}x, bar {SPEEDUP_BAR}x)")
+
+
+def main() -> int:
+    report = Report()
+    run(report)
+    print(report.table_markdown("embed"))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,7 +18,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
                     default="table1,table2,table3,table4,table10,gram_reuse,"
-                            "serve,serve_micro,cells,robustness")
+                            "serve,serve_micro,cells,robustness,embed")
     args = ap.parse_args(argv)
     tables = args.tables.split(",")
     report = Report()
@@ -56,10 +56,13 @@ def main(argv=None) -> int:
     if "robustness" in tables:
         from benchmarks import robustness
         robustness.run(report)
+    if "embed" in tables:
+        from benchmarks import embed_bench
+        embed_bench.run(report)
 
     print(f"\n# done in {time.time() - t0:.0f}s")
     for t in ("table1", "table2", "table3", "table4", "table10", "gram_reuse",
-              "serve", "serve_micro", "cells", "robustness"):
+              "serve", "serve_micro", "cells", "robustness", "embed"):
         md = report.table_markdown(t)
         if md:
             print(f"\n## {t}\n{md}")

@@ -3,30 +3,43 @@
     PYTHONPATH=src python examples/lm_svm_head.py
 
 This is the composition the assignment asks about: the paper's technique
-(cells + CV'd local SVMs) applied to the assigned LM architectures.  The
-backbone (any ``--arch``) embeds sequences; Voronoi cells are built in
-EMBEDDING space; each cell gets a fully CV'd multiclass SVM.  Local SVMs
-with a learned metric — Bottou-Vapnik local learning on top of an LM.
+(cells + CV'd local SVMs) applied to the assigned LM architectures, now
+through the ``repro.embed`` subsystem.  The backbone (any ``--arch``)
+embeds sequences lazily behind the ChunkSource contract — ONE compiled
+fixed-batch forward instead of the old whole-corpus un-jit'd call that
+recompiled per shape and materialized everything — with a write-through
+``EmbedCache`` so the second pass (and every rerun) is I/O-bound.  Voronoi
+cells are built in EMBEDDING space; each cell gets a fully CV'd multiclass
+SVM.  Local SVMs with a learned metric — Bottou-Vapnik local learning on
+top of an LM.
 """
 import argparse
+import tempfile
+import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ARCH_IDS, get_arch
+from repro.api.session import SVM
+from repro.configs import ARCH_IDS
 from repro.data.tokens import TokenPipeline, TokenPipelineConfig
-from repro.models import model as model_mod
-from repro.models.layers import init_params
-from repro.train.svm_trainer import LiquidSVM, SVMTrainerConfig
+from repro.embed import EmbeddingExtractor, EmbeddingSource, resolve_arch
 
 
-def embed_sequences(cfg, params, inputs) -> np.ndarray:
-    """Mean-pooled final-layer hidden states as sequence embeddings."""
-    b, t = inputs.shape[0], inputs.shape[1]
-    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
-    h, _, _ = model_mod.backbone(cfg, params, inputs, positions)
-    return np.asarray(jnp.mean(h.astype(jnp.float32), axis=1))
+def token_domains(cfg, n_per_class: int, seq: int, n_classes: int = 3):
+    """Synthetic "domains": HMM pipelines with different seeds emit
+    distinguishable token statistics — the LM embeds them apart."""
+    toks, ys = [], []
+    for cls in range(n_classes):
+        pipe = TokenPipeline(TokenPipelineConfig(
+            vocab=cfg.vocab, seq_len=seq, global_batch=n_per_class,
+            seed=100 + cls, n_states=4,
+            input_kind=cfg.input_kind, d_frontend=cfg.d_frontend))
+        toks.append(np.asarray(pipe.batch(0)["inputs"]))
+        ys.append(np.full(n_per_class, cls))
+    tok = np.concatenate(toks)
+    y = np.concatenate(ys)
+    perm = np.random.default_rng(0).permutation(len(y))
+    return tok[perm], y[perm]
 
 
 def main():
@@ -36,36 +49,41 @@ def main():
     ap.add_argument("--seq", type=int, default=32)
     args = ap.parse_args()
 
-    spec = get_arch(args.arch)
-    cfg = spec.smoke
-    params = init_params(model_mod.build_template(cfg), jax.random.PRNGKey(0))
+    cfg = resolve_arch(f"{args.arch}:smoke")
+    tok, y = token_domains(cfg, args.n_per_class, args.seq)
+    n_te = len(y) // 4
+    tok_te, y_te, tok_tr, y_tr = (tok[:n_te], y[:n_te],
+                                  tok[n_te:], y[n_te:])
 
-    # three synthetic "domains": HMM pipelines with different seeds emit
-    # distinguishable token statistics — the LM embeds them apart.
-    xs, ys = [], []
-    for cls in range(3):
-        pipe = TokenPipeline(TokenPipelineConfig(
-            vocab=cfg.vocab, seq_len=args.seq, global_batch=args.n_per_class,
-            seed=100 + cls, n_states=4,
-            input_kind=cfg.input_kind, d_frontend=cfg.d_frontend))
-        batch = pipe.batch(0)
-        emb = embed_sequences(cfg, params, batch["inputs"])
-        xs.append(emb)
-        ys.append(np.full(args.n_per_class, cls))
-    x = np.concatenate(xs).astype(np.float32)
-    y = np.concatenate(ys)
-    perm = np.random.default_rng(0).permutation(len(x))
-    x, y = x[perm], y[perm]
-    n_te = len(x) // 4
-    xte, yte, xtr, ytr = x[:n_te], y[:n_te], x[n_te:], y[n_te:]
+    # ONE extractor for train and test: one jit-compiled fixed-batch
+    # forward, frozen deterministic params, mean pooling
+    extractor = EmbeddingExtractor(cfg, pooling="mean", batch_size=64,
+                                   seed=0)
+    cache_root = tempfile.mkdtemp(prefix="embed_cache_")
+    xtr = EmbeddingSource(tok_tr, extractor, cache=cache_root,
+                          labels=y_tr.astype(np.float32))
 
-    # cells in embedding space + per-cell CV'd OvA SVM
-    svm = LiquidSVM(SVMTrainerConfig(scenario="ova", cell_method="voronoi",
-                                     cell_size=200, n_folds=3, max_iters=400))
-    svm.fit(xtr, ytr)
-    err = svm.error(xte, yte)
-    print(f"arch={args.arch}  embed dim={x.shape[1]}  "
-          f"cells={svm.plan.n_cells}  test error={100 * err:.2f}%")
+    # cells in embedding space + per-cell CV'd OvA SVM; labels stream from
+    # the source (y=None), features are embedded lazily per chunk
+    t0 = time.perf_counter()
+    sess = SVM(xtr, scenario="ova", VORONOI="voronoi", CELL_SIZE=200,
+               FOLDS=3, MAX_ITERATIONS=400)
+    sel = sess.train().select()
+    t_train = time.perf_counter() - t0
+
+    err = sel.test(EmbeddingSource(tok_te, extractor), y_te).error
+    print(f"arch={args.arch}  embed dim={xtr.dim}  "
+          f"cells={sess.train_result.plan.n_cells}  "
+          f"test error={100 * err:.2f}%  (train {t_train:.1f}s)")
+
+    # the cache is now complete: a second pass over the same corpus
+    # replays npz shards instead of running the backbone
+    warm = EmbeddingSource(tok_tr, extractor, cache=cache_root)
+    assert warm.cache_complete(), "write-through cache should be sealed"
+    t0 = time.perf_counter()
+    warm.materialize()
+    print(f"warm re-embed of {warm.n_rows} rows: "
+          f"{time.perf_counter() - t0:.3f}s (cache replay, backbone idle)")
     assert err < 0.34, "should beat 3-class chance (66%) by a wide margin"
 
 

@@ -81,6 +81,15 @@ def main():
           f"{bank.n_cells} cells "
           f"({100 * bank.stats()['compaction']:.0f}% of raw rows kept)")
 
+    # ---- LM-embedding vertical -------------------------------------------
+    # Token corpora train the same way through the frozen-backbone
+    # embedding pipeline (repro.embed): pass EMBED_ARCH to any front-end
+    # (x then holds tokens, not features), or see examples/lm_svm_head.py
+    # for the full EmbeddingSource + EmbedCache + EmbedServe composition:
+    #   SVM(tokens, y, EMBED_ARCH="stablelm-1.6b:smoke", FOLDS=3).train()
+    print("embed      token corpora: see examples/lm_svm_head.py and "
+          "examples/serve_lm.py --svm-head")
+
 
 if __name__ == "__main__":
     main()

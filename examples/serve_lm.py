@@ -1,6 +1,14 @@
-"""Batched serving demo: prefill + autoregressive decode with a KV cache.
+"""Batched LM serving demos: generation, and co-located embed->SVM serving.
 
     PYTHONPATH=src python examples/serve_lm.py --arch gemma3-4b --batch 4
+    PYTHONPATH=src python examples/serve_lm.py --svm-head   # EmbedServe demo
+
+The default path is prefill + autoregressive decode with a KV cache.  With
+``--svm-head`` the serving half flips to the embedding vertical: a tiny
+SVM bank is trained over frozen-backbone embeddings, then token requests
+are served through :class:`repro.serve.EmbedServe` — backbone forward and
+cell-routed SVM evaluation co-located in one process, with the per-request
+latency breakdown growing an ``embed_ms`` stage.
 """
 import argparse
 import time
@@ -14,13 +22,58 @@ from repro.models.layers import init_params
 from repro.serve.engine import generate
 
 
+def svm_head_demo(arch: str) -> None:
+    """Token requests -> embed -> route -> blend, one process."""
+    import os
+    import sys
+    from repro.api.session import SVM
+    from repro.embed import EmbeddingExtractor, EmbeddingSource, resolve_arch
+    from repro.serve import EmbedServe, SVMEngine
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from lm_svm_head import token_domains
+
+    cfg = resolve_arch(f"{arch}:smoke")
+    tok, y = token_domains(cfg, n_per_class=200, seq=24, n_classes=2)
+    y = np.where(y > 0, 1.0, -1.0)
+    extractor = EmbeddingExtractor(cfg, pooling="mean", batch_size=64,
+                                   seed=0)
+    xs = EmbeddingSource(tok, extractor, labels=y)
+    bank = SVM(xs, FOLDS=2, MAX_ITERATIONS=200, CELL_SIZE=120) \
+        .train().select().to_bank()
+
+    serve = EmbedServe(SVMEngine(bank, deadline_ms=5.0), extractor)
+    rng = np.random.default_rng(3)
+    queries = tok[rng.integers(0, len(tok), 64)]
+    t0 = time.time()
+    results = serve.run_tokens(queries[i:i + 16] for i in range(0, 64, 16))
+    dt = time.time() - t0
+    rid = sorted(results)[0]
+    b = serve.breakdown(rid)
+    stages = {k: v for k, v in b.items() if k.endswith("_ms")
+              and k != "total_ms"}
+    assert abs(sum(stages.values()) - b["total_ms"]) < 1e-6
+    print(f"arch={arch} (reduced config) embed->route->blend co-located")
+    print(f"served {len(results)} token requests in {dt:.2f}s "
+          f"({len(results) / dt:.1f} rps)")
+    print(f"request {rid} breakdown (ms): " + ", ".join(
+        f"{k[:-3]}={v:.3f}" for k, v in b.items() if k.endswith("_ms")))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-4b", choices=list(ARCH_IDS))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--new", type=int, default=24)
+    ap.add_argument("--svm-head", action="store_true",
+                    help="serve token requests through the co-located "
+                         "embed->SVM engine (EmbedServe) instead of "
+                         "autoregressive generation")
     args = ap.parse_args()
+
+    if args.svm_head:
+        svm_head_demo(args.arch)
+        return
 
     cfg = get_arch(args.arch).smoke
     if not cfg.is_decoder:

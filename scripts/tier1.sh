@@ -136,6 +136,45 @@ fi
 
 echo "tier1: CLI smoke OK"
 
+# embed-cycle smoke: the LM-embedding vertical as separate processes —
+# embed materializes the frozen-backbone cache under <model-dir>/embed,
+# train/select run over the replayed shards, serve takes raw TOKENS and
+# reports the co-located embed->route->blend breakdown (embed stage
+# present in per_stage)
+PYTHONPATH=src python - "$SMOKE" <<'PY'
+import sys
+import numpy as np
+rng = np.random.default_rng(0)
+n = 120
+tok = np.concatenate([rng.integers(0, 250, size=(n // 2, 12)),
+                      rng.integers(250, 500, size=(n // 2, 12))]
+                     ).astype(np.int32)
+y = np.repeat([-1.0, 1.0], n // 2)
+perm = rng.permutation(n)
+d = sys.argv[1]
+np.save(f"{d}/tok.npy", tok[perm]); np.save(f"{d}/ytok.npy", y[perm])
+PY
+PYTHONPATH=src python -m repro.cli embed --tokens "$SMOKE/tok.npy" \
+  --model-dir "$SMOKE/emodel" -S EMBED_ARCH=stablelm-1.6b:smoke \
+  -S EMBED_BATCH=32 > /dev/null
+PYTHONPATH=src python -m repro.cli train --data "$SMOKE/emodel/embed" \
+  --labels "$SMOKE/ytok.npy" --model-dir "$SMOKE/emodel" \
+  -S FOLDS=2 -S MAX_ITERATIONS=150 > /dev/null
+PYTHONPATH=src python -m repro.cli select --model-dir "$SMOKE/emodel" \
+  > /dev/null
+PYTHONPATH=src python -m repro.cli serve --tokens "$SMOKE/tok.npy" \
+  --model-dir "$SMOKE/emodel" --wave 32 > "$SMOKE/embed_serve_out.json"
+PYTHONPATH=src python - "$SMOKE" <<'PY'
+import json
+import sys
+payload = json.load(open(f"{sys.argv[1]}/embed_serve_out.json"))
+assert set(payload["per_stage"]) == {"queue", "pack", "dispatch", "device",
+                                     "collect", "embed"}, payload
+assert payload["per_stage"]["embed"]["total_ms"] > 0, payload
+PY
+
+echo "tier1: embed cycle OK"
+
 # perf-regression gate: compare a fresh quick-mode drain against the
 # committed BENCH_serve.json baselines (wide tolerances — catches
 # collapses, not machine noise; REPRO_SKIP_REGRESSION=1 for the

@@ -67,6 +67,27 @@ Monitor keys (consumed by ``repro.serve.monitor.HealthMonitor`` —
                        hot swap (``cli serve --swap-watch`` with
                        ``--feedback-data``).
 
+Embed-stage keys (consumed by :func:`repro.embed.embed_source` — the
+session front door, scenario front-ends and ``cli embed``/``cli serve
+--tokens`` when the x input is a TOKEN corpus; split off with
+:func:`split_embed_keys`)
+  EMBED_ARCH           str    frozen-backbone architecture id from
+                       ``repro.configs.ARCH_IDS``; append ``:smoke`` for
+                       the smoke-sized variant (tests, synthetic demos).
+                       Presence of this key is what flags the x input as
+                       tokens rather than features.
+  EMBED_POOL           str    mean|last — hidden-state pooling.
+  EMBED_CACHE          path   multi-identity embedding-cache root: npz
+                       shards land under ``<dir>/<fingerprint>/`` keyed by
+                       (arch, params digest, pooling, seq_len); cache hits
+                       replay through ShardedNpzSource (I/O-bound).
+  EMBED_BATCH          int    fixed jit batch shape for the backbone
+                       forward (compute-block size; does NOT affect
+                       output bits — blocks align to corpus offsets).
+  EMBED_SEED           int    deterministic frozen-backbone init seed
+                       (the random-features regime; ignored when real
+                       params are supplied programmatically).
+
 Observability keys (consumed by ``repro.obs.configure`` — any stage; split
 off with :func:`split_obs_keys`)
   TRACE                bool   enable the span tracer (``repro.obs.tracer``):
@@ -118,6 +139,7 @@ class ConfigKey:
     serve: bool = False             # serve-stage (engine) parameter
     monitor: bool = False           # health-monitor (HealthMonitor) parameter
     obs: bool = False               # observability (repro.obs.configure)
+    embed: bool = False             # embed-stage (repro.embed) parameter
     noop: bool = False              # accepted (compat), ignored
 
 
@@ -171,6 +193,15 @@ _KEYS: Dict[str, ConfigKey] = {k.name: k for k in [
     ConfigKey("DRIFT_REFRESH_THRESHOLD", "float",
               "drift score that triggers a targeted bank refresh",
               monitor=True, lo=0.0),
+    ConfigKey("EMBED_ARCH", "str", "frozen-backbone arch id (:smoke variant)",
+              embed=True),
+    ConfigKey("EMBED_POOL", "str", "hidden-state pooling", embed=True,
+              choices=("mean", "last")),
+    ConfigKey("EMBED_CACHE", "path", "embedding-cache root directory",
+              embed=True),
+    ConfigKey("EMBED_BATCH", "int", "fixed jit batch shape for the backbone",
+              embed=True, lo=1),
+    ConfigKey("EMBED_SEED", "int", "frozen-backbone init seed", embed=True),
     ConfigKey("TRACE", "bool", "enable the span tracer", obs=True),
     ConfigKey("TRACE_OUT", "path", "write trace JSONL here on exit",
               obs=True),
@@ -190,6 +221,9 @@ _MONITOR_NAMES = {"SLO_P99_MS": "slo_p99_ms",
                   "DRIFT_REFRESH_THRESHOLD": "drift_threshold"}
 _OBS_NAMES = {"TRACE": "trace", "TRACE_OUT": "trace_out",
               "METRICS_OUT": "metrics_out", "PROFILE_DIR": "profile_dir"}
+_EMBED_NAMES = {"EMBED_ARCH": "arch", "EMBED_POOL": "pooling",
+                "EMBED_CACHE": "cache_dir", "EMBED_BATCH": "batch_size",
+                "EMBED_SEED": "seed"}
 
 
 class ConfigError(ValueError):
@@ -210,6 +244,7 @@ def describe_keys() -> str:
             " (serve stage)" if k.serve else \
             " (health monitor)" if k.monitor else \
             " (observability)" if k.obs else \
+            " (embed stage)" if k.embed else \
             " (ignored)" if k.noop else ""
         rows.append(f"  {name:<20} {kind:<7} {k.doc}{extra}")
     return "\n".join(rows)
@@ -319,6 +354,35 @@ def split_obs_keys(pairs: Dict[str, Any]
     return rest, ob
 
 
+def split_embed_keys(pairs: Dict[str, Any]
+                     ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """Partition raw key pairs into (non-embed pairs, embed kwargs).
+
+    Embed-stage keys (EMBED_ARCH, EMBED_POOL, EMBED_CACHE, EMBED_BATCH,
+    EMBED_SEED) configure :func:`repro.embed.embed_source` — the frozen
+    backbone that turns a TOKEN corpus into the feature source the trainer
+    and engine consume.  Presence of ``arch`` in the returned kwargs is
+    the signal that the x input is tokens: callers wrap it with
+    ``embed_source(x, **kw)`` before anything touches the ChunkSource
+    contract.
+    """
+    rest: Dict[str, Any] = {}
+    emb: Dict[str, Any] = {}
+    for name, raw in pairs.items():
+        canon = str(name).upper()
+        k = _KEYS.get(canon)
+        if k is not None and k.embed:
+            emb[_EMBED_NAMES[canon]] = _coerce(k, raw)
+        else:
+            rest[name] = raw
+    if emb and "arch" not in emb:
+        raise ConfigError(
+            "EMBED_POOL/EMBED_CACHE/EMBED_BATCH/EMBED_SEED require "
+            "EMBED_ARCH — without an architecture there is no backbone "
+            "to embed with")
+    return rest, emb
+
+
 def parse_keys(pairs: Dict[str, Any]) -> Dict[str, Any]:
     """Normalize/validate a {key: value} mapping to canonical upper keys."""
     out: Dict[str, Any] = {}
@@ -365,6 +429,12 @@ def apply_keys(base: SVMTrainerConfig, pairs: Dict[str, Any]
                 f"{name} is an observability key — it configures "
                 f"repro.obs, not the trainer (the session front door and "
                 f"the CLI split it off; see split_obs_keys)")
+        if k.embed:
+            raise ConfigError(
+                f"{name} is an embed-stage key — it configures the frozen "
+                f"embedding backbone, not the trainer (the session front "
+                f"door, `cli embed` and `cli serve --tokens` split it "
+                f"off; see split_embed_keys)")
         if name == "VORONOI":
             fields["cell_method"] = v
         elif name == "MIN_WEIGHT":

@@ -20,7 +20,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.api.config import apply_keys, split_serve_keys, weight_grid
+from repro.api.config import (apply_keys, split_embed_keys, split_serve_keys,
+                              weight_grid)
 from repro.api.session import SVM
 from repro.train.svm_trainer import SVMTrainerConfig
 
@@ -30,6 +31,12 @@ def _session(scenario: str, x, y, keys: dict,
              select_kwargs: Optional[dict] = None,
              **cfg_fields) -> SVM:
     base = SVMTrainerConfig(scenario=scenario, **cfg_fields)
+    keys, embed_kw = split_embed_keys(keys)
+    if embed_kw:
+        # EMBED_ARCH flags x as a token corpus: wrap it so the scenario
+        # trains over lazily-computed frozen-backbone embeddings
+        from repro.embed import embed_source
+        x = embed_source(x, **embed_kw)
     keys, serve_kw = split_serve_keys(keys)
     cfg, key_select = apply_keys(base, keys)
     merged = {**key_select, **(select_kwargs or {})}

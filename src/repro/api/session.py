@@ -491,9 +491,17 @@ class SVM:
     (memmap ``.npy`` path, npz shard list, custom ``ChunkSource``).  String
     config keys (the liquidSVM-style layer, see ``repro.api.config``) can
     be passed directly: ``SVM(x, y, scenario="binary", FOLDS=3)``.
+
+    Token corpora: passing ``EMBED_ARCH`` (plus the other ``EMBED_*`` keys)
+    flags ``x`` as a TOKEN source — it is wrapped with
+    ``repro.embed.embed_source`` so training streams lazily-computed
+    frozen-backbone embeddings.  ``y=None`` is accepted whenever ``x``
+    carries its own labels (``repro.embed.LabeledSource`` or an
+    ``EmbeddingSource`` built with ``labels=``): the label vector is then
+    streamed from the source per wave instead of being required up front.
     """
 
-    def __init__(self, x, y: np.ndarray,
+    def __init__(self, x, y: Optional[np.ndarray] = None,
                  config: Optional[SVMTrainerConfig] = None,
                  mesh: Optional[Mesh] = None,
                  mesh_axes: Optional[Tuple[str, ...]] = None,
@@ -507,12 +515,17 @@ class SVM:
         srv_kw = dict(serve_kwargs or {})
         mon_kw = dict(monitor_kwargs or {})
         if config_keys:
-            from repro.api.config import (apply_keys, split_monitor_keys,
-                                          split_obs_keys, split_serve_keys)
+            from repro.api.config import (apply_keys, split_embed_keys,
+                                          split_monitor_keys, split_obs_keys,
+                                          split_serve_keys)
             config_keys, key_obs = split_obs_keys(config_keys)
             if key_obs:
                 from repro import obs
                 obs.configure(**key_obs)
+            config_keys, key_emb = split_embed_keys(config_keys)
+            if key_emb:
+                from repro.embed import embed_source
+                x = embed_source(x, **key_emb)
             config_keys, key_mon = split_monitor_keys(config_keys)
             mon_kw = {**key_mon, **mon_kw}
             config_keys, key_srv = split_serve_keys(config_keys)
@@ -535,6 +548,16 @@ class SVM:
         retain the validation surface.  ``ckpt_dir``: per-wave resume."""
         cfg = self.config
         x, y = self._x, self._y
+        if y is None:
+            if not hasattr(x, "labels_vector"):
+                raise ValueError(
+                    "SVM(y=None) needs a label-carrying x source "
+                    "(repro.embed.LabeledSource, or an EmbeddingSource "
+                    "built with labels=...) — plain feature sources "
+                    "require an explicit y")
+            # labels stream from the source: O(n) scalars assembled
+            # chunk-by-chunk, never a caller-held per-shard copy
+            y = x.labels_vector(cfg.chunk_size)
 
         raw_src: ChunkSource = as_source(x)
         if cfg.scale:

@@ -13,8 +13,20 @@ training sweep.  This is the same cycle over the staged session API:
     python -m repro.cli serve  --data xq.npy --model-dir run1 \\
         -S DEADLINE_MS=5 --out pred.npy     # async engine from bank/ alone
 
-Artifacts under ``--model-dir`` (all ``repro.train.checkpoint`` step dirs):
+Token corpora get one extra stage in front — the frozen-backbone
+embedding pipeline (``repro.embed``):
 
+    python -m repro.cli embed  --tokens tok.npy --model-dir run1 \\
+        -S EMBED_ARCH=stablelm-1.6b:smoke -S EMBED_POOL=mean
+    python -m repro.cli train  --data run1/embed --labels y.npy ...
+    python -m repro.cli serve  --tokens tokq.npy --model-dir run1 ...
+
+Artifacts under ``--model-dir`` (all ``repro.train.checkpoint`` step dirs
+except ``embed/``, which is an ``EmbedCache`` shard directory):
+
+    embed/   EmbedCache    — fingerprinted npz embedding shards + meta.json
+             (``--data <model-dir>/embed`` streams them; ``serve --tokens``
+             rebuilds the recorded extractor for in-process embedding)
     train/   TrainResult  — cell models + retained CV surface
     select/  SelectResult — final models, rule extras, stats
     bank/    ModelBank    — compacted serving bank; a predict server
@@ -22,9 +34,10 @@ Artifacts under ``--model-dir`` (all ``repro.train.checkpoint`` step dirs):
              ``SVMEngine(ModelBank.load(f"{model_dir}/bank"))``
 
 ``--data`` accepts an ``.npy`` file (opened as a memmap — training and
-testing stream, the array is never resident) or a comma-separated list of
-``.npz`` shards; ``--labels`` is an ``.npy`` vector.  ``-S KEY=VALUE``
-sets any string config key (``--help-keys`` lists them).
+testing stream, the array is never resident), a comma-separated list of
+``.npz`` shards, or a completed ``embed/`` artifact directory; ``--labels``
+is an ``.npy`` vector.  ``-S KEY=VALUE`` sets any string config key
+(``--help-keys`` lists them).
 """
 from __future__ import annotations
 
@@ -48,11 +61,31 @@ _SCENARIO_RULES = {"roc": "roc", "npl": "npl", "npsvm": "npl"}
 
 
 def _load_data(spec: str):
-    """'.npy' path (memmap-streamed) or comma-separated '.npz' shards."""
+    """'.npy' path (memmap-streamed), comma-separated '.npz' shards, or a
+    completed ``embed/`` cache directory (replayed shard-by-shard)."""
     from repro.pipeline.dataset import as_source
+    if os.path.isdir(spec):
+        return _open_embed_artifact(spec)
     if "," in spec:
         return as_source([p for p in spec.split(",") if p])
     return as_source(spec)
+
+
+def _open_embed_artifact(path: str):
+    """A directory as ``--data``: it must be a COMPLETE embed cache."""
+    from repro.embed.source import EmbedCache, EmbedCacheError
+    from repro.pipeline.dataset import ShardedNpzSource
+    try:
+        meta = EmbedCache.open(path)
+    except EmbedCacheError as e:
+        _fail(f"{e} — run `python -m repro.cli embed` to produce one")
+    cache = EmbedCache(path, meta["fingerprint"], n_rows=meta["n_rows"],
+                       dim=meta["dim"], block=meta["block"],
+                       seq_len=meta["seq_len"])
+    if not cache.complete():
+        _fail(f"{path}: incomplete 'embed/' artifact (missing shards) — "
+              f"re-run `python -m repro.cli embed`")
+    return ShardedNpzSource(cache.shard_paths())
 
 
 def _parse_sets(pairs: Optional[List[str]]) -> dict:
@@ -138,6 +171,68 @@ def _load_artifact(model_dir: str, name: str, loader, produced_by: str):
         _fail(f"{path}: corrupt '{name}/' artifact ({e}) — re-{hint}")
     except ValueError as e:
         _fail(f"{path}: not a valid '{name}/' artifact ({e}) — {hint}")
+
+
+# ------------------------------------------------------------------ embed
+def cmd_embed(args) -> int:
+    """Run the frozen-backbone embedding stage over a token corpus and
+    persist the cache directory as the ``embed/`` stage artifact.
+
+    ``--tokens`` is an ``(n, seq_len)`` int ``.npy`` (memmap-streamed; or
+    ``(n, seq_len, d_frontend)`` floats for embed-frontend configs);
+    ``-S EMBED_ARCH=<id>[:smoke]`` picks the backbone, ``EMBED_POOL`` the
+    pooling, ``EMBED_BATCH`` the fixed jit batch shape, ``EMBED_SEED`` the
+    deterministic frozen-init seed.  The output is write-through and
+    crash-safe: re-running after an interruption computes only the missing
+    shards, re-running after a config change rebuilds the artifact under
+    the new fingerprint.  Downstream: ``train --data <model-dir>/embed``
+    streams the shards, ``serve --tokens`` rebuilds the recorded extractor.
+    """
+    import shutil
+
+    from repro.api.config import split_embed_keys
+    from repro.embed import EmbeddingExtractor, EmbeddingSource, resolve_arch
+    from repro.embed.source import EmbedCache, EmbedCacheError, \
+        TokenArraySource
+
+    leftover, emb_kw = split_embed_keys(_setup_obs(_parse_sets(args.set)))
+    if leftover:
+        raise SystemExit(f"embed only takes the EMBED_* keys and the "
+                         f"observability keys, got {sorted(leftover)}")
+    if "arch" not in emb_kw:
+        _fail("embed requires -S EMBED_ARCH=<arch-id>[:smoke] "
+              "(see repro.configs.ARCH_IDS)")
+    emb_kw.pop("cache_dir", None)   # the artifact location is --model-dir
+    arch = emb_kw.pop("arch")
+    tok = TokenArraySource(args.tokens)
+    ex = EmbeddingExtractor(resolve_arch(arch), **emb_kw)
+    out_dir = os.path.join(args.model_dir, "embed")
+    fp = ex.fingerprint(tok.seq_len)
+    ident = dict(n_rows=tok.n_rows, dim=ex.dim, block=ex.batch_size,
+                 seq_len=tok.seq_len,
+                 extra={"arch": arch, "pooling": ex.pooling,
+                        "seed": ex.seed})
+    rebuilt = False
+    try:
+        cache = EmbedCache(out_dir, fp, **ident)
+    except EmbedCacheError:
+        # different corpus/arch/pooling than the previous run: the stage
+        # artifact is being re-produced, like re-running train over it
+        shutil.rmtree(out_dir)
+        cache = EmbedCache(out_dir, fp, **ident)
+        rebuilt = True
+    src = EmbeddingSource(tok, ex, cache=cache)
+    already = src.cache_complete()
+    for _ in src.iter_chunks(args.chunk_size or 4096):
+        pass                        # drive the write-through pass
+    assert src.cache_complete()
+    _emit(_finish_obs(
+        {"stage": "embed", "n": src.n_rows, "d": src.dim,
+         "seq_len": tok.seq_len, "arch": arch, "pooling": ex.pooling,
+         "fingerprint": fp, "shards": cache.n_blocks,
+         "cache_hit": bool(already), "rebuilt": rebuilt,
+         "cache_dir": out_dir, "model_dir": args.model_dir}))
+    return 0
 
 
 # ------------------------------------------------------------------ train
@@ -286,11 +381,39 @@ def cmd_serve(args) -> int:
                          f"METRICS_OUT/PROFILE_DIR), got {sorted(leftover)}")
     if (args.feedback_data is None) != (args.feedback_labels is None):
         _fail("--feedback-data and --feedback-labels go together")
+    if (args.data is None) == (args.tokens is None):
+        _fail("serve takes exactly one of --data (feature space) or "
+              "--tokens (token space, in-process embedding)")
     bank_dir = os.path.join(args.model_dir, "bank")
     bank = _load_artifact(args.model_dir, "bank", ModelBank.load,
                           f"select --model-dir {args.model_dir}")
     eng = SVMEngine(bank, **serve_kw)
-    src = _load_data(args.data)
+
+    # token-space serving: rebuild the extractor the embed stage recorded
+    # and co-locate it with the engine (EmbedServe); the per-request
+    # breakdown then carries the embed_ms stage and the monitor's drift
+    # scores watch embedding-space routing distances
+    serve_obj, tok, src = eng, None, None
+    if args.tokens is not None:
+        from repro.embed import EmbeddingExtractor, resolve_arch
+        from repro.embed.source import EmbedCache, EmbedCacheError, \
+            TokenArraySource
+        from repro.serve.embed_engine import EmbedServe
+        embed_dir = os.path.join(args.model_dir, "embed")
+        try:
+            emeta = EmbedCache.open(embed_dir)
+        except EmbedCacheError as e:
+            _fail(f"{e} — `serve --tokens` needs the embed/ artifact; run "
+                  f"`python -m repro.cli embed --model-dir "
+                  f"{args.model_dir}` first")
+        ex = EmbeddingExtractor(resolve_arch(emeta["arch"]),
+                                pooling=emeta["pooling"],
+                                batch_size=emeta["block"],
+                                seed=emeta["seed"])
+        tok = TokenArraySource(args.tokens)
+        serve_obj = EmbedServe(eng, ex)
+    else:
+        src = _load_data(args.data)
 
     mon = None
     if mon_kw or args.feedback_data is not None:
@@ -355,17 +478,27 @@ def cmd_serve(args) -> int:
             rec["version"] = bank1.version
         triggers.append(rec)
 
+    def arrivals():
+        if src is not None:
+            for _, chunk in src.iter_chunks(args.wave):
+                yield chunk
+        else:
+            for lo in range(0, tok.n_rows, args.wave):
+                yield tok.rows(lo, min(lo + args.wave, tok.n_rows))
+
     def traffic():
         last_poll = [float("-inf")]
-        for _, chunk in src.iter_chunks(args.wave):
+        for chunk in arrivals():
             if args.swap_watch:
                 _maybe_swap(last_poll)
             if tr is not None:
                 _maybe_refresh()
             yield chunk
 
+    n_in = int(src.n_rows if src is not None else tok.n_rows)
     t0 = _time.time()
-    results = eng.run(traffic())
+    results = (serve_obj.run_tokens(traffic()) if tok is not None
+               else eng.run(traffic()))
     dt = _time.time() - t0
     dec = (np.stack([results[i] for i in sorted(results)]) if results
            else np.zeros((0, bank.n_tasks, bank.n_sub), np.float32))
@@ -373,9 +506,9 @@ def cmd_serve(args) -> int:
                              pairs=bank.pairs, sub=bank.default_sub)
     if args.out:
         np.save(args.out, pred)
-    stats = eng.stats()
-    payload = {"stage": "serve", "n": int(src.n_rows),
-               "rps": src.n_rows / max(dt, 1e-9),
+    stats = serve_obj.stats()
+    payload = {"stage": "serve", "n": n_in,
+               "rps": n_in / max(dt, 1e-9),
                "routing": stats["routing"],
                "deadline_ms": serve_kw.get("deadline_ms"),
                "waves": stats.get("waves", 0),
@@ -401,6 +534,19 @@ def _build_parser() -> argparse.ArgumentParser:
         prog="python -m repro.cli",
         description="staged liquidSVM cycle: train -> select -> test")
     sub = p.add_subparsers(dest="cmd", required=True)
+
+    bp = sub.add_parser("embed", help="frozen-backbone embedding stage: "
+                                      "token corpus -> embed/ cache artifact")
+    bp.add_argument("--tokens", required=True,
+                    help="(n, seq_len) int .npy token corpus "
+                         "(memmap-streamed)")
+    bp.add_argument("--model-dir", required=True)
+    bp.add_argument("--chunk-size", type=int, default=None,
+                    help="rows per driving chunk (default 4096)")
+    bp.add_argument("-S", "--set", action="append", metavar="KEY=VALUE",
+                    help="EMBED_ARCH (required) / EMBED_POOL / EMBED_BATCH "
+                         "/ EMBED_SEED + observability keys")
+    bp.set_defaults(fn=cmd_embed)
 
     tp = sub.add_parser("train", help="solve the fold x grid, keep the "
                                       "CV surface")
@@ -435,7 +581,12 @@ def _build_parser() -> argparse.ArgumentParser:
 
     vp = sub.add_parser("serve", help="cold-start the engine from bank/ and "
                                       "serve --data (async, latency-bounded)")
-    vp.add_argument("--data", required=True)
+    vp.add_argument("--data", default=None,
+                    help="feature-space queries (.npy / .npz shards / "
+                         "embed/ dir)")
+    vp.add_argument("--tokens", default=None,
+                    help="token-space queries (.npy): embed in-process via "
+                         "the recorded embed/ extractor (EmbedServe)")
     vp.add_argument("--model-dir", required=True)
     vp.add_argument("--wave", type=int, default=256,
                     help="arrival burst size fed to the stepper")
@@ -466,11 +617,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 0
     args = _build_parser().parse_args(argv)
     from repro.api.config import ConfigError
+    from repro.embed.source import EmbedCacheError
     from repro.pipeline.dataset import DataSourceError
     from repro.train.checkpoint import CheckpointCorruptError
     try:
         return args.fn(args)
-    except (ConfigError, DataSourceError, CheckpointCorruptError) as e:
+    except (ConfigError, DataSourceError, CheckpointCorruptError,
+            EmbedCacheError) as e:
         print(f"error: {e}", file=sys.stderr)
         return 2
 

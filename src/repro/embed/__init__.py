@@ -1,0 +1,48 @@
+"""repro.embed — frozen-backbone embedding pipeline.
+
+The subsystem that connects the LM model stack (``models/``, ``configs/``)
+to the SVM verticals: a jit-compiled fixed-batch
+:class:`~repro.embed.extractor.EmbeddingExtractor` pools backbone hidden
+states into feature rows, :class:`~repro.embed.source.EmbeddingSource`
+exposes a token corpus behind the ChunkSource contract (lazy, block-aligned
+for bitwise chunk-size invariance, write-through
+:class:`~repro.embed.source.EmbedCache` with npz-shard replay), and
+:func:`embed_source` is the one-call front door the session/scenario layers
+and ``EMBED_*`` config keys use.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Union
+
+from repro.embed.extractor import (POOLINGS, EmbeddingExtractor,
+                                   params_digest, resolve_arch)
+from repro.embed.source import (EmbedCache, EmbedCacheError, EmbeddingSource,
+                                LabeledSource, TokenArraySource)
+
+__all__ = [
+    "POOLINGS", "EmbeddingExtractor", "params_digest", "resolve_arch",
+    "EmbedCache", "EmbedCacheError", "EmbeddingSource", "LabeledSource",
+    "TokenArraySource", "embed_source",
+]
+
+
+def embed_source(tokens, *, arch: str, pooling: str = "mean",
+                 cache_dir: Union[str, os.PathLike, None] = None,
+                 batch_size: int = 32, params=None, seed: int = 0,
+                 labels=None, tracer=None, metrics=None) -> EmbeddingSource:
+    """Wrap a token corpus as a lazily-embedded ChunkSource.
+
+    ``arch`` is ``"<arch-id>"`` or ``"<arch-id>:smoke"`` from
+    ``repro.configs.ARCH_IDS``; ``params=None`` uses the deterministic
+    seed-initialized frozen backbone.  ``cache_dir`` (the ``EMBED_CACHE``
+    key) is a multi-identity cache root — shards land under
+    ``cache_dir/<fingerprint-prefix>/``.  The result drops into any x slot
+    (``SVM(x=...)``, scenario front-ends, ``build_cells_stream``); pass
+    ``labels=`` to carry the y pairing through the token->embedding hop.
+    """
+    cfg = resolve_arch(arch)
+    extractor = EmbeddingExtractor(cfg, params, pooling=pooling,
+                                   batch_size=batch_size, seed=seed,
+                                   tracer=tracer, metrics=metrics)
+    return EmbeddingSource(tokens, extractor, cache=cache_dir, labels=labels)

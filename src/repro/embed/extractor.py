@@ -1,0 +1,186 @@
+"""Frozen-backbone sequence embedding with ONE compiled program.
+
+The extractor turns token sequences into fixed-dimension feature rows for
+the SVM verticals: the existing ``models.model.backbone`` (any ``configs/``
+architecture) runs frozen, the final hidden states are pooled (mean over
+time, or the last position) in f32, and the result is an ``(m, d_model)``
+float32 host array ready for cells, scaling and serving.
+
+Two things make this serve-grade rather than the old example's ad-hoc
+whole-corpus call:
+
+  * **fixed batch shape** — the backbone forward is jit-compiled at ONE
+    ``(batch_size, seq_len)`` shape; a ragged tail (or any ``m`` not a
+    multiple of ``batch_size``) is zero-padded on the ROW axis, computed,
+    and sliced off.  Padded rows never leave the extractor, and the ragged
+    shapes that used to trigger a recompile per call now reuse one
+    compiled program (``compile_count`` stays at 1 per entry point);
+  * **determinism by construction** — for one input block the computation
+    is a pure function of ``(config, params, tokens)``.  MoE layers have
+    cross-row capacity interactions, so callers that need bitwise-stable
+    embeddings for a ROW must always present it inside the same batch —
+    :class:`repro.embed.source.EmbeddingSource` aligns its compute blocks
+    to absolute corpus offsets for exactly this reason.
+
+Instrumented with ``embed.forward`` / ``embed.pool`` tracer sites and an
+``embed.sequences`` counter (the process-global ``repro.obs`` instruments,
+injectable for tests, following ``SVMEngine``).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.models import model as model_mod
+from repro.models.layers import init_params
+from repro.models.model import ModelConfig
+
+POOLINGS = ("mean", "last")
+
+
+def resolve_arch(arch: str) -> ModelConfig:
+    """``"<arch-id>"`` -> full config, ``"<arch-id>:smoke"`` -> smoke config.
+
+    The smoke variant is the right tool for tests, CI and synthetic-corpus
+    demos; the full config is the production embedding backbone.
+    """
+    from repro.configs import get_arch
+    name, _, variant = arch.partition(":")
+    spec = get_arch(name)
+    if variant in ("", "full"):
+        return spec.config
+    if variant == "smoke":
+        return spec.smoke
+    raise ValueError(f"unknown arch variant {variant!r} in {arch!r} "
+                     f"(use '<id>' or '<id>:smoke')")
+
+
+def params_digest(params) -> str:
+    """Content hash of a parameter tree: blake2b over sorted (path, bytes)
+    leaves.  Two trees with identical values share a digest regardless of
+    dict insertion order; any weight change moves it."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    items = sorted((jax.tree_util.keystr(path), leaf)
+                   for path, leaf in leaves)
+    h = hashlib.blake2b(digest_size=16)
+    for path, leaf in items:
+        h.update(path.encode())
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+class EmbeddingExtractor:
+    """Pooled backbone embeddings at one fixed ``(batch_size, seq_len)``.
+
+    ``__call__(tokens)`` accepts ``(m, seq_len)`` int tokens (or
+    ``(m, seq_len, d_frontend)`` float rows for embed-frontend configs) for
+    ANY ``m`` and returns ``(m, d_model)`` float32 — internally the rows
+    are processed in fixed-shape blocks with a zero-padded tail, so every
+    call after the first reuses the same two compiled programs (forward,
+    pool).  ``params=None`` initializes a deterministic frozen backbone
+    from ``seed`` (the random-features regime the examples use).
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *,
+                 pooling: str = "mean", batch_size: int = 32, seed: int = 0,
+                 tracer: Optional["obs.Tracer"] = None,
+                 metrics: Optional["obs.MetricsRegistry"] = None):
+        if pooling not in POOLINGS:
+            raise ValueError(f"pooling must be one of {POOLINGS}, "
+                             f"got {pooling!r}")
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.cfg = cfg
+        self.pooling = pooling
+        self.batch_size = int(batch_size)
+        self.seed = int(seed)
+        if params is None:
+            params = init_params(model_mod.build_template(cfg),
+                                 jax.random.PRNGKey(seed))
+        self.params = params
+        self._digest: Optional[str] = None
+        self._tracer = obs.tracer if tracer is None else tracer
+        self._metrics = obs.metrics if metrics is None else metrics
+        self._m_sequences = self._metrics.counter("embed.sequences")
+        # trace-time counters: the bodies run only when jit (re)traces, so
+        # a value that stays at 1 across ragged calls IS the one-compile
+        # guarantee (asserted by tests/test_embed.py)
+        self.compile_count = 0
+        self._pool_compiles = 0
+        self._fwd = jax.jit(self._forward)
+        self._pool = jax.jit(self._pool_fn)
+
+    # ----------------------------------------------------------- identity
+    @property
+    def dim(self) -> int:
+        return self.cfg.d_model
+
+    def digest(self) -> str:
+        """Cached content hash of the frozen parameters."""
+        if self._digest is None:
+            self._digest = params_digest(self.params)
+        return self._digest
+
+    def fingerprint(self, seq_len: int) -> str:
+        """Cache identity of embeddings this extractor produces over
+        ``seq_len``-token sequences: (arch config, params digest, pooling,
+        seq_len).  Anything that could change a single output bit moves
+        the fingerprint; batch size does NOT participate — block-aligned
+        callers pin it separately (see ``EmbedCache``)."""
+        h = hashlib.blake2b(digest_size=16)
+        h.update(repr(self.cfg).encode())
+        h.update(self.digest().encode())
+        h.update(self.pooling.encode())
+        h.update(np.int64(seq_len).tobytes())
+        return h.hexdigest()
+
+    # ------------------------------------------------------------ forward
+    def _forward(self, x):
+        self.compile_count += 1          # runs at trace time only
+        b, t = x.shape[0], x.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                                     (b, t))
+        h, _, _ = model_mod.backbone(self.cfg, self.params, x, positions)
+        return h
+
+    def _pool_fn(self, h):
+        self._pool_compiles += 1         # runs at trace time only
+        h32 = h.astype(jnp.float32)
+        if self.pooling == "mean":
+            return jnp.mean(h32, axis=1)
+        return h32[:, -1]
+
+    def _block(self, x: np.ndarray) -> np.ndarray:
+        """One fixed-shape block: pad rows to ``batch_size``, run, slice."""
+        m = x.shape[0]
+        b = self.batch_size
+        if m < b:
+            pad = np.zeros((b - m,) + x.shape[1:], x.dtype)
+            x = np.concatenate([x, pad])
+        with self._tracer.span("embed.forward"):
+            h = self._fwd(jnp.asarray(x))
+        with self._tracer.span("embed.pool"):
+            emb = np.asarray(self._pool(h))
+        return emb[:m]
+
+    def __call__(self, tokens) -> np.ndarray:
+        """(m, seq_len[, d_frontend]) -> (m, d_model) f32, any ``m``."""
+        x = np.asarray(tokens)
+        if self.cfg.input_kind == "tokens":
+            x = x.astype(np.int32, copy=False)
+            assert x.ndim == 2, x.shape
+        else:
+            x = x.astype(np.float32, copy=False)
+            assert x.ndim == 3, x.shape
+        if x.shape[0] == 0:
+            return np.zeros((0, self.dim), np.float32)
+        out = np.concatenate(
+            [self._block(x[lo:lo + self.batch_size])
+             for lo in range(0, x.shape[0], self.batch_size)])
+        self._m_sequences.inc(x.shape[0])
+        return np.ascontiguousarray(out, np.float32)

@@ -6,7 +6,8 @@ from repro.serve.model_bank import ModelBank
 from repro.serve.monitor import HealthMonitor
 from repro.serve.refresh import refresh_bank, refresh_drifted
 from repro.serve.svm_engine import OverloadError, SVMEngine
+from repro.serve.embed_engine import EmbedServe
 
 __all__ = ["pad_cache", "cache_bytes", "generate", "serve_step",
-           "HealthMonitor", "ModelBank", "OverloadError", "SVMEngine",
-           "refresh_bank", "refresh_drifted"]
+           "EmbedServe", "HealthMonitor", "ModelBank", "OverloadError",
+           "SVMEngine", "refresh_bank", "refresh_drifted"]

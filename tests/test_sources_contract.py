@@ -15,12 +15,20 @@ The shard layout for ``ShardedNpzSource`` is deliberately uneven (a
 1-row shard in the middle) so short-chunk emission at shard boundaries
 is exercised, and ``ScaledSource`` wraps the sharded source so the view
 composes with the trickiest base.
+
+``EmbeddingSource`` joins the same class twice — cold (computing through
+the frozen backbone, ragged 7-row tail block) and warm (replaying a
+complete ``EmbedCache``) — because the embedding vertical's bitwise
+cell-plan parity rests on exactly these invariants; the cold and warm
+paths must additionally agree bit-for-bit with each other AND with the
+block-aligned extractor reference.
 """
 from __future__ import annotations
 
 import numpy as np
 import pytest
 
+from repro.embed import EmbeddingExtractor, EmbeddingSource, resolve_arch
 from repro.pipeline.dataset import (ArraySource, ChunkSource, DataSourceError,
                                     MemmapSource, ScaledSource,
                                     ShardedNpzSource, as_source)
@@ -28,6 +36,8 @@ from repro.pipeline.dataset import (ArraySource, ChunkSource, DataSourceError,
 N, D = 103, 5                      # deliberately not a chunk multiple
 SHARD_SIZES = (40, 1, 37, 25)      # uneven; includes a 1-row shard
 CHUNK_SIZES = (1, 7, 16, 64, 200)  # below/above shard sizes and n
+SEQ = 10                           # token length for the embed sources
+EMBED_BATCH = 16                   # N % 16 == 7: ragged tail block
 
 
 @pytest.fixture(scope="module")
@@ -42,12 +52,40 @@ def scale() -> tuple:
             rng.uniform(0.5, 2.0, size=D).astype(np.float32))
 
 
+@pytest.fixture(scope="module")
+def embed_setup(tmp_path_factory):
+    """One frozen extractor + token corpus + the block-aligned reference
+    matrix + a sealed cache directory, shared by both embed params."""
+    cfg = resolve_arch("stablelm-1.6b:smoke")
+    tokens = np.random.default_rng(3).integers(
+        0, cfg.vocab, size=(N, SEQ)).astype(np.int32)
+    ex = EmbeddingExtractor(cfg, batch_size=EMBED_BATCH, seed=0)
+    # reference = the extractor over each ABSOLUTE block; any chunking of
+    # the source must reproduce these exact bytes
+    ref = np.concatenate([ex(tokens[lo:lo + EMBED_BATCH])
+                          for lo in range(0, N, EMBED_BATCH)])
+    cache = str(tmp_path_factory.mktemp("embed_cache"))
+    sealed = EmbeddingSource(tokens, ex, cache=cache)
+    sealed.materialize()                    # write-through pass seals it
+    assert sealed.cache_complete()
+    return tokens, ex, ref, cache
+
+
 @pytest.fixture(
     scope="module",
-    params=["array", "memmap", "sharded_npz", "scaled"],
+    params=["array", "memmap", "sharded_npz", "scaled",
+            "embed_cold", "embed_warm"],
 )
-def source(request, x, scale, tmp_path_factory) -> ChunkSource:
+def source(request, x, scale, embed_setup, tmp_path_factory) -> ChunkSource:
     kind = request.param
+    if kind == "embed_cold":
+        tokens, ex, _, _ = embed_setup
+        return EmbeddingSource(tokens, ex)       # no cache: compute path
+    if kind == "embed_warm":
+        tokens, ex, _, cache = embed_setup
+        src = EmbeddingSource(tokens, ex, cache=cache)
+        assert src.cache_complete()              # npz replay path
+        return src
     if kind == "array":
         return ArraySource(x)
     if kind == "memmap":
@@ -71,8 +109,11 @@ def source(request, x, scale, tmp_path_factory) -> ChunkSource:
 
 
 @pytest.fixture(scope="module")
-def expected(request, source, x, scale) -> np.ndarray:
-    """What the source must present: raw rows, or the scaled view."""
+def expected(request, source, x, scale, embed_setup) -> np.ndarray:
+    """What the source must present: raw rows, the scaled view, or the
+    block-aligned embedding reference."""
+    if isinstance(source, EmbeddingSource):
+        return embed_setup[2]
     if isinstance(source, ScaledSource):
         mean, std = scale
         return ((x - mean) / std).astype(np.float32)
@@ -81,24 +122,26 @@ def expected(request, source, x, scale) -> np.ndarray:
 
 class TestChunkSourceContract:
     def test_shape_properties(self, source, expected):
-        assert source.n_rows == N
-        assert source.dim == D
-        assert source.shape == (N, D)
+        n, d = expected.shape
+        assert source.n_rows == n
+        assert source.dim == d
+        assert source.shape == (n, d)
 
     @pytest.mark.parametrize("chunk_size", CHUNK_SIZES)
     def test_iter_chunks_covers_every_row_exactly_once_in_order(
             self, source, expected, chunk_size):
-        seen = np.zeros(N, np.int64)
+        n, d = expected.shape
+        seen = np.zeros(n, np.int64)
         pos = 0
         for lo, chunk in source.iter_chunks(chunk_size):
             assert lo == pos                      # contiguous, dataset order
-            assert chunk.ndim == 2 and chunk.shape[1] == D
+            assert chunk.ndim == 2 and chunk.shape[1] == d
             assert chunk.dtype == np.float32
             assert 1 <= chunk.shape[0] <= chunk_size
             np.testing.assert_array_equal(chunk, expected[lo:lo + chunk.shape[0]])
             seen[lo:lo + chunk.shape[0]] += 1
             pos = lo + chunk.shape[0]
-        assert pos == N
+        assert pos == n
         assert (seen == 1).all()                  # exactly once
 
     def test_chunk_size_invariance(self, source):
@@ -111,22 +154,25 @@ class TestChunkSourceContract:
             np.testing.assert_array_equal(got, ref)
 
     def test_gather_preserves_given_order(self, source, expected):
+        n = expected.shape[0]
         rng = np.random.default_rng(2)
-        ids = rng.permutation(N)[: N // 2]        # unsorted, shard-crossing
+        ids = rng.permutation(n)[: n // 2]        # unsorted, shard-crossing
         got = source.gather(ids)
         assert got.dtype == np.float32
         np.testing.assert_array_equal(got, expected[ids])
 
     def test_gather_repeated_and_single_ids(self, source, expected):
-        ids = np.asarray([5, 5, 0, N - 1, 5], np.int64)   # dups, both ends
+        n = expected.shape[0]
+        ids = np.asarray([5, 5, 0, n - 1, 5], np.int64)   # dups, both ends
         np.testing.assert_array_equal(source.gather(ids), expected[ids])
         np.testing.assert_array_equal(source.gather(np.asarray([3])),
                                       expected[[3]])
 
-    def test_gather_matches_iter_chunks(self, source):
+    def test_gather_matches_iter_chunks(self, source, expected):
         """The two access paths must present identical bytes."""
+        n = expected.shape[0]
         via_iter = np.concatenate([c for _, c in source.iter_chunks(16)])
-        via_gather = source.gather(np.arange(N, dtype=np.int64))
+        via_gather = source.gather(np.arange(n, dtype=np.int64))
         np.testing.assert_array_equal(via_gather, via_iter)
 
     def test_materialize_is_full_in_order_gather(self, source, expected):
@@ -136,6 +182,18 @@ class TestChunkSourceContract:
 def test_as_source_is_identity_on_sources(x):
     src = ArraySource(x)
     assert as_source(src) is src
+
+
+def test_embed_cold_equals_warm_bitwise(embed_setup):
+    """Cache-hit replay must reproduce the cold compute path bit-for-bit
+    (and both must equal the block-aligned extractor reference) — the
+    acceptance bar for the embedding cache."""
+    tokens, ex, ref, cache = embed_setup
+    cold = EmbeddingSource(tokens, ex).materialize()
+    warm_src = EmbeddingSource(tokens, ex, cache=cache)
+    assert warm_src.cache_complete()
+    np.testing.assert_array_equal(cold, warm_src.materialize())
+    np.testing.assert_array_equal(cold, ref)
 
 
 class TestDataSourceErrors:
