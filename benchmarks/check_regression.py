@@ -35,10 +35,29 @@ number is a same-machine ratio:
   * ``serve.embed_share`` in [0, 1] — the ``embed_ms`` stage accounting
     stayed a coherent fraction of total stage time.
 
+The fused wave solver commits its own baseline, ``BENCH_solver.json``
+(written by ``benchmarks.roofline``), checked on committed-value bars —
+the decisive numbers are same-machine ratios and exact-parity gaps, so no
+re-measure half:
+
+  * ``wave.speedup`` >= ``wave.bar`` (1.5x) — ONE fused launch over the
+    wave's packed slots must beat S per-slot launches;
+  * ``wave.max_abs_diff`` <= ``wave.tol`` — the fused and per-slot paths
+    agree within solver tolerance (they are bit-identical per slot; the
+    bar allows the padded-matmul reduction-order drift);
+  * ``warm_start.reduction`` >= ``warm_start.bar`` and iters_warm <
+    iters_cold — the gamma-scan warm-start carry actually shortens the
+    CD epochs-to-tolerance walk;
+  * ``warm_start.kkt_cold`` and ``warm_start.kkt_warm`` <= tol — both
+    runs genuinely converged (a reduction measured against a
+    non-converged cold run would be meaningless);
+  * ``roofline`` internal consistency — positive intensity, a declared
+    memory/compute bound matching the recorded TPU-side times.
+
 ``REPRO_SKIP_REGRESSION=1`` skips the timed half (still validates the
-committed files); a missing BENCH_serve.json or BENCH_embed.json passes
-with a note, so fresh clones and CI without the benchmark artifacts are
-not blocked.
+committed files); a missing BENCH_serve.json, BENCH_embed.json or
+BENCH_solver.json passes with a note, so fresh clones and CI without the
+benchmark artifacts are not blocked.
 
 ``PYTHONPATH=src python -m benchmarks.check_regression`` — exit 0 pass,
 exit 1 with the violated bars listed.
@@ -51,6 +70,7 @@ import sys
 import time
 
 from benchmarks.embed_bench import OUT_PATH as EMBED_OUT_PATH
+from benchmarks.roofline import OUT_PATH as SOLVER_OUT_PATH
 from benchmarks.serve_throughput import OUT_PATH, _make_bank_and_traffic
 
 _STAGES = ("queue", "pack", "dispatch", "device", "collect")
@@ -160,6 +180,62 @@ def check_embed(baseline: dict) -> list:
     return errs
 
 
+def check_solver(baseline: dict) -> list:
+    """Committed-value bars for BENCH_solver.json — same-machine ratios
+    and parity gaps recorded by ``benchmarks.roofline``."""
+    errs = []
+
+    wave = baseline.get("wave")
+    if not isinstance(wave, dict):
+        errs.append("wave section missing")
+    else:
+        bar = float(wave.get("bar", 1.5))
+        sp = wave.get("speedup")
+        if sp is None or sp < bar:
+            errs.append(f"wave.speedup {sp} < bar {bar}x — fused wave "
+                        f"launch no longer beats per-slot launches")
+        tol = float(wave.get("tol", 1e-3))
+        diff = wave.get("max_abs_diff")
+        if diff is None or diff > tol:
+            errs.append(f"wave.max_abs_diff {diff} > tol {tol} — fused "
+                        f"and per-slot solves disagree")
+
+    warm = baseline.get("warm_start")
+    if not isinstance(warm, dict):
+        errs.append("warm_start section missing")
+    else:
+        bar = float(warm.get("bar", 1.2))
+        red = warm.get("reduction")
+        if red is None or red < bar:
+            errs.append(f"warm_start.reduction {red} < bar {bar}x — warm "
+                        f"starts no longer shorten the solve")
+        ic, iw = warm.get("iters_cold"), warm.get("iters_warm")
+        if ic is None or iw is None or not iw < ic:
+            errs.append(f"warm_start iters not reduced: warm {iw} vs "
+                        f"cold {ic}")
+        tol = float(warm.get("tol", 1e-3))
+        for side in ("kkt_cold", "kkt_warm"):
+            kkt = warm.get(side)
+            if kkt is None or kkt > tol:
+                errs.append(f"warm_start.{side} {kkt} > tol {tol} — run "
+                            f"did not converge, reduction is meaningless")
+
+    roof = baseline.get("roofline")
+    if not isinstance(roof, dict):
+        errs.append("roofline section missing")
+    else:
+        if not roof.get("intensity_flops_per_byte", 0) > 0:
+            errs.append("roofline.intensity_flops_per_byte non-positive")
+        tm, tc = roof.get("tpu_t_memory_s"), roof.get("tpu_t_compute_s")
+        bound = roof.get("bound")
+        if tm is not None and tc is not None:
+            want = "memory" if tm >= tc else "compute"
+            if bound != want:
+                errs.append(f"roofline.bound {bound!r} inconsistent with "
+                            f"recorded times (memory {tm}, compute {tc})")
+    return errs
+
+
 def _fresh_per_stage() -> dict:
     from repro.obs import MetricsRegistry, Tracer
     from repro.serve.svm_engine import SVMEngine
@@ -204,6 +280,20 @@ def main() -> int:
                   f"({e})")
             return 1
         errs += [f"embed: {e}" for e in check_embed(embed_baseline)]
+
+    if not os.path.exists(SOLVER_OUT_PATH):
+        print(f"# check_regression: no solver baseline at "
+              f"{SOLVER_OUT_PATH} — pass (run benchmarks.roofline to "
+              f"record one)")
+    else:
+        try:
+            with open(SOLVER_OUT_PATH) as f:
+                solver_baseline = json.load(f)
+        except ValueError as e:
+            print(f"check_regression: {SOLVER_OUT_PATH} is not valid JSON "
+                  f"({e})")
+            return 1
+        errs += [f"solver: {e}" for e in check_solver(solver_baseline)]
 
     if errs:
         print("check_regression: FAIL")

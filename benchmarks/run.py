@@ -2,8 +2,9 @@
 
 ``PYTHONPATH=src python -m benchmarks.run [--tables table1,table3]``
 Quick mode by default; set REPRO_BENCH_FULL=1 for paper-scale sizes.
-Roofline (TPU-target) analysis is separate: run repro.launch.dryrun with
---out, then benchmarks.roofline on the results.
+The ``solver`` table (benchmarks.roofline) covers the fused wave-level CD
+solver: wave-vs-per-slot wall clock, warm-start iteration counts, and the
+analytic flops/byte roofline; it writes ``BENCH_solver.json``.
 """
 from __future__ import annotations
 
@@ -18,7 +19,7 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--tables",
                     default="table1,table2,table3,table4,table10,gram_reuse,"
-                            "serve,serve_micro,cells,robustness,embed")
+                            "serve,serve_micro,cells,robustness,embed,solver")
     args = ap.parse_args(argv)
     tables = args.tables.split(",")
     report = Report()
@@ -59,10 +60,14 @@ def main(argv=None) -> int:
     if "embed" in tables:
         from benchmarks import embed_bench
         embed_bench.run(report)
+    if "solver" in tables:
+        from benchmarks import roofline
+        roofline.run(report)
 
     print(f"\n# done in {time.time() - t0:.0f}s")
     for t in ("table1", "table2", "table3", "table4", "table10", "gram_reuse",
-              "serve", "serve_micro", "cells", "robustness", "embed"):
+              "serve", "serve_micro", "cells", "robustness", "embed",
+              "solver"):
         md = report.table_markdown(t)
         if md:
             print(f"\n## {t}\n{md}")

@@ -194,10 +194,13 @@ class TrainResult:
 
         Columns whose winning (gamma, lambda) equals the train-time argmin
         reuse the cached models untouched (bitwise); the rest are re-solved
-        by :func:`repro.core.cv.solve_columns_at` — grouped per (cell,
-        winning gamma), columns padded to one static width so repeated
-        re-selections share one compiled program.  ``stats`` reports how
-        little was solved versus the full sweep.
+        by :func:`repro.core.cv.solve_columns_batched` — ALL moved cells
+        sharing a winning gamma-grid index go into one vmapped launch
+        (columns padded to one static width so repeated re-selections share
+        one compiled program), each warm-started from its cell's cached
+        argmin model instead of ``c0 = 0``.  ``stats`` reports how little
+        was solved versus the full sweep (``resolve_calls`` counts
+        launches, ``solver_iters`` total box-QP iterations).
         """
         cfg = self.config
         rule = rule or _DEFAULT_RULES.get(cfg.scenario, "argmin")
@@ -232,40 +235,64 @@ class TrainResult:
             sub_grid = np.asarray(cfg.weights, np.float32)
         stats = {"rule": rule, "grid_columns": surface.grid_columns,
                  "winners_moved": int(need.sum()),
-                 "columns_resolved": 0, "resolve_calls": 0}
+                 "columns_resolved": 0, "resolve_calls": 0,
+                 "solver_iters": 0}
 
         from repro import obs
         m_resolved = obs.metrics.counter("select.columns_resolved")
+        # group moved cells by winning gamma-grid INDEX: every cell in a
+        # group re-solves in ONE vmapped launch, not one jit call per
+        # (cell, gamma)
+        groups: Dict[int, list] = {}
         for c in np.flatnonzero(need.any(axis=(1, 2))):
             for g in np.unique(res.g_idx[c][need[c]]):
+                groups.setdefault(int(g), []).append(int(c))
+        for g, cells in sorted(groups.items()):
+            ts_of, pads = {}, {}
+            lam_b, sub_b, task_b, c0_b = [], [], [], []
+            for c in cells:
                 ts = np.argwhere(need[c] & (res.g_idx[c] == g))  # (m, 2)
+                ts_of[c] = ts
                 # pad to the static (T*S) width: one compiled shape for
                 # every re-selection of this fit
                 pad = np.concatenate(
                     [ts, np.repeat(ts[:1], n_cols - len(ts), axis=0)])
-                l_of = res.l_idx[c, pad[:, 0], pad[:, 1]]
-                with obs.tracer.span("select.resolve") as sp:
-                    sp.set(cell=int(c), columns=len(ts))
-                    out = np.asarray(cv_mod.solve_columns_at(
-                        jnp.asarray(self.x_cells[c]),
-                        jnp.asarray(self.y_cells[c]),
-                        jnp.asarray(self.tmask_cells[c]),
-                        jnp.asarray(self.mask_cells[c]),
-                        jnp.asarray(self.gammas_cells[c, g]),
-                        jnp.asarray(self.lambdas[l_of], jnp.float32),
-                        jnp.asarray(sub_grid[pad[:, 1]], jnp.float32),
-                        jnp.asarray(pad[:, 0], jnp.int32),
-                        jnp.asarray(self.fold_keys[c]),
-                        self.cv_cfg))                            # (k, T*S)
-                for j, (t, s) in enumerate(ts):
-                    coefs[c, :, t, s] = out[:, j]
+                pads[c] = pad
+                lam_b.append(self.lambdas[res.l_idx[c, pad[:, 0],
+                                                    pad[:, 1]]])
+                sub_b.append(sub_grid[pad[:, 1]])
+                task_b.append(pad[:, 0])
+                # warm start: the cached argmin model of the SAME (task,
+                # sub) column — the nearest solved grid column; box-clipped
+                # to the new (lambda, weight) box inside the solver
+                c0_b.append(self.coefs[c][:, pad[:, 0], pad[:, 1]])
+            with obs.tracer.span("select.resolve") as sp:
+                sp.set(gamma_idx=int(g), cells=len(cells),
+                       columns=int(sum(len(ts_of[c]) for c in cells)))
+                out, iters, _ = cv_mod.solve_columns_batched(
+                    jnp.asarray(self.x_cells[cells]),
+                    jnp.asarray(self.y_cells[cells]),
+                    jnp.asarray(self.tmask_cells[cells]),
+                    jnp.asarray(self.mask_cells[cells]),
+                    jnp.asarray(self.gammas_cells[cells, g]),
+                    jnp.asarray(np.stack(lam_b), jnp.float32),
+                    jnp.asarray(np.stack(sub_b), jnp.float32),
+                    jnp.asarray(np.stack(task_b), jnp.int32),
+                    jnp.asarray(self.fold_keys[cells]),
+                    jnp.asarray(np.stack(c0_b), jnp.float32),
+                    self.cv_cfg)                         # (C, k, T*S), (C,)
+                out = np.asarray(out)
+            for i, c in enumerate(cells):
+                for j, (t, s) in enumerate(ts_of[c]):
+                    coefs[c, :, t, s] = out[i, :, j]
                     gamma[c, t, s] = self.gammas_cells[c, g]
                     lam[c, t, s] = self.lambdas[res.l_idx[c, t, s]]
                     val[c, t, s] = self.surf_loss[c, g, t,
                                                   res.l_idx[c, t, s], s]
-                stats["columns_resolved"] += len(ts)
-                stats["resolve_calls"] += 1
-                m_resolved.inc(len(ts))
+                stats["columns_resolved"] += len(ts_of[c])
+                m_resolved.inc(len(ts_of[c]))
+            stats["resolve_calls"] += 1
+            stats["solver_iters"] += int(np.asarray(iters).sum())
 
         return SelectResult(
             rule=rule, config=cfg, cv_cfg=self.cv_cfg, scaler=self.scaler,
@@ -592,7 +619,7 @@ class SVM:
             solver=cfg.resolve_solver(), kernel=cfg.kernel,
             n_folds=cfg.n_folds, fold_scheme=cfg.fold_scheme, tol=cfg.tol,
             max_iters=cfg.max_iters, taus=cfg.taus, weights=cfg.weights,
-            keep_surface=True)
+            keep_surface=True, cd_polish=cfg.cd_polish)
 
         base_grid = grids.liquid_grid(n=k, dim=d, median_dist=1.0,
                                       grid_choice=cfg.grid_choice,

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 from repro.core import kernel_fns
 from repro.core.grids import GridSpec
 from repro.core.solvers import base as qp
+from repro.kernels.cd_solver import ops as cd_ops
 from repro.core.solvers import expectile as exp_solver
 from repro.core.solvers import hinge as hinge_solver
 from repro.core.solvers import least_squares as ls_solver
@@ -83,6 +84,12 @@ class CVConfig:
                                     # retraining (repro.api.session)
     taus: Tuple[float, ...] = (0.5,)       # quantile/expectile levels (sub axis)
     weights: Tuple[float, ...] = (1.0,)    # hinge +1-class weight grid (sub axis)
+    cd_polish: int = 0              # Gauss-Seidel polish epochs after the
+                                    # batched box-QP (hinge/quantile): the
+                                    # warm-started CD pass from
+                                    # kernels/cd_solver, wave-fused under the
+                                    # cell vmap.  0 = off (bitwise-identical
+                                    # to the FISTA-only path)
 
     @property
     def n_sub(self) -> int:
@@ -162,22 +169,31 @@ def _val_losses(f_val: Array, y_cols: Array, val_mask_cols: Array, cfg: CVConfig
 
 
 def _solve_columns(k_full, y_cols, train_cols, lam_c, sub_c, n_eff_cols, cfg, c0, l_est):
-    """train_cols (n, P): 1 = sample is in this column's training set."""
-    if cfg.solver == "hinge":
+    """train_cols (n, P): 1 = sample is in this column's training set.
+
+    Returns ``(c, iters)`` — iters is the box-QP iteration count (0 for the
+    direct ls/expectile solves), surfaced so callers can assert that warm
+    starts actually shorten the solve.  ``cfg.cd_polish > 0`` appends that
+    many Gauss-Seidel epochs (``kernels/cd_solver``) after the box-QP —
+    warm-started from the FISTA iterate, monotone, and wave-fused when the
+    caller is vmapped over cells.
+    """
+    if cfg.solver in ("hinge", "quantile"):
         cost = 1.0 / (2.0 * lam_c[None, :] * jnp.maximum(n_eff_cols[None, :], 1.0))
-        w = jnp.where(y_cols > 0, sub_c[None, :], 1.0)  # class weight on +1
-        edge = y_cols * cost * w * train_cols
-        lo, hi = jnp.minimum(0.0, edge), jnp.maximum(0.0, edge)
-        res = qp.box_qp(k_full, y_cols * train_cols, lo, hi, c0=c0,
+        if cfg.solver == "hinge":
+            w = jnp.where(y_cols > 0, sub_c[None, :], 1.0)  # class weight on +1
+            edge = y_cols * cost * w * train_cols
+            lo, hi = jnp.minimum(0.0, edge), jnp.maximum(0.0, edge)
+        else:
+            lo = cost * (sub_c[None, :] - 1.0) * train_cols
+            hi = cost * sub_c[None, :] * train_cols
+        y_eff = y_cols * train_cols
+        res = qp.box_qp(k_full, y_eff, lo, hi, c0=c0,
                         tol=cfg.tol, max_iters=cfg.max_iters, l_est=l_est)
-        return res.c
-    if cfg.solver == "quantile":
-        cost = 1.0 / (2.0 * lam_c[None, :] * jnp.maximum(n_eff_cols[None, :], 1.0))
-        lo = cost * (sub_c[None, :] - 1.0) * train_cols
-        hi = cost * sub_c[None, :] * train_cols
-        res = qp.box_qp(k_full, y_cols * train_cols, lo, hi, c0=c0,
-                        tol=cfg.tol, max_iters=cfg.max_iters, l_est=l_est)
-        return res.c
+        c = res.c
+        if cfg.cd_polish > 0:
+            c = cd_ops.cd_polish(k_full, y_eff, lo, hi, c, cfg.cd_polish)
+        return c, res.iters
     if cfg.solver == "ls":
         # all columns must share the fold train mask (task_mask == 1); the
         # eigh is done once and the lambda path is a diagonal rescale.
@@ -187,12 +203,13 @@ def _solve_columns(k_full, y_cols, train_cols, lam_c, sub_c, n_eff_cols, cfg, c0
         s = jnp.maximum(s, 0.0)
         uty = u.T @ (y_cols * train_cols[:, :1])        # (n, P)
         denom = s[:, None] + lam_c[None, :] * jnp.maximum(n_eff_cols[None, :], 1.0)
-        return u @ (uty / denom)
+        return u @ (uty / denom), jnp.int32(0)
     if cfg.solver == "expectile":
         tm = train_cols[:, 0]
         n_eff = n_eff_cols[0]
-        return exp_solver.solve_expectile(
-            k_full, y_cols[:, 0], sub_c, lam_c, n_eff, train_mask=tm)
+        c = exp_solver.solve_expectile(
+            k_full, y_cols[:, 0], sub_c, lam_c, n_eff, train_mask=tm, c0=c0)
+        return c, jnp.int32(0)
     raise ValueError(cfg.solver)
 
 
@@ -264,8 +281,8 @@ def cv_cell(
                 l_est = qp.power_iteration_l(k_full * mt[:, None] * mt[None, :])
             else:
                 l_est = l_shared
-            coefs = _solve_columns(k_full, y_cols, tr_cols, lam_c, sub_c,
-                                   n_eff_cols, cfg, c0_f, l_est)
+            coefs, _ = _solve_columns(k_full, y_cols, tr_cols, lam_c, sub_c,
+                                      n_eff_cols, cfg, c0_f, l_est)
             f_val = k_full @ coefs
             vl = _val_losses(f_val, y_cols, va_cols, cfg, sub_c)
             if track_rates:
@@ -326,31 +343,10 @@ def cv_cell(
                       fa_grid=fa_all, det_grid=det_all)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def solve_columns_at(
-    x: Array,              # (n, d) padded cell
-    y_tasks: Array,        # (n_tasks, n)
-    task_mask: Array,      # (n_tasks, n)
-    mask: Array,           # (n,)
-    gamma: Array,          # scalar — ONE gamma for every requested column
-    lam_cols: Array,       # (P',) per-column lambda VALUES
-    sub_cols: Array,       # (P',) per-column tau / class weight
-    task_cols: Array,      # (P',) per-column task index
-    fold_key: Array,
-    cfg: CVConfig,
-) -> Array:
-    """Targeted re-solve: the given columns at one gamma, all folds, fold-
-    averaged — the select() phase's "one targeted wave".
-
-    Changing the selection rule over a retained surface only moves a handful
-    of (task, sub) winners to new (gamma, lambda) coordinates; this solves
-    exactly those columns (one Gram, one batched box-QP per distinct gamma)
-    instead of re-running the full fold x grid sweep.  ``fold_key`` must be
-    the cell's training key so the CV folds — and hence the model the
-    surface scored — are reproduced exactly.  Solves start from c0 = 0 (the
-    train-phase warm start across the gamma scan is not replayed), which
-    converges to the same box-QP optimum within ``cfg.tol``.
-    """
+def _solve_columns_at_core(x, y_tasks, task_mask, mask, gamma, lam_cols,
+                           sub_cols, task_cols, fold_key, c0, cfg):
+    """Unjitted body shared by :func:`solve_columns_at` (one cell) and
+    :func:`solve_columns_batched` (a vmapped group of cells)."""
     y_strat = y_tasks[0] if cfg.solver == "hinge" else None
     val_folds = make_fold_masks(fold_key, mask, cfg.n_folds, cfg.fold_scheme,
                                 y_strat)
@@ -365,9 +361,22 @@ def solve_columns_at(
     needs_l = cfg.solver in ("hinge", "quantile")
     l_shared = (qp.power_iteration_l(k_full)
                 if (needs_l and cfg.shared_lipschitz) else None)
-    c0 = jnp.zeros((x.shape[0], lam_cols.shape[0]), jnp.float32)
+    n, p_cols = x.shape[0], lam_cols.shape[0]
+    if c0 is None:
+        c0 = jnp.zeros((cfg.n_folds, n, p_cols), jnp.float32)
+    elif c0.ndim == 2:
+        # one shared start (nearest cached grid column, solved at a possibly
+        # different (gamma, lambda)) broadcast to every fold — _solve_columns
+        # clips it into each column's box (qp.clip_warm_start) first.
+        c0 = jnp.broadcast_to(c0.astype(jnp.float32)[None],
+                              (cfg.n_folds, n, p_cols))
+    else:
+        # per-fold starts: each fold resumes from ITS OWN cached solution
+        # (the fold coefs this function returns) — the re-materialization
+        # path, where the start is already at the optimum.
+        c0 = c0.astype(jnp.float32)
 
-    def per_fold(tr_mask):
+    def per_fold(tr_mask, c0_f):
         tr_cols = tr_mask.astype(jnp.float32)[:, None] * colmask
         n_eff_cols = jnp.sum(tr_cols, axis=0)
         if needs_l and not cfg.shared_lipschitz:
@@ -376,7 +385,81 @@ def solve_columns_at(
         else:
             l_est = l_shared
         return _solve_columns(k_full, y_cols, tr_cols, lam_cols, sub_cols,
-                              n_eff_cols, cfg, c0, l_est)
+                              n_eff_cols, cfg, c0_f, l_est)
 
-    coefs = jax.vmap(per_fold)(train_folds)                    # (folds, n, P')
-    return jnp.mean(coefs, axis=0)                             # (n, P')
+    coefs, iters = jax.vmap(per_fold)(train_folds, c0)         # (folds, n, P')
+    return jnp.mean(coefs, axis=0), jnp.sum(iters), coefs
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def solve_columns_at(
+    x: Array,              # (n, d) padded cell
+    y_tasks: Array,        # (n_tasks, n)
+    task_mask: Array,      # (n_tasks, n)
+    mask: Array,           # (n,)
+    gamma: Array,          # scalar — ONE gamma for every requested column
+    lam_cols: Array,       # (P',) per-column lambda VALUES
+    sub_cols: Array,       # (P',) per-column tau / class weight
+    task_cols: Array,      # (P',) per-column task index
+    fold_key: Array,
+    cfg: CVConfig,
+    c0: Array | None = None,   # (n, P') shared or (folds, n, P') per-fold
+) -> tuple[Array, Array, Array]:
+    """Targeted re-solve: the given columns at one gamma, all folds, fold-
+    averaged — the select() phase's "one targeted wave".
+
+    Changing the selection rule over a retained surface only moves a handful
+    of (task, sub) winners to new (gamma, lambda) coordinates; this solves
+    exactly those columns (one Gram, one batched box-QP per distinct gamma)
+    instead of re-running the full fold x grid sweep.  ``fold_key`` must be
+    the cell's training key so the CV folds — and hence the model the
+    surface scored — are reproduced exactly.
+
+    ``c0`` warm-starts the solve, box-clipped per column (warm or cold
+    ``c0=None`` converges to the same box-QP optimum within ``cfg.tol``):
+
+    * ``(n, P')`` — one start shared by every fold, e.g. the nearest
+      cached grid column from ``TrainResult``.  Measured effect on the
+      batched FISTA iteration count: roughly neutral — FISTA's count is
+      gated by the worst-conditioned column, and a neighbor-grid start is
+      far from that column's optimum (the gamma-scan warm starts that DO
+      pay are the CD path's; see ``benchmarks/roofline.py``).  Kept
+      because clipping makes it free and never worse than cold.
+    * ``(folds, n, P')`` — per-fold starts.  When these are the fold
+      coefs of a previous solve of the SAME columns (the third return
+      value), each fold starts at its own optimum and the re-solve
+      collapses to a KKT check — orders of magnitude fewer iterations
+      (asserted in ``tests/test_staged_api.py``).  This is the
+      re-materialization path: rebuilding a model the surface already
+      scored without paying the solve again.
+
+    Returns ``(fold-mean coefs (n, P'), total box-QP iters,
+    per-fold coefs (folds, n, P'))``.
+    """
+    return _solve_columns_at_core(x, y_tasks, task_mask, mask, gamma,
+                                  lam_cols, sub_cols, task_cols, fold_key,
+                                  c0, cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def solve_columns_batched(
+    x: Array,              # (C, n, d) stacked cells
+    y_tasks: Array,        # (C, n_tasks, n)
+    task_mask: Array,      # (C, n_tasks, n)
+    mask: Array,           # (C, n)
+    gamma: Array,          # (C,) one gamma per cell (same grid index)
+    lam_cols: Array,       # (C, P') per-column lambda values
+    sub_cols: Array,       # (C, P')
+    task_cols: Array,      # (C, P')
+    fold_key: Array,       # (C, 2)
+    c0: Array,             # (C, n, P') shared or (C, folds, n, P') per-fold
+    cfg: CVConfig,
+) -> tuple[Array, Array, Array]:
+    """Vmapped :func:`solve_columns_at`: ONE launch for every moved cell
+    that shares a gamma-grid index, instead of one jit call per (cell,
+    gamma).  Returns ``(coefs (C, n, P'), iters (C,),
+    fold_coefs (C, folds, n, P'))``.
+    """
+    core = functools.partial(_solve_columns_at_core, cfg=cfg)
+    return jax.vmap(core)(x, y_tasks, task_mask, mask, gamma, lam_cols,
+                          sub_cols, task_cols, fold_key, c0)

@@ -68,6 +68,20 @@ def kkt_residual(c: Array, g: Array, lo: Array, hi: Array) -> Array:
     return jnp.max(jnp.abs(r), axis=0) / width
 
 
+def clip_warm_start(c0: Array, lo: Array, hi: Array) -> Array:
+    """Project a warm start into a column's feasible box.
+
+    The grid-neighbor solution being reused generally lives in a DIFFERENT
+    box (lambda and the class weight scale it; a moved select-phase winner
+    may change both), so the projection is mandatory before any solver
+    touches it: both the FISTA iteration below and the Gauss-Seidel polish
+    (``repro.kernels.cd_solver``) require ``lo <= c0 <= hi`` — from a
+    feasible start their descent is monotone, so a clipped warm start can
+    never end worse than the cold ``c0 = 0`` it replaces.
+    """
+    return jnp.clip(c0, lo, hi)
+
+
 def box_qp(
     k_mat: Array,
     y: Array,
@@ -95,7 +109,7 @@ def box_qp(
     lo = jnp.broadcast_to(lo.astype(jnp.float32), (n, p))
     hi = jnp.broadcast_to(hi.astype(jnp.float32), (n, p))
     c0 = jnp.zeros((n, p), jnp.float32) if c0 is None else jnp.broadcast_to(c0.astype(jnp.float32), (n, p))
-    c0 = jnp.clip(c0, lo, hi)  # warm starts from a larger box are clipped in
+    c0 = clip_warm_start(c0, lo, hi)  # warm starts from a larger box are clipped in
 
     if l_est is None:
         l_est = power_iteration_l(k_mat)

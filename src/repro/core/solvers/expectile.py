@@ -27,9 +27,7 @@ def expectile_loss(y: Array, f: Array, tau: Array) -> Array:
 
 
 def _irls_single(k_masked: Array, y: Array, tau: Array, lam_n: Array,
-                 mask: Array, sweeps: int) -> Array:
-    n = k_masked.shape[0]
-
+                 mask: Array, sweeps: int, c0: Array) -> Array:
     def body(_, c):
         f = k_masked @ c
         w = jnp.where(y - f > 0, tau, 1.0 - tau)
@@ -39,7 +37,6 @@ def _irls_single(k_masked: Array, y: Array, tau: Array, lam_n: Array,
         cf = jax.scipy.linalg.cho_factor(a)
         return jax.scipy.linalg.cho_solve(cf, y)
 
-    c0 = jnp.zeros((n,), jnp.float32)
     return jax.lax.fori_loop(0, sweeps, body, c0)
 
 
@@ -51,8 +48,16 @@ def solve_expectile(
     n_eff: Array,
     train_mask: Array | None = None,
     sweeps: int = 12,
+    c0: Array | None = None,
 ) -> Array:
-    """Returns c (n, P)."""
+    """Returns c (n, P).
+
+    ``c0`` (n, P) warm-starts the IRLS from a grid-neighbor solution: only
+    the FIRST sweep's residual-sign weights depend on it (each sweep's
+    linear solve replaces c outright), so a good neighbor start means the
+    weights are right from sweep one — the IRLS fixed point itself is
+    unchanged, warm or cold.
+    """
     k_mat = k_mat.astype(jnp.float32)
     if train_mask is None:
         mask = jnp.ones((k_mat.shape[0],), jnp.float32)
@@ -61,8 +66,11 @@ def solve_expectile(
     km = k_mat * mask[:, None] * mask[None, :]
     y = y.astype(jnp.float32) * mask
     lam_n = lambdas.astype(jnp.float32) * jnp.maximum(n_eff, 1.0)  # (P,)
+    if c0 is None:
+        c0 = jnp.zeros((k_mat.shape[0], taus.shape[0]), jnp.float32)
 
-    def one(tau, ln):
-        return _irls_single(km, y, tau, ln, mask, sweeps)
+    def one(tau, ln, c0_col):
+        return _irls_single(km, y, tau, ln, mask, sweeps, c0_col)
 
-    return jax.vmap(one, in_axes=(0, 0), out_axes=1)(taus.astype(jnp.float32), lam_n)
+    return jax.vmap(one, in_axes=(0, 0, 1), out_axes=1)(
+        taus.astype(jnp.float32), lam_n, c0.astype(jnp.float32))

@@ -14,6 +14,13 @@ each worker solves its coarse cell via fine cells of <= 2000.  Here:
     (embarrassingly parallel by construction — the paper's observed
     superlinear Spark speedup is the same effect).
 
+With ``cfg.cd_polish > 0`` each cell's box-QP iterate gets that many
+Gauss-Seidel epochs from ``repro.kernels.cd_solver`` appended; under this
+module's vmap over slots those per-cell polishes execute as ONE wave-fused
+CD pass per gamma (the ``cd_epochs_wave`` launch shape — see the wave
+fusion contract in ``kernels/cd_solver/cd_solver.py``), so the polish
+rides the wave for free instead of serializing per slot.
+
 Test phase: test points are routed host-side to their owning cell
 (nearest center — Voronoi routing), padded per slot, and evaluated with
 the same sharding.
@@ -200,7 +207,8 @@ def train_cells_waves(
         if res is None:
             with obs.tracer.span("train.wave.stage"):
                 arrays = stage(lo, lo + wave_size)
-            with obs.tracer.span("train.wave.solve"):
+            with obs.tracer.span("train.wave.solve") as sp:
+                sp.set(wave=w, slots=wave_size, cd_polish=cfg.cd_polish)
                 res = train_cells(*[jnp.asarray(a) for a in arrays],
                                   lam_c, sub_c, task_c, cfg, n_lam, n_sub,
                                   mesh=mesh, axis_names=axis_names)

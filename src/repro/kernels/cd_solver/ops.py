@@ -1,6 +1,17 @@
-"""jit'd wrapper: pads to the coordinate block, runs E epochs, dispatches
+"""jit'd wrappers: pad to the coordinate block, run E epochs, dispatch
 Pallas on TPU / interpret validation elsewhere, with the jnp oracle as the
 default CPU production path.
+
+Three entry points:
+
+* :func:`cd_epochs`        — one cell, the original per-slot launch;
+* :func:`cd_epochs_wave`   — a whole wave of slots in ONE launch (the
+  fused path ``train_cells_waves`` amortizes dispatch over — see the
+  wave-fusion contract in ``cd_solver.py``);
+* :func:`cd_polish`        — unjitted epoch loop callable from INSIDE an
+  outer jit (``repro.core.cv`` runs it after FISTA, per gamma); under
+  ``train_cells``'s vmap over slots the per-cell polish batches into the
+  same wave-fused execution.
 """
 from __future__ import annotations
 
@@ -11,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.kernels import runtime
 from repro.kernels.cd_solver import ref
-from repro.kernels.cd_solver.cd_solver import BLOCK_COORDS, cd_epoch_pallas
+from repro.kernels.cd_solver.cd_solver import (
+    BLOCK_COORDS, cd_epoch_pallas, cd_wave_epoch_pallas)
 
 Array = jax.Array
 
@@ -51,6 +63,100 @@ def cd_epochs(k_mat: Array, y: Array, lo: Array, hi: Array, c0: Array,
     def body(_, state):
         return cd_epoch_pallas(k_mat, state[0], state[1], lo, hi,
                                interpret=use_interpret)
+
+    c, _ = jax.lax.fori_loop(0, epochs, body, (c0, g0))
+    return c[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("epochs", "force_pallas", "interpret"))
+def cd_epochs_wave(k_mats: Array, y: Array, lo: Array, hi: Array, c0: Array,
+                   epochs: int = 1, force_pallas: bool = False,
+                   interpret: bool | None = None) -> Array:
+    """Wave-fused :func:`cd_epochs`: S slots in one launch per epoch.
+
+    k_mats (S, n, n); y (S, n) or (S, n, P); lo/hi/c0 (S, n, P).  Returns
+    c (S, n, P).  Same coordinate order and fixed point as calling
+    :func:`cd_epochs` slot by slot; on TPU the Pallas wave kernel
+    reproduces the per-slot sweep bit-for-bit in ONE launch, while the
+    off-TPU path additionally uses delayed trailing updates
+    (``ref.cd_epoch_wave_blocked_ref``) so the bulk work runs as batched
+    GEMMs — per-slot parity is then f32-rounding-level, within solver
+    tolerance.
+    """
+    s, n = k_mats.shape[:2]
+    if y.ndim == 2:
+        y = y[:, :, None]
+    p = c0.shape[2]
+    y = jnp.broadcast_to(y.astype(jnp.float32), (s, n, p))
+
+    use_pallas = force_pallas or runtime.on_tpu()
+    if not use_pallas:
+        pad = (-n) % ref.WAVE_BLOCK
+        if pad:
+            k_mats = jnp.pad(k_mats, ((0, 0), (0, pad), (0, pad)))
+            y = jnp.pad(y, ((0, 0), (0, pad), (0, 0)))
+            lo = jnp.pad(lo, ((0, 0), (0, pad), (0, 0)))
+            hi = jnp.pad(hi, ((0, 0), (0, pad), (0, 0)))
+            c0 = jnp.pad(c0, ((0, 0), (0, pad), (0, 0)))
+        g0 = jnp.einsum("sij,sjp->sip", k_mats, c0) - y
+
+        def body(_, state):
+            return ref.cd_epoch_wave_blocked_ref(k_mats, state[0], state[1],
+                                                 lo, hi)
+
+        c, _ = jax.lax.fori_loop(0, epochs, body, (c0, g0))
+        return c[:, :n]
+
+    pad = (-n) % BLOCK_COORDS
+    if pad:
+        k_mats = jnp.pad(k_mats, ((0, 0), (0, pad), (0, pad)))
+        y = jnp.pad(y, ((0, 0), (0, pad), (0, 0)))
+        lo = jnp.pad(lo, ((0, 0), (0, pad), (0, 0)))
+        hi = jnp.pad(hi, ((0, 0), (0, pad), (0, 0)))
+        c0 = jnp.pad(c0, ((0, 0), (0, pad), (0, 0)))
+    g0 = jnp.einsum("sij,sjp->sip", k_mats, c0) - y
+    use_interpret = runtime.resolve_interpret(interpret)
+
+    def body(_, state):
+        return cd_wave_epoch_pallas(k_mats, state[0], state[1], lo, hi,
+                                    interpret=use_interpret)
+
+    c, _ = jax.lax.fori_loop(0, epochs, body, (c0, g0))
+    return c[:, :n]
+
+
+def cd_polish(k_mat: Array, y: Array, lo: Array, hi: Array, c0: Array,
+              epochs: int) -> Array:
+    """Polish a box-QP iterate with `epochs` Gauss-Seidel sweeps — callable
+    from inside an outer jit (no nested-jit dispatch).
+
+    k_mat (n, n) any float dtype (accumulation is f32); y/lo/hi/c0 (n, P).
+    Warm starts are clipped into the box here (see
+    ``repro.core.solvers.base.clip_warm_start`` for why that is safe).
+    One epoch costs the same n²P flops as one FISTA iteration; Gauss-
+    Seidel descent from a feasible start is monotone, so polishing a
+    converged iterate can only tighten it.  Runs the delayed-update
+    blocked sweep (``ref.cd_epoch_blocked_ref``); under vmap
+    (``train_cells`` batches cells over the slot axis) the epoch loop
+    executes wave-fused, matching :func:`cd_epochs_wave`.
+    """
+    n = k_mat.shape[0]
+    k_mat = k_mat.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    lo = lo.astype(jnp.float32)
+    hi = hi.astype(jnp.float32)
+    c0 = jnp.clip(c0.astype(jnp.float32), lo, hi)
+    pad = (-n) % ref.WAVE_BLOCK
+    if pad:
+        k_mat = jnp.pad(k_mat, ((0, pad), (0, pad)))
+        y = jnp.pad(y, ((0, pad), (0, 0)))
+        lo = jnp.pad(lo, ((0, pad), (0, 0)))
+        hi = jnp.pad(hi, ((0, pad), (0, 0)))
+        c0 = jnp.pad(c0, ((0, pad), (0, 0)))
+    g0 = k_mat @ c0 - y
+
+    def body(_, state):
+        return ref.cd_epoch_blocked_ref(k_mat, state[0], state[1], lo, hi)
 
     c, _ = jax.lax.fori_loop(0, epochs, body, (c0, g0))
     return c[:n]

@@ -42,3 +42,84 @@ def solve_cd_ref(k_mat: Array, y: Array, lo: Array, hi: Array, c0: Array,
     def body(_, state):
         return cd_epoch_ref(k_mat, state[0], state[1], lo, hi)
     return jax.lax.fori_loop(0, epochs, body, (c0, g0))
+
+
+def solve_cd_wave_ref(k_mats: Array, y: Array, lo: Array, hi: Array,
+                      c0: Array, epochs: int) -> tuple[Array, Array]:
+    """Wave oracle: per-slot :func:`solve_cd_ref`, batched over the leading
+    slot axis.  k_mats (S, n, n); y/lo/hi/c0 (S, n, P).  The fused Pallas
+    wave kernel must reproduce each slot's sequence bit-for-bit."""
+    return jax.vmap(solve_cd_ref, in_axes=(0, 0, 0, 0, 0, None))(
+        k_mats, y, lo, hi, c0, epochs)
+
+
+WAVE_BLOCK = 32  # delayed-update block width of the fused execution path
+
+
+def cd_epoch_blocked_ref(k_mat: Array, c: Array, g: Array, lo: Array,
+                         hi: Array, block: int = WAVE_BLOCK
+                         ) -> tuple[Array, Array]:
+    """One epoch with LAPACK-style delayed trailing updates.
+
+    Identical coordinate order and fixed point as :func:`cd_epoch_ref`, but
+    the rank-1 gradient maintenance is deferred: within a block of
+    ``block`` coordinates only the BLOCK-LOCAL gradient is kept consistent
+    (a (1, B) x (B, P) correction per step), and the trailing update for
+    all n rows lands afterwards as ONE (n, B) x (B, P) GEMM.  The
+    sequential part of the sweep shrinks from n.P to B.P elements per
+    step and the bulk 2 n^2 P flops become matmul-shaped — this is the
+    wave path's production execution strategy (MXU/BLAS work instead of n
+    rank-1 passes).  Summation order differs from the exact sweep, so
+    results match :func:`cd_epoch_ref` to f32 rounding, not bitwise.
+
+    Requires ``n % block == 0`` (callers pad with lo == hi == 0, which
+    keeps padded coordinates inert).
+    """
+    n, p = c.shape
+    diag = jnp.diag(k_mat)
+
+    def per_block(j, state):
+        c, g = state
+        base = j * block
+        kb = jax.lax.dynamic_slice(k_mat, (0, base), (n, block))    # (n, B)
+        kbb = jax.lax.dynamic_slice(kb, (base, 0), (block, block))  # (B, B)
+        db = jax.lax.dynamic_slice(diag, (base,), (block,))
+        g0 = jax.lax.dynamic_slice(g, (base, 0), (block, p))
+        cb = jax.lax.dynamic_slice(c, (base, 0), (block, p))
+        lob = jax.lax.dynamic_slice(lo, (base, 0), (block, p))
+        hib = jax.lax.dynamic_slice(hi, (base, 0), (block, p))
+
+        def inner(t, st):
+            cb, delta = st
+            # coord t's gradient = pre-block g + this block's earlier
+            # deltas (rows >= t of delta are still zero)
+            krow = jax.lax.dynamic_slice(kbb, (t, 0), (1, block))
+            corr = (krow @ delta)[0]                                 # (P,)
+            gt = jax.lax.dynamic_slice(g0, (t, 0), (1, p))[0] + corr
+            d = jnp.maximum(jax.lax.dynamic_slice(db, (t,), (1,))[0], 1e-12)
+            ct = jax.lax.dynamic_slice(cb, (t, 0), (1, p))[0]
+            lot = jax.lax.dynamic_slice(lob, (t, 0), (1, p))[0]
+            hit = jax.lax.dynamic_slice(hib, (t, 0), (1, p))[0]
+            target = jnp.clip(ct - gt / d, lot, hit)
+            dt = target - ct
+            cb = jax.lax.dynamic_update_slice(cb, target[None], (t, 0))
+            delta = jax.lax.dynamic_update_slice(delta, dt[None], (t, 0))
+            return cb, delta
+
+        cb, delta = jax.lax.fori_loop(
+            0, block, inner, (cb, jnp.zeros((block, p), c.dtype)))
+        c = jax.lax.dynamic_update_slice(c, cb, (base, 0))
+        g = g + kb @ delta        # trailing update: the GEMM-shaped bulk
+        return c, g
+
+    return jax.lax.fori_loop(0, n // block, per_block, (c, g))
+
+
+def cd_epoch_wave_blocked_ref(k_mats: Array, c: Array, g: Array, lo: Array,
+                              hi: Array, block: int = WAVE_BLOCK
+                              ) -> tuple[Array, Array]:
+    """Fused wave epoch: :func:`cd_epoch_blocked_ref` batched over the slot
+    axis — the trailing updates of all S slots execute as one batched
+    GEMM.  This is what ``ops.cd_epochs_wave`` runs off-TPU."""
+    return jax.vmap(cd_epoch_blocked_ref, in_axes=(0, 0, 0, 0, 0, None))(
+        k_mats, c, g, lo, hi, block)

@@ -134,12 +134,14 @@ def refresh_bank(
 
         # re-solve EVERY column of the drifted cell at its already-selected
         # (gamma, lambda) — grouped per selected gamma, padded to the same
-        # static (T*S) width select() compiles (shared program)
+        # static (T*S) width select() compiles (shared program); the
+        # serving model being replaced is the warm start (the drift moved
+        # some rows, not the whole solution)
         for gv in np.unique(sel.gamma[c]):
             ts = np.argwhere(sel.gamma[c] == gv)          # (m, 2)
             pad = np.concatenate(
                 [ts, np.repeat(ts[:1], n_cols - len(ts), axis=0)])
-            out = np.asarray(cv_mod.solve_columns_at(
+            out, _, _ = cv_mod.solve_columns_at(
                 jnp.asarray(x_cells[c]),
                 jnp.asarray(y_cells[c]),
                 jnp.asarray(tmask_cells[c]),
@@ -149,7 +151,10 @@ def refresh_bank(
                 jnp.asarray(sub_grid[pad[:, 1]], jnp.float32),
                 jnp.asarray(pad[:, 0], jnp.int32),
                 jnp.asarray(tr.fold_keys[c]),
-                tr.cv_cfg))                               # (k, T*S)
+                tr.cv_cfg,
+                c0=jnp.asarray(sel.coefs[c][:, pad[:, 0], pad[:, 1]],
+                               jnp.float32))              # (k, T*S)
+            out = np.asarray(out)
             for j, (t, s) in enumerate(ts):
                 coefs[c, :, t, s] = out[:, j]
             info["columns_resolved"] += len(ts)

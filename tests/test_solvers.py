@@ -78,6 +78,61 @@ class TestBoxQP:
         assert l_est >= 0.99 * l_true  # 1.05 safety factor in estimator
 
 
+# ------------------------------------------------------- warm-start property
+
+class TestWarmStartProperty:
+    """A warm start from far OUTSIDE the (lambda, weight) box must land on
+    the same optimum as the cold ``c0 = 0`` solve: ``clip_warm_start``
+    projects it into the feasible box and every solver's descent from a
+    feasible start is monotone.  Exercised through the full
+    ``solve_columns_at`` path so each solver's c0 threading is covered."""
+
+    @staticmethod
+    def _cell(seed, regression):
+        rng = np.random.default_rng(seed)
+        n, d = 48, 3
+        x = rng.normal(size=(n, d)).astype(np.float32)
+        if regression:
+            y = (np.sin(x[:, 0]) + 0.1 * rng.normal(size=n)).astype(np.float32)
+        else:
+            y = np.sign(rng.normal(size=n)).astype(np.float32)
+        return x, y
+
+    @pytest.mark.parametrize("solver", ["hinge", "quantile", "expectile", "ls"])
+    def test_outside_box_start_matches_cold(self, solver):
+        from repro.core import cv
+        x, y = self._cell(11, regression=solver != "hinge")
+        n = x.shape[0]
+        sub = (0.3, 0.7) if solver in ("quantile", "expectile") else (1.0, 2.0)
+        cfg = cv.CVConfig(
+            solver=solver, n_folds=2, tol=1e-5, max_iters=20000,
+            taus=sub if solver in ("quantile", "expectile") else (0.5,),
+            weights=sub if solver == "hinge" else (1.0,))
+        lams = (0.05, 0.5)
+        if solver == "ls":
+            sub = (1.0,)
+        lam_cols = jnp.asarray(np.repeat(lams, len(sub)), jnp.float32)
+        sub_cols = jnp.asarray(np.tile(sub, len(lams)), jnp.float32)
+        p = lam_cols.shape[0]
+        task_cols = jnp.zeros((p,), jnp.int32)
+        args = (jnp.asarray(x), jnp.asarray(y[None, :]),
+                jnp.ones((1, n), jnp.float32), jnp.ones((n,), jnp.float32),
+                jnp.float32(1.0), lam_cols, sub_cols, task_cols,
+                jax.random.PRNGKey(0))
+
+        cold_mean, _, cold_folds = cv.solve_columns_at(*args, cfg)
+        # a start orders of magnitude outside any feasible box
+        c0_wild = jnp.asarray(50.0 * np.random.default_rng(12).normal(
+            size=(n, p)), jnp.float32)
+        warm_mean, _, warm_folds = cv.solve_columns_at(*args, cfg, c0=c0_wild)
+
+        scale = max(float(jnp.max(jnp.abs(cold_folds))), 1e-6)
+        np.testing.assert_allclose(np.asarray(warm_folds) / scale,
+                                   np.asarray(cold_folds) / scale, atol=5e-3)
+        np.testing.assert_allclose(np.asarray(warm_mean) / scale,
+                                   np.asarray(cold_mean) / scale, atol=5e-3)
+
+
 # ------------------------------------------------------------------- hinge
 
 class TestHinge:

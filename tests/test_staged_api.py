@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import json
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -138,6 +139,62 @@ class TestReselection:
         # and the argmin val_loss is the surface at the argmin winners
         np.testing.assert_allclose(
             sel.val_loss, sess.train_result.val_loss, rtol=0, atol=0)
+
+    def test_batched_resolve_one_launch_per_gamma_group(self, weighted_session):
+        """Moved cells sharing a gamma-grid index re-solve in ONE vmapped
+        launch: resolve_calls equals the number of distinct winning
+        gamma indices, not the number of (cell, gamma) pairs."""
+        sess, _ = weighted_session
+        tr = sess.train_result
+        sel_arg = sess.select("argmin")
+        sel_npl = sess.select("npl", alpha=0.02)
+        st = sel_npl.stats
+        moved = (sel_npl.gamma != sel_arg.gamma) | (sel_npl.lam != sel_arg.lam)
+        assert moved.sum() > 0
+        groups = set()
+        for c, t, s in np.argwhere(moved):
+            g_idx = np.flatnonzero(
+                tr.gammas_cells[c] == sel_npl.gamma[c, t, s])
+            assert g_idx.size >= 1      # winner gamma comes from the grid
+            groups.add(int(g_idx[0]))
+        assert st["resolve_calls"] == len(groups)
+        assert st["solver_iters"] > 0   # the re-solve really ran the QP
+
+
+class TestWarmStartResolve:
+    """Per-fold warm starts collapse a re-materializing re-solve: starting
+    each fold from its own cached solution of the SAME columns, the box-QP
+    passes its first KKT check instead of re-running the solve."""
+
+    def test_iteration_counts_drop(self, weighted_session):
+        from repro.core import cv
+
+        sess, _ = weighted_session
+        tr = sess.train_result
+        c = int(np.flatnonzero(tr.mask_cells.sum(-1) > 0)[0])
+        gv = tr.gamma[c, 0, 0]
+        ts = np.argwhere(tr.gamma[c] == gv)            # (m, 2) same-gamma winners
+        sub_grid = np.asarray(tr.config.weights, np.float32)
+        args = (jnp.asarray(tr.x_cells[c]), jnp.asarray(tr.y_cells[c]),
+                jnp.asarray(tr.tmask_cells[c]), jnp.asarray(tr.mask_cells[c]),
+                jnp.asarray(np.float32(gv)),
+                jnp.asarray(tr.lam[c, ts[:, 0], ts[:, 1]], jnp.float32),
+                jnp.asarray(sub_grid[ts[:, 1]], jnp.float32),
+                jnp.asarray(ts[:, 0], jnp.int32),
+                jnp.asarray(tr.fold_keys[c]))
+
+        cold_mean, it_cold, fold_coefs = cv.solve_columns_at(*args, tr.cv_cfg)
+        warm_mean, it_warm, _ = cv.solve_columns_at(*args, tr.cv_cfg,
+                                                    c0=fold_coefs)
+        it_cold, it_warm = int(it_cold), int(it_warm)
+        assert it_cold > 0
+        assert it_warm < it_cold          # the satellite's headline claim
+        assert it_warm <= it_cold // 2    # and the drop is substantial
+        # the fixture caps max_iters, so the cold run may stop short of the
+        # KKT point and the warm run polishes past it — parity is at the
+        # decisions level (cfg.tol), not exact
+        np.testing.assert_allclose(np.asarray(warm_mean),
+                                   np.asarray(cold_mean), atol=1e-2)
 
 
 class TestSurface:
